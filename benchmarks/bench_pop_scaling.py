@@ -1,0 +1,75 @@
+"""Paper §2.4: runtime scaling in k.
+
+Measures POP map-step runtime vs k on a fixed cluster-scheduling instance
+and fits the empirical exponent: the paper predicts superlinear speedup
+(k^(2a-1) serial; sub-problems here solve as one vmap batch, so the
+observed exponent blends the k^2 variable reduction with PDHG's
+iteration-count advantage on smaller, better-conditioned problems).
+
+Also benchmarks the PDHG solver itself against scipy (HiGHS) on random
+dense LPs — the solver-substrate sanity check.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+from scipy.optimize import linprog
+
+from repro.core import LinearProgram, pdhg, pop
+from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
+from .common import Timer, emit, save_json
+
+
+def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0) -> dict:
+    wl = make_cluster_workload(n_jobs, num_workers=(128, 128, 128), seed=seed)
+    prob = GavelProblem(wl, space_sharing=True)
+    kw = dict(max_iters=12_000, tol_primal=1e-4, tol_gap=1e-4)
+    rows = []
+    t1 = None
+    for k in ks:
+        if k == 1:
+            _, _, t, _ = pop.solve_full(prob, solver_kw=kw)
+        else:
+            t = pop.pop_solve(prob, k, strategy="stratified",
+                              solver_kw=kw).solve_time_s
+        rows.append(dict(k=k, solve_s=t))
+        t1 = t1 or t
+        emit(f"pop_scaling_k{k}", t * 1e6, f"speedup={t1/t:.2f}x")
+    # empirical exponent from the k>=2 tail
+    kk = np.array([r["k"] for r in rows if r["k"] >= 2], float)
+    tt = np.array([r["solve_s"] for r in rows if r["k"] >= 2], float)
+    expo = float(np.polyfit(np.log(kk), np.log(t1 / tt), 1)[0])
+    emit("pop_scaling_exponent", 0.0, f"speedup~k^{expo:.2f}")
+
+    # solver substrate vs scipy
+    rng = np.random.default_rng(0)
+    n, mi = 300, 200
+    c = rng.normal(size=n)
+    G = rng.normal(size=(mi, n))
+    h = G @ rng.uniform(0.2, 0.8, n) + rng.uniform(0.1, 1.0, mi)
+    with Timer() as t_sp:
+        ref = linprog(c, A_ub=G, b_ub=h, bounds=(0, 1), method="highs")
+    lp = LinearProgram.build(c=c, G=G, h=h, l=np.zeros(n), u=np.ones(n))
+    pdhg.solve_dense(lp, max_iters=100)        # warm the jit cache
+    with Timer() as t_us:
+        res = pdhg.solve_dense(lp, max_iters=60_000, tol_primal=1e-6,
+                               tol_gap=1e-6)
+        res.x.block_until_ready()
+    gap = abs(float(res.primal_obj) - ref.fun) / (1 + abs(ref.fun))
+    emit("pdhg_vs_scipy", t_us.seconds * 1e6,
+         f"scipy_us={t_sp.seconds*1e6:.0f};rel_obj_gap={gap:.2e};"
+         f"iters={int(res.iterations)}")
+
+    out = {"rows": rows, "exponent": expo}
+    save_json("pop_scaling", out)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing, CSV emission, result persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "bench")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """Scaffold contract: ``name,us_per_call,derived`` CSV on stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def save_json(name: str, payload: dict):
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    with open(os.path.join(RESULT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

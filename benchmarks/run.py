@@ -1,0 +1,70 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the repo contract and persists
+JSON artifacts to experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from . import (bench_cluster_scheduling, bench_load_balancing,
+                   bench_pop_scaling, bench_replication, bench_skewed_splits,
+                   bench_traffic_engineering)
+
+    suite = {
+        # paper Fig. 3
+        "cluster_scheduling": lambda: bench_cluster_scheduling.run(
+            n_jobs=128 if args.fast else 448),
+        # paper Fig. 4
+        "traffic_engineering": lambda: bench_traffic_engineering.run(
+            n_demands=3_000 if args.fast else 20_000),
+        # paper Fig. 5
+        "load_balancing": lambda: bench_load_balancing.run(
+            n_shards=256 if args.fast else 1024,
+            n_servers=16 if args.fast else 64),
+        # paper Fig. 6
+        "skewed_splits": lambda: bench_skewed_splits.run(
+            n_demands=2_000 if args.fast else 10_000),
+        # paper §4.3
+        "replication": lambda: bench_replication.run(),
+        # paper §2.4 + solver substrate
+        "pop_scaling": lambda: bench_pop_scaling.run(
+            n_jobs=128 if args.fast else 512),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suite = {k: v for k, v in suite.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suite.items():
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"# {name}: done in {time.perf_counter()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:                                   # noqa: BLE001
+            failures += 1
+            print(f"# {name}: FAILED\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end serving driver: batched decode of a small LM across several
+replica groups, with POP (the paper's load-balancing MILP) placing request
+shards onto replicas — the paper's technique running in the serving path.
+
+    PYTHONPATH=src python examples/serve_balanced.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import init_cache, init_params
+from repro.problems.load_balancing import LoadBalanceProblem, ShardWorkload
+from repro.serve.engine import ServeConfig, make_serve_step
+
+
+def main():
+    print("== POP-balanced batched serving ==")
+    cfg = get_reduced("xlstm_350m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_replicas = 4
+    rng = np.random.default_rng(0)
+
+    # 64 request groups with heavy-tailed load (tokens to generate)
+    n_groups = 64
+    load = np.minimum(rng.zipf(1.9, n_groups), 60).astype(np.float64)
+    current = rng.integers(0, n_replicas, n_groups)   # sticky sessions
+
+    # POP load balancer: request groups = shards, replicas = servers
+    wl = ShardWorkload(load=load, mem=np.ones(n_groups), placement=current,
+                       cap=np.full(n_replicas, n_groups), eps_frac=0.25)
+    prob = LoadBalanceProblem(wl)
+    t0 = time.perf_counter()
+    res = prob.pop_solve(2, solver_kw=dict(max_iters=6_000))
+    t_balance = time.perf_counter() - t0
+    moved = int((res.placement != current).sum())
+    print(f"balancer: {n_groups} request groups -> {n_replicas} replicas "
+          f"in {t_balance:.2f}s; moved {moved} sticky groups; "
+          f"max load dev {res.max_load_dev:.2f}")
+
+    # serve: each replica decodes its assigned groups as one batch
+    scfg = ServeConfig(batch=1, max_seq=128)
+    step = jax.jit(make_serve_step(cfg, scfg))
+    total_tokens = 0
+    t0 = time.perf_counter()
+    for r in range(n_replicas):
+        groups = np.flatnonzero(res.placement == r)
+        if groups.size == 0:
+            continue
+        B = int(groups.size)
+        cache = init_cache(cfg, B, 128)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        steps = int(load[groups].max())
+        for _ in range(min(steps, 16)):           # cap demo length
+            tok, cache = step(params, cache, tok)
+            total_tokens += B
+        print(f"  replica {r}: batch={B:3d} groups, "
+              f"load={load[groups].sum():6.0f}")
+    dt = time.perf_counter() - t0
+    print(f"decoded {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/dt:.0f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

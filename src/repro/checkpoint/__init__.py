@@ -1,0 +1,2 @@
+"""Sharded, atomic, async checkpointing."""
+from .checkpointer import Checkpointer

@@ -1,0 +1,29 @@
+"""POP core: the paper's contribution as a composable JAX module."""
+
+from .problem import LinearProgram, MixedIntegerProgram, stack_lps, BIG
+from .pdhg import (
+    OperatorLP, SolveResult, solve, solve_dense, solve_batched,
+    dense_ops, dense_K_mv, dense_KT_mv, ruiz_equilibrate,
+)
+from .partition import (
+    random_partition, stratified_partition, stratified_partition_multidim,
+    clustered_partition, skewed_partition, similarity_report,
+)
+from .replicate import ReplicationPlan, plan_replication, replicated_partition
+from .reduce import coalesce_concat, coalesce_replicated
+from .pop import POPProblem, POPResult, pop_solve, solve_full
+from .maxmin import epigraph_rows, maxmin_objective
+from .rounding import round_relaxation
+
+__all__ = [
+    "LinearProgram", "MixedIntegerProgram", "stack_lps", "BIG",
+    "OperatorLP", "SolveResult", "solve", "solve_dense", "solve_batched",
+    "dense_ops", "dense_K_mv", "dense_KT_mv", "ruiz_equilibrate",
+    "random_partition", "stratified_partition", "stratified_partition_multidim",
+    "clustered_partition", "skewed_partition", "similarity_report",
+    "ReplicationPlan", "plan_replication", "replicated_partition",
+    "coalesce_concat", "coalesce_replicated",
+    "POPProblem", "POPResult", "pop_solve", "solve_full",
+    "epigraph_rows", "maxmin_objective",
+    "round_relaxation",
+]

@@ -1,0 +1,357 @@
+"""Restarted PDHG (PDLP-family) linear-programming solver in pure JAX.
+
+Why PDHG and not simplex/barrier (what the paper's solvers use): every PDHG
+iteration is two matrix–vector products plus element-wise projections —
+MXU/VPU work with no data-dependent control flow.  That makes the solver
+
+  * ``jax.lax``-expressible (while_loop/fori_loop),
+  * **vmap-able over the POP sub-problem axis** — POP's map step becomes a
+    single batched solve, and
+  * ``shard_map``-able — sub-problems spread across mesh devices with zero
+    collectives inside the map step (they are independent by construction).
+
+The solver is generic over an *operator form* of the constraint matrix
+
+    K = [G; A]   (first ``n_ineq`` rows are inequalities)
+
+supplied as a pair of callables ``K_mv(data, x)`` / ``KT_mv(data, y)`` plus a
+data pytree.  Dense problems use plain matmuls (and, on TPU, the Pallas
+kernels in ``repro.kernels``); the big domain problems (traffic engineering
+with >10^6 variables) supply structured matvecs so the full unpartitioned
+baseline never materialises a dense K.
+
+Algorithm: Chambolle–Pock primal–dual with
+  * power-iteration estimate of ||K||,
+  * step sizes tau = eta/(omega*||K||), sigma = eta*omega/||K||,
+  * iterate averaging + adaptive restart to the better of {current, average}
+    by KKT score (simplified PDLP restart rule),
+  * primal-weight (omega) rebalancing at restarts,
+  * termination on relative primal residual + relative duality gap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .problem import BIG, LinearProgram
+
+
+class OperatorLP(NamedTuple):
+    """LP in operator form.  ``data`` is whatever the K_mv/KT_mv callables
+    need (dense K, index arrays, ...).  All leaves are batchable."""
+
+    c: jnp.ndarray          # [N]
+    q: jnp.ndarray          # [M]    rhs for K rows
+    l: jnp.ndarray          # [N]
+    u: jnp.ndarray          # [N]
+    ineq_mask: jnp.ndarray  # [M] bool: True → dual projected >= 0
+    data: Any               # operator payload pytree
+
+
+def dense_ops(lp: LinearProgram) -> OperatorLP:
+    K, q, ineq = lp.stacked()
+    return OperatorLP(c=lp.c, q=q, l=lp.l, u=lp.u, ineq_mask=ineq, data=(K,))
+
+
+def dense_K_mv(data, x):
+    (K,) = data
+    return K @ x
+
+
+def dense_KT_mv(data, y):
+    (K,) = data
+    return K.T @ y
+
+
+class SolveResult(NamedTuple):
+    x: jnp.ndarray
+    y: jnp.ndarray
+    primal_obj: jnp.ndarray
+    dual_obj: jnp.ndarray
+    primal_res: jnp.ndarray   # relative primal infeasibility
+    gap: jnp.ndarray          # relative duality gap
+    iterations: jnp.ndarray
+    converged: jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# internals
+# --------------------------------------------------------------------------
+
+def _power_iteration(K_mv, KT_mv, data, n_var, iters: int = 30):
+    """||K||_2 via power iteration on K^T K (deterministic start)."""
+    v0 = jnp.full((n_var,), 1.0 / jnp.sqrt(n_var), jnp.float32)
+
+    def body(_, v):
+        w = KT_mv(data, K_mv(data, v))
+        return w / (jnp.linalg.norm(w) + 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return jnp.sqrt(jnp.linalg.norm(KT_mv(data, K_mv(data, v)))) + 1e-12
+
+
+def _kkt(op: OperatorLP, K_mv, KT_mv, x, y):
+    """(primal_res_rel, gap_rel, primal_obj, dual_obj)."""
+    Kx = K_mv(op.data, x)
+    resid = Kx - op.q
+    prim_viol = jnp.where(op.ineq_mask, jnp.maximum(resid, 0.0), resid)
+    # padded rows carry q = BIG — exclude them from the relative denominator
+    q_eff = jnp.where(jnp.abs(op.q) >= 0.5 * BIG, 0.0, op.q)
+    prim_res = jnp.linalg.norm(prim_viol) / (1.0 + jnp.linalg.norm(q_eff))
+
+    r = op.c + KT_mv(op.data, y)                       # reduced costs
+    p_obj = jnp.dot(op.c, x)
+    # g(y) = -q.y + sum_i min(l_i r_i, u_i r_i); BIG bounds act as -inf penalty
+    d_obj = -jnp.dot(op.q, y) + jnp.sum(jnp.minimum(op.l * r, op.u * r))
+    gap = jnp.abs(p_obj - d_obj) / (1.0 + jnp.abs(p_obj) + jnp.abs(d_obj))
+    return prim_res, gap, p_obj, d_obj
+
+
+class _State(NamedTuple):
+    x: jnp.ndarray
+    y: jnp.ndarray
+    x_sum: jnp.ndarray
+    y_sum: jnp.ndarray
+    avg_n: jnp.ndarray        # iterations accumulated since restart
+    x_anchor: jnp.ndarray     # iterate at last restart (for omega update)
+    y_anchor: jnp.ndarray
+    omega: jnp.ndarray        # primal weight
+    last_score: jnp.ndarray   # KKT score at last restart (decay test)
+    it: jnp.ndarray
+    done: jnp.ndarray
+    prim_res: jnp.ndarray
+    gap: jnp.ndarray
+
+
+def _probe_norms(K_mv, KT_mv, data, n_var, n_con, d_r, d_c, key, n_probes=4):
+    """Hutchinson-style row/col 2-norm estimates of the SCALED operator
+    D_r K D_c without materialising K:  with Rademacher v (E[vv^T]=I),
+    E[(Kv)_i^2] = sum_j K_ij^2 — i.e. squared row norms; columns dual."""
+    kr, kc = jax.random.split(key)
+    vs = jax.random.rademacher(kr, (n_probes, n_var), jnp.float32)
+    rows = jnp.mean(jax.vmap(
+        lambda v: jnp.square(d_r * K_mv(data, d_c * v)))(vs), axis=0)
+    us = jax.random.rademacher(kc, (n_probes, n_con), jnp.float32)
+    cols = jnp.mean(jax.vmap(
+        lambda u: jnp.square(d_c * KT_mv(data, d_r * u)))(us), axis=0)
+    return jnp.sqrt(rows), jnp.sqrt(cols)
+
+
+def _equilibrate(op: OperatorLP, K_mv, KT_mv, iters: int = 2, n_probes: int = 4):
+    """Operator-form Ruiz equilibration (EXPERIMENTS.md §Perf hillclimb 3):
+    returns (d_r, d_c) diagonal scalings estimated purely through matvec
+    probes — works for ANY structured operator, not just dense K."""
+    n_var = op.c.shape[0]
+    n_con = op.q.shape[0]
+    d_r = jnp.ones(n_con)
+    d_c = jnp.ones(n_var)
+    key = jax.random.PRNGKey(7)
+    for i in range(iters):
+        rn, cn = _probe_norms(K_mv, KT_mv, op.data, n_var, n_con,
+                              d_r, d_c, jax.random.fold_in(key, i), n_probes)
+        d_r = d_r / jnp.sqrt(jnp.where(rn > 1e-8, rn, 1.0))
+        d_c = d_c / jnp.sqrt(jnp.where(cn > 1e-8, cn, 1.0))
+    return d_r, d_c
+
+
+def solve(
+    op: OperatorLP,
+    K_mv: Callable = dense_K_mv,
+    KT_mv: Callable = dense_KT_mv,
+    *,
+    max_iters: int = 20_000,
+    check_every: int = 40,
+    tol_primal: float = 1e-4,
+    tol_gap: float = 1e-4,
+    eta: float = 0.9,
+    omega0: float = 1.0,
+    equilibrate: bool = False,
+    warm_x: jnp.ndarray | None = None,
+    warm_y: jnp.ndarray | None = None,
+) -> SolveResult:
+    """Solve one LP.  Fully traceable; vmap over a batched ``op`` for POP."""
+    n_var = op.c.shape[0]
+    n_con = op.q.shape[0]
+
+    if equilibrate:
+        d_r, d_c = _equilibrate(op, K_mv, KT_mv)
+        op_orig, K_mv_orig, KT_mv_orig = op, K_mv, KT_mv
+        K_mv = lambda data, x: d_r * K_mv_orig(data, d_c * x)   # noqa: E731
+        KT_mv = lambda data, y: d_c * KT_mv_orig(data, d_r * y)  # noqa: E731
+        keep_l = jnp.abs(op.l) >= 0.5 * BIG
+        keep_u = jnp.abs(op.u) >= 0.5 * BIG
+        op = OperatorLP(
+            c=op.c * d_c, q=op.q * d_r,
+            l=jnp.where(keep_l, op_orig.l, op_orig.l / d_c),
+            u=jnp.where(keep_u, op_orig.u, op_orig.u / d_c),
+            ineq_mask=op.ineq_mask, data=op.data)
+
+    knorm = _power_iteration(K_mv, KT_mv, op.data, n_var)
+
+    x0 = jnp.clip(jnp.zeros(n_var), op.l, op.u) if warm_x is None else warm_x
+    y0 = jnp.zeros(n_con) if warm_y is None else warm_y
+
+    def chunk(state: _State) -> _State:
+        tau = eta / (state.omega * knorm)
+        sigma = eta * state.omega / knorm
+
+        def one_iter(_, carry):
+            x, y, xs, ys = carry
+            x_new = jnp.clip(x - tau * (op.c + KT_mv(op.data, y)), op.l, op.u)
+            x_bar = 2.0 * x_new - x
+            y_new = y + sigma * (K_mv(op.data, x_bar) - op.q)
+            y_new = jnp.where(op.ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+            return x_new, y_new, xs + x_new, ys + y_new
+
+        x, y, xs, ys = jax.lax.fori_loop(
+            0, check_every, one_iter,
+            (state.x, state.y, state.x_sum, state.y_sum),
+        )
+        avg_n = state.avg_n + check_every
+
+        # ---- candidate = better of {current, running average} ------------
+        x_avg = xs / avg_n
+        y_avg = ys / avg_n
+        pr_c, gap_c, _, _ = _kkt(op, K_mv, KT_mv, x, y)
+        pr_a, gap_a, _, _ = _kkt(op, K_mv, KT_mv, x_avg, y_avg)
+        score_c = pr_c + gap_c
+        score_a = pr_a + gap_a
+        use_avg = score_a < score_c
+        x_r = jnp.where(use_avg, x_avg, x)
+        y_r = jnp.where(use_avg, y_avg, y)
+        pr = jnp.where(use_avg, pr_a, pr_c)
+        gap = jnp.where(use_avg, gap_a, gap_c)
+        score = jnp.minimum(score_a, score_c)
+
+        # ---- adaptive restart: only on sufficient KKT decay ---------------
+        # (restarting every chunk kills PDHG momentum; PDLP-style decay test)
+        restart = (score < 0.4 * state.last_score) | (avg_n >= 16 * check_every)
+
+        # ---- primal weight update at restarts (PDLP eq. 10, smoothed) -----
+        dx = jnp.linalg.norm(x_r - state.x_anchor)
+        dy = jnp.linalg.norm(y_r - state.y_anchor)
+        safe = (dx > 1e-12) & (dy > 1e-12)
+        ratio = jnp.where(safe, dy / jnp.maximum(dx, 1e-12), 1.0)
+        omega_new = jnp.exp(
+            0.5 * jnp.log(jnp.clip(ratio, 1e-4, 1e4)) + 0.5 * jnp.log(state.omega)
+        )
+
+        conv = (pr < tol_primal) & (gap < tol_gap)
+        done = state.done | conv
+
+        def pick(on_restart, no_restart):
+            return jnp.where(restart, on_restart, no_restart)
+
+        # freeze finished lanes (matters under vmap: batch peers keep going)
+        keep = lambda new, old: jnp.where(state.done, old, new)
+        return _State(
+            x=keep(pick(x_r, x), state.x),
+            y=keep(pick(y_r, y), state.y),
+            x_sum=keep(pick(jnp.zeros_like(xs), xs), state.x_sum),
+            y_sum=keep(pick(jnp.zeros_like(ys), ys), state.y_sum),
+            avg_n=keep(pick(jnp.zeros_like(avg_n), avg_n), state.avg_n),
+            x_anchor=keep(pick(x_r, state.x_anchor), state.x_anchor),
+            y_anchor=keep(pick(y_r, state.y_anchor), state.y_anchor),
+            omega=keep(pick(omega_new, state.omega), state.omega),
+            last_score=keep(pick(score, state.last_score), state.last_score),
+            it=state.it + jnp.where(state.done, 0, check_every),
+            done=done,
+            prim_res=keep(pr, state.prim_res), gap=keep(gap, state.gap),
+        )
+
+    init = _State(
+        x=x0, y=y0,
+        x_sum=jnp.zeros_like(x0), y_sum=jnp.zeros_like(y0),
+        avg_n=jnp.zeros((), jnp.float32),
+        x_anchor=x0, y_anchor=y0,
+        omega=jnp.asarray(omega0, jnp.float32),
+        last_score=jnp.asarray(jnp.inf),
+        it=jnp.zeros((), jnp.int32),
+        done=jnp.zeros((), bool),
+        prim_res=jnp.asarray(jnp.inf), gap=jnp.asarray(jnp.inf),
+    )
+
+    state = jax.lax.while_loop(
+        lambda s: (~s.done) & (s.it < max_iters), chunk, init
+    )
+
+    x_fin, y_fin = state.x, state.y
+    if equilibrate:
+        # report in ORIGINAL space
+        x_fin = d_c * x_fin
+        y_fin = d_r * y_fin
+        op, K_mv, KT_mv = op_orig, K_mv_orig, KT_mv_orig
+    pr, gap, p_obj, d_obj = _kkt(op, K_mv, KT_mv, x_fin, y_fin)
+    return SolveResult(
+        x=x_fin, y=y_fin, primal_obj=p_obj, dual_obj=d_obj,
+        primal_res=pr, gap=gap, iterations=state.it, converged=state.done,
+    )
+
+
+# --------------------------------------------------------------------------
+# Ruiz equilibration (dense path) — first-order methods live or die by
+# conditioning; diagonal rescaling cuts PDHG iteration counts by 10-100x.
+# --------------------------------------------------------------------------
+
+def ruiz_equilibrate(op: OperatorLP, iters: int = 8):
+    """Return (scaled_op, d_row, d_col) with K~ = D_r K D_c equilibrated.
+
+    Recover original-space solutions as  x = d_col * x~,  y = d_row * y~.
+    Dense-data only (needs explicit row/col norms).
+    """
+    (K,) = op.data
+    d_r = jnp.ones(K.shape[0])
+    d_c = jnp.ones(K.shape[1])
+
+    def body(_, carry):
+        d_r, d_c = carry
+        Ks = K * d_r[:, None] * d_c[None, :]
+        rn = jnp.sqrt(jnp.max(jnp.abs(Ks), axis=1))
+        cn = jnp.sqrt(jnp.max(jnp.abs(Ks), axis=0))
+        d_r = d_r / jnp.where(rn > 1e-12, rn, 1.0)
+        d_c = d_c / jnp.where(cn > 1e-12, cn, 1.0)
+        return d_r, d_c
+
+    d_r, d_c = jax.lax.fori_loop(0, iters, body, (d_r, d_c))
+    Ks = K * d_r[:, None] * d_c[None, :]
+    scaled = OperatorLP(
+        c=op.c * d_c,
+        q=op.q * d_r,
+        l=jnp.where(jnp.abs(op.l) >= 0.5 * BIG, op.l, op.l / d_c),
+        u=jnp.where(jnp.abs(op.u) >= 0.5 * BIG, op.u, op.u / d_c),
+        ineq_mask=op.ineq_mask,
+        data=(Ks,),
+    )
+    return scaled, d_r, d_c
+
+
+# --------------------------------------------------------------------------
+# convenience wrappers
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "tol_primal", "tol_gap"))
+def solve_dense(lp: LinearProgram, max_iters: int = 20_000,
+                tol_primal: float = 1e-4, tol_gap: float = 1e-4) -> SolveResult:
+    op = dense_ops(lp)
+    sop, d_r, d_c = ruiz_equilibrate(op)
+    res = solve(sop, dense_K_mv, dense_KT_mv,
+                max_iters=max_iters, tol_primal=tol_primal, tol_gap=tol_gap)
+    # report objective/residuals in ORIGINAL space
+    x = res.x * d_c
+    y = res.y * d_r
+    pr, gap, p_obj, d_obj = _kkt(op, dense_K_mv, dense_KT_mv, x, y)
+    return SolveResult(x=x, y=y, primal_obj=p_obj, dual_obj=d_obj,
+                       primal_res=pr, gap=gap,
+                       iterations=res.iterations, converged=res.converged)
+
+
+def solve_batched(op_batched: OperatorLP, K_mv=dense_K_mv, KT_mv=dense_KT_mv,
+                  **kw) -> SolveResult:
+    """vmap over the leading (sub-problem) axis — POP's map step on one
+    device.  ``core/pop.py`` wraps this in shard_map for the mesh path."""
+    return jax.vmap(lambda o: solve(o, K_mv, KT_mv, **kw))(op_batched)

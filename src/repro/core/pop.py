@@ -1,0 +1,246 @@
+"""POP orchestrator: split -> map (batched solve) -> reduce.
+
+This is the paper's technique as a composable module.  A domain problem
+(cluster scheduling, traffic engineering, load balancing, MoE expert
+placement, ...) subclasses :class:`POPProblem`; ``pop_solve`` then
+
+  1. partitions entities into k self-similar subsets (``core/partition.py``),
+     optionally replicating hot entities (``core/replicate.py``),
+  2. builds k identically-shaped sub-LPs and STACKS them on a leading axis,
+  3. solves them as ONE batched PDHG solve — ``vmap`` on a single device, or
+     ``shard_map`` over a mesh axis (sub-problems are independent, so the
+     map step needs ZERO collectives; this is the whole point of POP), and
+  4. coalesces sub-allocations (``core/reduce.py``).
+
+``solve_full`` runs the unpartitioned baseline (k=1 path) for quality
+comparison — the paper's "original problem formulation".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import partition as part_mod
+from . import pdhg
+from .pdhg import OperatorLP, SolveResult
+from .replicate import ReplicationPlan, plan_replication, replicated_partition
+from .reduce import coalesce_concat, coalesce_replicated
+
+
+class POPProblem:
+    """Interface a domain problem implements to be POP-able.
+
+    Subclasses define how to build the full LP and any entity-subset sub-LP
+    (in operator form), how to pull the per-entity allocation out of the LP
+    solution vector, and how to score an allocation.
+    """
+
+    n_entities: int
+
+    # --- partitioning inputs -------------------------------------------------
+    def entity_attrs(self) -> np.ndarray:
+        """[n, d] attribute vectors (for similarity + stratification)."""
+        raise NotImplementedError
+
+    def entity_scores(self) -> np.ndarray:
+        """[n] scalar load/demand (stratification + replication)."""
+        attrs = self.entity_attrs()
+        return attrs[:, 0] if attrs.ndim == 2 else attrs
+
+    # --- LP construction ------------------------------------------------------
+    def build_sub(self, idx_row: np.ndarray, frac: float,
+                  scale: Optional[np.ndarray] = None) -> OperatorLP:
+        """Sub-LP over entities ``idx_row`` (-1 = padded slot) with ``frac``
+        of every resource.  ``scale`` (replication) multiplies per-entity
+        demand.  MUST return identical array shapes for identical row
+        lengths, so sub-problems stack."""
+        raise NotImplementedError
+
+    def build_full(self) -> OperatorLP:
+        return self.build_sub(np.arange(self.n_entities), 1.0)
+
+    # operator matvecs — override for structured (non-dense) constraints
+    K_mv = staticmethod(pdhg.dense_K_mv)
+    KT_mv = staticmethod(pdhg.dense_KT_mv)
+
+    # --- solution handling -----------------------------------------------------
+    def extract(self, op: OperatorLP, x: np.ndarray,
+                idx_row: np.ndarray) -> np.ndarray:
+        """Per-slot allocation rows [n_per, ...] from an LP solution."""
+        raise NotImplementedError
+
+    def evaluate(self, alloc: np.ndarray) -> dict:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class POPResult:
+    alloc: np.ndarray
+    idx: np.ndarray
+    solve_time_s: float
+    build_time_s: float
+    iterations: np.ndarray
+    converged: np.ndarray
+    similarity: dict
+    sub_objectives: np.ndarray
+    replication: Optional[ReplicationPlan] = None
+
+
+# --------------------------------------------------------------------------
+# map-step backends
+# --------------------------------------------------------------------------
+
+def _solve_vmap(ops: OperatorLP, K_mv, KT_mv, solver_kw) -> SolveResult:
+    fn = jax.jit(jax.vmap(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw)))
+    return fn(ops)
+
+
+def _solve_shard_map(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+                     mesh: Optional[Mesh] = None,
+                     axis: str = "pop") -> SolveResult:
+    """Shard the k sub-problems over a mesh axis.  Inside each shard we vmap
+    over the local sub-problems; there are NO collectives in the mapped
+    body — POP sub-problems are independent by construction."""
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, (axis,))
+    k = ops.c.shape[0]
+    n_dev = mesh.shape[axis]
+    if k % n_dev:
+        # shrink the mesh to the largest device count dividing k (the map
+        # step is embarrassingly parallel — leftover devices just idle)
+        n_dev = max(d for d in range(1, min(k, n_dev) + 1)
+                    if k % d == 0 and n_dev % d == 0)
+        mesh = Mesh(np.array(mesh.devices).reshape(-1)[:n_dev], (axis,))
+
+    def local_solve(local_ops):
+        return jax.vmap(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw))(local_ops)
+
+    spec = jax.tree.map(lambda _: P(axis), ops)
+    fn = shard_map(local_solve, mesh=mesh,
+                   in_specs=(spec,),
+                   out_specs=jax.tree.map(lambda _: P(axis),
+                                          jax.eval_shape(local_solve, ops)),
+                   # solver constants (power-iteration seed vectors) are
+                   # unvarying while problem data varies over the POP axis;
+                   # that is exactly the intent — disable the vma check
+                   check_vma=False)
+    return jax.jit(fn)(ops)
+
+
+MAP_BACKENDS = {"vmap": _solve_vmap, "shard_map": _solve_shard_map}
+
+
+# --------------------------------------------------------------------------
+# the POP pipeline
+# --------------------------------------------------------------------------
+
+def pop_solve(
+    problem: POPProblem,
+    k: int,
+    *,
+    strategy: str = "random",
+    backend: str = "vmap",
+    seed: int = 0,
+    replicate_threshold: Optional[float] = None,
+    partition_idx: Optional[np.ndarray] = None,
+    solver_kw: Optional[dict] = None,
+) -> POPResult:
+    """Run POP-k on ``problem``.  ``strategy`` ∈ {random, stratified, skewed-*}
+    (domain problems may pass an explicit ``partition_idx`` for custom or
+    adversarial splits).  ``replicate_threshold`` enables §4.3 hot-entity
+    replication."""
+    solver_kw = dict(solver_kw or {})
+    n = problem.n_entities
+    scores = np.asarray(problem.entity_scores(), np.float64)
+    attrs = np.asarray(problem.entity_attrs(), np.float64)
+    if attrs.ndim == 1:
+        attrs = attrs[:, None]
+
+    t0 = time.perf_counter()
+    plan = None
+    rep_scale = None
+    if partition_idx is not None:
+        idx = partition_idx
+    elif replicate_threshold is not None:
+        plan = plan_replication(scores, k, replicate_threshold)
+        idx = replicated_partition(plan, scores, k, seed)
+        rep_scale = plan.replica_scale
+    elif strategy == "random":
+        idx = part_mod.random_partition(n, k, seed)
+    elif strategy == "stratified":
+        idx = part_mod.stratified_partition(scores, k)
+    elif strategy == "stratified_multidim":
+        idx = part_mod.stratified_partition_multidim(attrs, k, seed)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    # similarity diagnostics run on ORIGINAL entity ids
+    if plan is None:
+        sim = part_mod.similarity_report(attrs, idx)
+    else:
+        orig_idx = np.where(idx >= 0, plan.replica_entity[np.maximum(idx, 0)], -1)
+        sim = part_mod.similarity_report(attrs, orig_idx)
+
+    # build k identically-shaped sub-LPs and stack them
+    subs = []
+    for i in range(k):
+        row = idx[i]
+        row_scale = None
+        if rep_scale is not None:
+            row_scale = np.where(row >= 0, rep_scale[np.maximum(row, 0)], 0.0)
+        if plan is not None:
+            row = np.where(row >= 0, plan.replica_entity[np.maximum(row, 0)], -1)
+        subs.append(problem.build_sub(row, 1.0 / k, scale=row_scale))
+    ops = jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+    build_time = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    res = MAP_BACKENDS[backend](ops, problem.K_mv, problem.KT_mv, solver_kw)
+    jax.block_until_ready(res.x)
+    solve_time = time.perf_counter() - t1
+
+    # reduce
+    allocs = np.stack([
+        np.asarray(problem.extract(jax.tree.map(lambda a: a[i], ops),
+                                   np.asarray(res.x[i]), idx[i]))
+        for i in range(k)
+    ])
+    if plan is None:
+        alloc = coalesce_concat(allocs, idx, n)
+    else:
+        alloc = coalesce_replicated(allocs, idx, plan)
+
+    return POPResult(
+        alloc=alloc, idx=idx,
+        solve_time_s=solve_time, build_time_s=build_time,
+        iterations=np.asarray(res.iterations),
+        converged=np.asarray(res.converged),
+        similarity=sim,
+        sub_objectives=np.asarray(res.primal_obj),
+        replication=plan,
+    )
+
+
+def solve_full(problem: POPProblem, solver_kw: Optional[dict] = None):
+    """Unpartitioned baseline (the paper's 'original problem')."""
+    solver_kw = dict(solver_kw or {})
+    t0 = time.perf_counter()
+    op = problem.build_full()
+    build_time = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    fn = jax.jit(lambda o: pdhg.solve(o, problem.K_mv, problem.KT_mv, **solver_kw))
+    res = fn(op)
+    jax.block_until_ready(res.x)
+    solve_time = time.perf_counter() - t1
+    idx = np.arange(problem.n_entities)
+    alloc = np.asarray(problem.extract(op, np.asarray(res.x), idx))
+    return alloc, res, solve_time, build_time

@@ -1,0 +1,182 @@
+"""Canonical-form LP/MILP containers used throughout the POP stack.
+
+Every allocation problem in the framework (cluster scheduling, traffic
+engineering, load balancing, MoE expert placement, serving balancer) lowers
+to the canonical form
+
+    minimize    c^T x
+    subject to  G x <= h          (n_ineq rows)
+                A x  = b          (n_eq rows)
+                l <= x <= u       (box)
+
+The PDHG solver (``core/pdhg.py``) consumes the stacked form
+
+    K = [G; A],  q = [h; b],  with the first ``n_ineq`` duals projected >= 0.
+
+Problems are stored **dense** and 128-padded: on TPU, dense MXU-aligned
+blocks beat gather/scatter sparsity at post-POP sub-problem sizes (see
+DESIGN.md §2).  Padding is self-neutralising:
+
+  * padded variables get  l = u = 0, c = 0        (pinned to zero)
+  * padded ineq rows get  G row = 0, h = +BIG     (trivially satisfied)
+  * padded eq rows get    A row = 0, b = 0        (trivially satisfied)
+
+so a padded problem has exactly the same solution set (restricted to real
+variables) as the unpadded one.  This is what makes POP's map step a
+*batched* solve: ``k`` sub-problems padded to a common shape stack on a
+leading axis and vmap/shard_map cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = 1e9  # stand-in for +inf in padded rows / free bounds (f32-safe)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LinearProgram:
+    """One canonical-form LP (optionally one slice of a batched stack).
+
+    All fields are jnp arrays so the container is a pytree and can be
+    vmapped / shard_mapped / donated.  ``n_var``/``n_ineq``/``n_eq`` are
+    *static* python ints describing the real (unpadded) sizes; array shapes
+    may be larger (padded).
+    """
+
+    c: jnp.ndarray          # [N]      objective
+    G: jnp.ndarray          # [Mi, N]  inequality lhs
+    h: jnp.ndarray          # [Mi]     inequality rhs
+    A: jnp.ndarray          # [Me, N]  equality lhs
+    b: jnp.ndarray          # [Me]     equality rhs
+    l: jnp.ndarray          # [N]      lower bounds
+    u: jnp.ndarray          # [N]      upper bounds
+    n_var: int = 0          # static: real variable count
+    n_ineq: int = 0         # static: real inequality count
+    n_eq: int = 0           # static: real equality count
+
+    # ---- pytree protocol (static sizes ride in aux data) -----------------
+    def tree_flatten(self):
+        leaves = (self.c, self.G, self.h, self.A, self.b, self.l, self.u)
+        aux = (self.n_var, self.n_ineq, self.n_eq)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        c, G, h, A, b, l, u = leaves
+        return cls(c, G, h, A, b, l, u, *aux)
+
+    # ---- constructors ----------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        c: np.ndarray,
+        G: Optional[np.ndarray] = None,
+        h: Optional[np.ndarray] = None,
+        A: Optional[np.ndarray] = None,
+        b: Optional[np.ndarray] = None,
+        l: Optional[np.ndarray] = None,
+        u: Optional[np.ndarray] = None,
+        pad_to: int = 128,
+        dtype=jnp.float32,
+    ) -> "LinearProgram":
+        """Build (and 128-pad) an LP from numpy parts.  Missing blocks are
+        zero-row placeholders so downstream code never branches."""
+        c = np.asarray(c, np.float64)
+        n = c.shape[0]
+        G = np.zeros((0, n)) if G is None else np.asarray(G, np.float64)
+        h = np.zeros((0,)) if h is None else np.asarray(h, np.float64)
+        A = np.zeros((0, n)) if A is None else np.asarray(A, np.float64)
+        b = np.zeros((0,)) if b is None else np.asarray(b, np.float64)
+        l = np.full(n, -BIG) if l is None else np.asarray(l, np.float64)
+        u = np.full(n, BIG) if u is None else np.asarray(u, np.float64)
+        assert G.shape == (h.shape[0], n) and A.shape == (b.shape[0], n)
+
+        N = _round_up(max(n, 1), pad_to)
+        Mi = _round_up(max(G.shape[0], 1), pad_to)
+        Me = _round_up(max(A.shape[0], 1), pad_to)
+
+        cP = np.zeros(N); cP[:n] = c
+        lP = np.zeros(N); lP[:n] = l          # padded vars pinned to 0
+        uP = np.zeros(N); uP[:n] = u
+        GP = np.zeros((Mi, N)); GP[: G.shape[0], :n] = G
+        hP = np.full(Mi, BIG); hP[: h.shape[0]] = h
+        AP = np.zeros((Me, N)); AP[: A.shape[0], :n] = A
+        bP = np.zeros(Me); bP[: b.shape[0]] = b
+
+        return cls(
+            c=jnp.asarray(cP, dtype), G=jnp.asarray(GP, dtype),
+            h=jnp.asarray(hP, dtype), A=jnp.asarray(AP, dtype),
+            b=jnp.asarray(bP, dtype), l=jnp.asarray(lP, dtype),
+            u=jnp.asarray(uP, dtype),
+            n_var=n, n_ineq=G.shape[0], n_eq=A.shape[0],
+        )
+
+    # ---- derived views -----------------------------------------------------
+    @property
+    def shape(self) -> tuple:
+        return (self.G.shape[0], self.A.shape[0], self.c.shape[0])
+
+    def stacked(self):
+        """K = [G; A], q = [h; b] and the >=0 dual mask for the K rows."""
+        K = jnp.concatenate([self.G, self.A], axis=0)
+        q = jnp.concatenate([self.h, self.b], axis=0)
+        ineq_mask = jnp.concatenate(
+            [jnp.ones(self.G.shape[0], bool), jnp.zeros(self.A.shape[0], bool)]
+        )
+        return K, q, ineq_mask
+
+    def objective(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.dot(self.c, x)
+
+    def violations(self, x: jnp.ndarray) -> dict:
+        """Constraint violation report (used by tests & feasibility checks)."""
+        ineq = jnp.maximum(self.G @ x - self.h, 0.0)
+        eq = jnp.abs(self.A @ x - self.b)
+        box = jnp.maximum(self.l - x, 0.0) + jnp.maximum(x - self.u, 0.0)
+        return {
+            "ineq_max": jnp.max(ineq) if ineq.size else jnp.zeros(()),
+            "eq_max": jnp.max(eq) if eq.size else jnp.zeros(()),
+            "box_max": jnp.max(box) if box.size else jnp.zeros(()),
+        }
+
+
+def stack_lps(lps: list) -> LinearProgram:
+    """Stack k same-shaped LPs on a leading axis (POP's batched map step).
+
+    All sub-problems must already share padded shapes (partitioners
+    guarantee this by construction: equal-size entity splits + common
+    ``pad_to``).
+    """
+    assert len({lp.shape for lp in lps}) == 1, "sub-problems must be same-shaped"
+    leaves = [jnp.stack([getattr(lp, f) for lp in lps]) for f in
+              ("c", "G", "h", "A", "b", "l", "u")]
+    proto = lps[0]
+    return LinearProgram(*leaves, proto.n_var, proto.n_ineq, proto.n_eq)
+
+
+@dataclasses.dataclass
+class MixedIntegerProgram:
+    """MILP = LP + integrality mask.  Solved by relax-and-round
+    (``core/rounding.py``); the mask marks binary {0,1} variables."""
+
+    lp: LinearProgram
+    binary_mask: jnp.ndarray  # [N] bool — True where x must be in {0, 1}
+
+    @classmethod
+    def build(cls, binary_mask: np.ndarray, **lp_kwargs) -> "MixedIntegerProgram":
+        lp = LinearProgram.build(**lp_kwargs)
+        m = np.zeros(lp.c.shape[0], bool)
+        m[: binary_mask.shape[0]] = binary_mask
+        return cls(lp=lp, binary_mask=jnp.asarray(m))

@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic sharded token streams with prefetch."""
+from .pipeline import TokenPipeline, DevicePrefetcher

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the PDHG hot loop (validated in interpret mode on
+CPU; compiled on TPU).  ``ops`` is the public jit'd API, ``ref`` the oracle."""
+
+from . import ops, ref
+from .pdhg_matvec import BLOCK_M, BLOCK_N
+
+__all__ = ["ops", "ref", "BLOCK_M", "BLOCK_N"]

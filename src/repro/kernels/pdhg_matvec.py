@@ -1,0 +1,107 @@
+"""Pallas TPU kernels: batched constraint-matrix matvecs for the PDHG loop.
+
+The PDHG inner loop is two matvecs per iteration over the stacked
+constraint matrix K — for POP, a *batched* K of shape [k_subproblems, M, N].
+These kernels tile K into MXU-aligned VMEM blocks and accumulate partial
+products in VMEM, so each K element is read from HBM exactly once per
+matvec (the roofline for this op — it is memory-bound at PDHG's 2 flops
+per byte).
+
+Tiling scheme (forward ``bmatvec``):
+
+    grid = (k, M/bm, N/bn)            # N is the reduction axis
+    A block  : (1, bm, bn)  VMEM
+    x block  : (1, bn)      VMEM      (re-read per M row-block: bn << HBM)
+    y block  : (1, bm)      VMEM      accumulated across the N axis
+
+The transposed matvec reads the SAME layout of K (no materialised K^T in
+HBM — a [k,M,N]-strided transpose would double memory traffic) and
+contracts along M instead, transposing only the (bm, bn) tile in VMEM,
+which the MXU handles natively via ``dot_general`` dimension numbers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned defaults: 256x256 f32 tile = 256 KiB VMEM for the K block,
+# well inside the ~16 MiB/core VMEM budget with double buffering.
+BLOCK_M = 256
+BLOCK_N = 256
+
+
+def _bmatvec_kernel(a_ref, x_ref, o_ref):
+    """One (1, bm, bn) tile: o[bm] += A[bm, bn] @ x[bn]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0]                       # [bm, bn]
+    x = x_ref[0]                       # [bn]
+    # rank-2 dot keeps the MXU path; accumulate in f32
+    o_ref[0, :] += jax.lax.dot_general(
+        a, x[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0].astype(o_ref.dtype)
+
+
+def _bmatvec_t_kernel(a_ref, y_ref, o_ref):
+    """One (1, bm, bn) tile: o[bn] += A[bm, bn]^T @ y[bm] (in-VMEM transpose)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0]                       # [bm, bn]
+    y = y_ref[0]                       # [bm]
+    o_ref[0, :] += jax.lax.dot_general(
+        a, y[:, None], (((0,), (0,)), ((), ())),   # contract over bm
+        preferred_element_type=jnp.float32,
+    )[:, 0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def bmatvec(A: jnp.ndarray, x: jnp.ndarray, *,
+            block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+            interpret: bool = False) -> jnp.ndarray:
+    """y[k, M] = A[k, M, N] @ x[k, N].  Shapes must be block-divisible
+    (``ops.py`` handles padding)."""
+    k, M, N = A.shape
+    assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
+    grid = (k, M // block_m, N // block_n)
+    return pl.pallas_call(
+        _bmatvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_n), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda b, i, j: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((k, M), jnp.float32),
+        interpret=interpret,
+    )(A, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def bmatvec_t(A: jnp.ndarray, y: jnp.ndarray, *,
+              block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+              interpret: bool = False) -> jnp.ndarray:
+    """x[k, N] = A[k, M, N]^T @ y[k, M] without materialising A^T."""
+    k, M, N = A.shape
+    assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
+    # reduction axis is M now -> make it the innermost grid dim
+    grid = (k, N // block_n, M // block_m)
+    return pl.pallas_call(
+        _bmatvec_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_n), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, j, i: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((k, N), jnp.float32),
+        interpret=interpret,
+    )(A, y)

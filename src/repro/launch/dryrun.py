@@ -1,0 +1,363 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) cell lowers,
+SPMD-partitions, and compiles on the production meshes, and extract the
+roofline inputs (FLOPs, bytes, collective bytes, per-device memory) from
+the compiled artifact.
+
+MUST be run as its own process (the XLA_FLAGS line above has to execute
+before any other jax-touching import — which is why it is the very first
+statement of the module).
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --all --shard 0/4     # split across procs
+
+Outputs one JSON per cell under experiments/dryrun/<mesh>/.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..models import transformer as tf
+from ..train import optimizer as opt_mod
+from ..train.train_step import TrainConfig, make_train_step
+from ..serve.engine import ServeConfig, make_serve_step
+from ..launch import shardings as sh
+from ..launch import specs as sp
+from ..launch.mesh import make_production_mesh, mesh_chip_count
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun")
+
+from .hlo_stats import (COLLECTIVE_OPS, _INSTR_RE, _SHAPE_RE,
+                        _shape_bytes, active_param_counts,
+                        collective_bytes)
+
+
+def _probe_cfg(cfg, seg_periods, moe_cf=None):
+    """Config clone with per-segment period counts replaced (and optionally
+    a different MoE capacity factor — §Perf experiments)."""
+    import dataclasses as dc
+    segs = tuple(dc.replace(s, n_periods=n)
+                 for s, n in zip(cfg.segments, seg_periods))
+    moe = cfg.moe
+    if moe_cf is not None and moe is not None:
+        moe = dc.replace(moe, capacity_factor=float(moe_cf))
+    return dc.replace(cfg, segments=segs, enc_segments=cfg.enc_segments,
+                      moe=moe)
+
+
+def _lower_probe(cfg, cell, mesh, n_dp, flags=None):
+    """Lower ONE probe (no scan-over-micro; depth from cfg) and return
+    (flops, bytes, collective_bytes) per device from the compiled artifact.
+    ``flags``: extra TrainConfig/ServeConfig fields (perf experiments)."""
+    flags = flags or {}
+    p_shape = sp.params_shape(cfg)
+    p_specs = sh.param_specs(p_shape, mesh)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+
+    with mesh:
+        if cell.kind == "train":
+            n_micro = sp.microbatches_for(cell, n_dp)
+            micro_b = max(cell.global_batch // n_micro, n_dp)
+            mcell = sp.ShapeCell(cell.name, cell.seq_len, micro_b, "train")
+            tcfg = TrainConfig(n_microbatches=1, unroll_segments=True,
+                               **{k: v for k, v in flags.items()
+                                  if k in ("sp_residual", "bf16_barrier",
+                                           "gather_once")})
+            o_shape = sp.opt_shape(p_shape)
+            o_shard = opt_mod.AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+                v=jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs))
+            b_shape = sp.batch_specs(cfg, mcell)
+            b_shard = jax.tree.map(
+                lambda a: NamedSharding(
+                    mesh, sh.batch_spec(mesh) if a.ndim == 2
+                    else P(sh.dp_axes(mesh), *([None] * (a.ndim - 1)))),
+                b_shape)
+            step = make_train_step(cfg, tcfg, mesh)
+            lowered = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                              donate_argnums=(0, 1)).lower(
+                                  p_shape, o_shape, b_shape)
+        elif cell.kind == "prefill":
+            def fwd(params, batch):
+                return tf.forward_train(params, cfg, batch["tokens"],
+                                        enc_embeddings=batch.get(
+                                            "enc_embeddings"),
+                                        remat=False, unroll=True)
+            b_shape = sp.batch_specs(cfg, cell)
+            b_shape.pop("labels")
+            b_shard = jax.tree.map(
+                lambda a: NamedSharding(
+                    mesh, sh.batch_spec(mesh) if a.ndim == 2
+                    else P(sh.dp_axes(mesh), *([None] * (a.ndim - 1)))),
+                b_shape)
+            lowered = jax.jit(fwd, in_shardings=(p_shard, b_shard)).lower(
+                p_shape, b_shape)
+        else:
+            token, cache, memory = sp.decode_specs(cfg, cell)
+            scfg = ServeConfig(batch=cell.global_batch, max_seq=cell.seq_len,
+                               shard_cache_seq=flags.get(
+                                   "shard_cache_seq",
+                                   cell.name == "long_500k"),
+                               unroll_segments=True,
+                               cache_seq_on_model=flags.get(
+                                   "cache_seq_on_model", False))
+            c_specs = sh.kv_cache_specs(cache, mesh, scfg.batch,
+                                        shard_seq=scfg.shard_cache_seq,
+                                        seq_on_model=flags.get(
+                                            "cache_seq_on_model", False))
+            c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+            dp = sh.dp_axes(mesh)
+            b_ok = scfg.batch % max(n_dp, 1) == 0
+            t_shard = NamedSharding(mesh,
+                                    P(dp, None) if b_ok else P(None, None))
+            step = make_serve_step(cfg, scfg, mesh)
+            in_sh = [p_shard, c_shard, t_shard]
+            args = [p_shape, cache, token]
+            if memory is not None:
+                in_sh.append(NamedSharding(
+                    mesh, P(dp, None, None) if b_ok else P(None, None, None)))
+                args.append(memory)
+            lowered = jax.jit(step, in_shardings=tuple(in_sh),
+                              donate_argnums=(1,)).lower(*args)
+
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total"]))
+
+
+def probe_costs(cfg, cell, mesh, n_dp, flags=None) -> dict:
+    """Scan-aware per-device cost reconstruction.
+
+    XLA's HloCostAnalysis counts while-loop bodies ONCE (verified
+    empirically — flops are flat in trip count), so scanned-layer and
+    grad-accumulation costs must be reconstructed:
+
+        total = n_micro * (base + sum_s delta_s * (n_periods_s - 1))
+
+    where base = probe with every segment at 1 period (at micro batch),
+    and delta_s = probe with segment s at 2 periods, minus base.
+    The optimizer update is over-counted (n_micro-1) extra times —
+    O(20 flops/param), noise at these scales.
+    """
+    ones = [1] * len(cfg.segments)
+    moe_cf = (flags or {}).get("moe_cf")
+    base = _lower_probe(_probe_cfg(cfg, ones, moe_cf), cell, mesh, n_dp, flags)
+    totals = list(base)
+    for si, seg in enumerate(cfg.segments):
+        if seg.n_periods == 1:
+            continue
+        two = list(ones)
+        two[si] = 2
+        probe = _lower_probe(_probe_cfg(cfg, two, moe_cf), cell, mesh, n_dp,
+                             flags)
+        for j in range(3):
+            totals[j] += (probe[j] - base[j]) * (seg.n_periods - 1)
+    n_micro = sp.microbatches_for(cell, n_dp) if cell.kind == "train" else 1
+    return {
+        "flops_per_device": totals[0] * n_micro,
+        "bytes_per_device": totals[1] * n_micro,
+        "collective_bytes_per_device": totals[2] * n_micro,
+        "n_micro": n_micro,
+        "probe_base": base,
+    }
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch_id)
+    cell = sp.SHAPES[shape_name]
+    ok, reason = sp.cell_is_runnable(cfg, cell)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in sh.dp_axes(mesh)]))
+    t0 = time.perf_counter()
+
+    with mesh:
+        p_shape = sp.params_shape(cfg)
+        p_specs = sh.param_specs(p_shape, mesh)
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+
+        if cell.kind == "train":
+            n_micro = sp.microbatches_for(cell, n_dp)
+            tcfg = TrainConfig(n_microbatches=n_micro)
+            o_shape = sp.opt_shape(p_shape)
+            o_shard = opt_mod.AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+                v=jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs))
+            b_shape = sp.batch_specs(cfg, cell)
+            b_shard = jax.tree.map(
+                lambda a: NamedSharding(
+                    mesh, sh.batch_spec(mesh) if a.ndim == 2
+                    else P(sh.dp_axes(mesh), *([None] * (a.ndim - 1)))),
+                b_shape)
+            step = make_train_step(cfg, tcfg, mesh)
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_shape, o_shape, b_shape)
+        elif cell.kind == "prefill":
+            from ..train.train_step import make_loss_fn
+            tcfg = TrainConfig(n_microbatches=1, remat=False)
+
+            def fwd(params, batch):
+                return tf.forward_train(params, cfg, batch["tokens"],
+                                        enc_embeddings=batch.get(
+                                            "enc_embeddings"),
+                                        remat=False)
+            b_shape = sp.batch_specs(cfg, cell)
+            b_shape.pop("labels")
+            b_shard = jax.tree.map(
+                lambda a: NamedSharding(
+                    mesh, sh.batch_spec(mesh) if a.ndim == 2
+                    else P(sh.dp_axes(mesh), *([None] * (a.ndim - 1)))),
+                b_shape)
+            jitted = jax.jit(fwd, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(p_shape, b_shape)
+        else:                                     # decode
+            token, cache, memory = sp.decode_specs(cfg, cell)
+            scfg = ServeConfig(batch=cell.global_batch, max_seq=cell.seq_len,
+                               shard_cache_seq=(cell.name == "long_500k"))
+            c_specs = sh.kv_cache_specs(cache, mesh, scfg.batch,
+                                        shard_seq=scfg.shard_cache_seq)
+            c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+            dp = sh.dp_axes(mesh)
+            b_ok = scfg.batch % max(n_dp, 1) == 0
+            t_shard = NamedSharding(mesh, P(dp, None) if b_ok else P(None, None))
+            step = make_serve_step(cfg, scfg, mesh)
+            in_sh = [p_shard, c_shard, t_shard]
+            args = [p_shape, cache, token]
+            if memory is not None:
+                in_sh.append(NamedSharding(
+                    mesh, P(dp, None, None) if b_ok else P(None, None, None)))
+                args.append(memory)
+            jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+    counts = active_param_counts(cfg)
+    non_embed = counts["active"] - counts["embed"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 6.0 * non_embed * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 2.0 * non_embed * tokens
+    else:
+        model_flops = 2.0 * non_embed * cell.global_batch
+
+    # scan-aware roofline inputs (single-pod only — §Roofline is per-pod)
+    probes = None
+    if not multi_pod:
+        probes = probe_costs(cfg, cell, mesh, n_dp)
+
+    result = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "chips": chips,
+        "n_dp": n_dp,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collectives": coll,
+        "params_total": counts["total"],
+        "params_active": counts["active"],
+        "params_embed": counts["embed"],
+        "model_flops": model_flops,
+        "hlo_bytes": len(hlo),
+        "probes": probes,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[f"mem_{attr}"] = int(v)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--shard", default=None, help="i/n split of the cell list")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(sp.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+    if args.shard:
+        i, n = map(int, args.shard.split("/"))
+        cells = cells[i::n]
+
+    failures = 0
+    for a, s, m in cells:
+        mesh_name = "multi" if m else "single"
+        out_dir = os.path.join(OUT_ROOT, mesh_name)
+        os.makedirs(out_dir, exist_ok=True)
+        out_path = os.path.join(out_dir, f"{a}__{s}.json")
+        if os.path.exists(out_path):
+            print(f"[skip-cached] {a} {s} {mesh_name}")
+            continue
+        print(f"[lower+compile] {a} {s} {mesh_name} ...", flush=True)
+        try:
+            res = lower_cell(a, s, m)
+        except Exception as e:                               # noqa: BLE001
+            res = {"arch": a, "shape": s, "mesh": mesh_name,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            failures += 1
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"   -> {res['status']}"
+              + (f" compile={res.get('compile_s')}s flops={res.get('flops'):.3g}"
+                 if res["status"] == "ok" else
+                 f" ({res.get('reason', res.get('error', ''))[:120]})"),
+              flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""HLO statistics + parameter accounting shared by the dry-run, the
+roofline aggregator, and tests.  Import-safe: unlike ``launch.dryrun``,
+importing this module does NOT set XLA_FLAGS."""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+
+from ..launch import specs as sp
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+# one HLO instruction:  %name = <result-type> <opcode>(operands...), ...
+# result-type is either `f32[2,4,8]{2,1,0}` or a tuple `(f32[...], f32[...])`
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(.*?\)|[\w\[\]{},\d]+)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum RESULT-tensor bytes of every collective op, by op kind.
+
+    Opcode is taken from the instruction's rhs (never the lhs variable
+    name, which XLA often names after the op).  ``-start`` variants are
+    counted; their ``-done`` halves are not (same tensor)."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        m = _INSTR_RE.match(ls)
+        if not m:
+            continue
+        result_type, opcode = m.groups()
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in COLLECTIVE_OPS:
+            out[base] += _shape_bytes(result_type)
+            out["count"] += 1
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    return out
+
+
+def active_param_counts(cfg) -> dict:
+    """(total, active) param counts — MoE counts top_k of n_experts."""
+    p_shape = sp.params_shape(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(p_shape)
+    total = active = embed = 0
+    for path, leaf in flat:
+        names = [str(getattr(e, "key", "")) for e in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "table" in names or "unembed" in names:
+            embed += n
+            active += n
+            continue
+        if any(x in names for x in ("w_gate", "w_up", "w_down")) and \
+                leaf.ndim >= 3 and cfg.moe is not None and \
+                leaf.shape[-3 if leaf.ndim == 3 else -3] == cfg.moe.n_experts:
+            active += int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        else:
+            active += n
+    return {"total": total, "active": active, "embed": embed}

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; everything else
+sees the real device count).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has (CI / examples / tests)."""
+    n = len(jax.devices())
+    model = max(1, min(model_parallel, n))
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,195 @@
+"""Roofline analysis: aggregate the dry-run JSONs into the §Dry-run and
+§Roofline tables of EXPERIMENTS.md.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16            197 TFLOP/s
+    HBM bandwidth        819 GB/s
+    ICI per link         ~50 GB/s
+
+Per (arch x shape) on the single-pod 256-chip mesh:
+
+    compute term    = HLO_FLOPs_per_device / 197e12          [s]
+    memory term     = HLO_bytes_per_device / 819e9           [s]
+    collective term = collective_bytes_per_device / 50e9     [s]
+
+(The prompt's global formulation — HLO_FLOPs / (chips * peak) — equals the
+per-device form because SPMD distributes evenly; probes report per-device.)
+
+Caveats recorded in EXPERIMENTS.md:
+  * FLOPs/collective bytes come from scan-UNROLLED probe compiles
+    (HloCostAnalysis counts while bodies once — measured, see dryrun.py).
+  * memory bytes from the CPU-backend HLO over-count vs a TPU compile
+    (elementwise chains that TPU fusion would collapse), so the memory
+    term is an upper bound; an analytic floor (params+cache traffic) is
+    reported alongside.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from glob import glob
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+HERE = os.path.dirname(__file__)
+DRYRUN_DIR = os.path.normpath(os.path.join(HERE, "..", "..", "..",
+                                           "experiments", "dryrun"))
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str = "single"):
+    cells = {}
+    for path in glob(os.path.join(DRYRUN_DIR, mesh, "*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def analytic_bytes_floor(d: dict) -> float:
+    """Per-device lower bound on HBM traffic for one step: every resident
+    param read once per microbatch (+ grads/opt write ~2x for train), plus
+    the KV/state cache read+write for decode."""
+    chips = d.get("chips", 256)
+    params_local = d["params_total"] * 4.0 / chips
+    if d["shape"].startswith("train"):
+        n_micro = (d.get("probes") or {}).get("n_micro", 1)
+        return params_local * (n_micro + 3)
+    cache = d.get("mem_argument_size_in_bytes", 0) - params_local
+    return params_local + max(cache, 0) * 2.0 / 1.0
+
+
+def roofline_row(d: dict) -> dict:
+    p = d.get("probes") or {}
+    fl = p.get("flops_per_device", 0.0)
+    by = p.get("bytes_per_device", 0.0)
+    co = p.get("collective_bytes_per_device", 0.0)
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW              # HLO upper bound (CPU backend, unfused)
+    t_x = co / ICI_BW
+    floor = analytic_bytes_floor(d)
+    t_mf = floor / HBM_BW          # analytic floor (params+cache traffic)
+    # bottleneck judged on (compute, collective, memory FLOOR): the HLO
+    # byte count is an unfused upper bound that would call everything
+    # memory-bound; the floor is what a fused TPU compile must still move
+    dom = max(("compute", t_c), ("memory", t_mf), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    model = d.get("model_flops", 0.0)
+    hlo_global = fl * d.get("chips", 256)
+    useful = (model / hlo_global) if hlo_global else 0.0
+    # roofline fraction = useful/actual on the DOMINANT term:
+    #   compute-bound  -> MODEL_FLOPs / HLO_FLOPs   (remat/redundancy waste)
+    #   memory-bound   -> floor_bytes / HLO_bytes   (fusion/layout waste)
+    #   collective-bound -> what fraction of wire time is unavoidable
+    #                       (approximated by memory-floor/collective: the
+    #                       collectives POP/TP strictly need scale with it)
+    if dom == "compute":
+        frac = useful
+    elif dom == "memory":
+        frac = floor / by if by else 0.0
+    else:
+        frac = min(1.0, t_mf / t_x) if t_x else 0.0
+    return {
+        "arch": d["arch"], "shape": d["shape"],
+        "compute_s": t_c, "memory_s": t_m, "memory_floor_s": t_mf,
+        "collective_s": t_x,
+        "bottleneck": dom,
+        "model_flops": model,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(cells_single, cells_multi) -> str:
+    lines = [
+        "| arch | shape | single-pod (16x16) | multi-pod (2x16x16) | "
+        "compile s/m | per-dev args (GB) | collectives (count) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    archs = sorted({a for a, _ in cells_single})
+    for a in archs:
+        for s in SHAPE_ORDER:
+            d1 = cells_single.get((a, s))
+            d2 = cells_multi.get((a, s))
+            if d1 is None and d2 is None:
+                continue
+            st1 = (d1 or {}).get("status", "-")
+            st2 = (d2 or {}).get("status", "-")
+            if st1 == "skipped":
+                lines.append(f"| {a} | {s} | SKIP | SKIP | - | - | "
+                             f"{(d1 or {}).get('reason', '')[:60]} |")
+                continue
+            comp = f"{(d1 or {}).get('compile_s', '-')}/" \
+                   f"{(d2 or {}).get('compile_s', '-')}"
+            arg = (d1 or {}).get("mem_argument_size_in_bytes", 0) / 2**30
+            cnt = ((d1 or {}).get("collectives") or {}).get("count", "-")
+            lines.append(f"| {a} | {s} | {st1} | {st2} | {comp} | "
+                         f"{arg:.2f} | {cnt} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells_single):
+    lines = [
+        "| arch | shape | compute | mem(floor) | mem(HLO ub) | collective | "
+        "bottleneck | MODEL TFLOPs | MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    archs = sorted({a for a, _ in cells_single})
+    rows = []
+    for a in archs:
+        for s in SHAPE_ORDER:
+            d = cells_single.get((a, s))
+            if d is None or d.get("status") != "ok" or not d.get("probes"):
+                continue
+            r = roofline_row(d)
+            rows.append(r)
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_floor_s'])} | {fmt_s(r['memory_s'])} | "
+                f"{fmt_s(r['collective_s'])} | "
+                f"**{r['bottleneck']}** | {r['model_flops']/1e12:.1f} | "
+                f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} |")
+    return "\n".join(lines), rows
+
+
+def main():
+    single = load_cells("single")
+    multi = load_cells("multi")
+    n_ok_s = sum(1 for d in single.values() if d["status"] == "ok")
+    n_ok_m = sum(1 for d in multi.values() if d["status"] == "ok")
+    n_skip = sum(1 for d in single.values() if d["status"] == "skipped")
+    n_err = sum(1 for d in list(single.values()) + list(multi.values())
+                if d["status"] == "error")
+    print(f"single-pod: {n_ok_s} ok, multi-pod: {n_ok_m} ok, "
+          f"{n_skip} documented skips, {n_err} errors")
+    print()
+    print(dryrun_table(single, multi))
+    print()
+    tbl, rows = roofline_table(single)
+    print(tbl)
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        coll = max(rows, key=lambda r: r["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_frac']:.3f})")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']} "
+              f"({fmt_s(coll['collective_s'])})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""GSPMD sharding rules for params, optimizer state, activations, caches.
+
+Policy (single-pod mesh ("data", "model"); multi-pod prepends "pod"):
+
+  * batch dims           -> all data-parallel axes ("pod", "data")
+  * attention heads      -> "model" when head count divides the axis,
+    else head_dim when IT divides, else replicated (e.g. danube's kv=8,
+    head_dim=120 KV projections — 14 MB, cheap to replicate)
+  * ffn hidden / experts' ffn hidden / vocab  -> "model"
+  * mamba/xlstm inner dims -> "model"
+  * norms, routers, gates  -> replicated
+  * KV caches: batch -> data axes; heads/head_dim -> "model" by the same
+    divisibility rule.  long_500k (batch=1): cache SEQUENCE -> "data"
+    (sequence-parallel decode).
+
+Rules are keyed on the leaf's path name and apply to its TRAILING dims, so
+the same rule covers scan-stacked leaves (leading [n_periods] axis) and
+unstacked ones (shared blocks, embeddings).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    """All pure data-parallel axes present in the mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh: Mesh, axis: str = "model") -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def _leaf_rule(name: str, shape: tuple, mesh: Mesh) -> P:
+    """Partial spec for the SEMANTIC (trailing) dims of a leaf."""
+    m = "model"
+
+    def pick(*cands):
+        """cands: (dim_index_from_end, ndim) pairs — first divisible wins."""
+        ndim = len(shape)
+        spec = [None] * ndim
+        for di in cands:
+            if _div(shape[di], mesh):
+                spec[di] = m
+                return P(*spec)
+        return P(*spec)
+
+    if name == "table":                       # embedding [V, D]
+        return pick(-2, -1)
+    if name in ("wq",):                       # [D, H, hd]
+        return pick(-2, -1)
+    if name in ("wk", "wv"):                  # [D, Kv, hd]
+        # Kv heads when divisible; otherwise REPLICATE (few MB) — sharding
+        # head_dim here would force a psum over [B,H,S,T] score tensors in
+        # training, far costlier than replicating the projection
+        return pick(-2)
+    if name == "wo":                          # [H, hd, D]
+        return pick(-3, -2)
+    if name in ("w_gate", "w_up"):            # [.., D, F] (dense or expert)
+        return pick(-1)
+    if name == "w_down":                      # [.., F, D]
+        return pick(-2)
+    if name in ("w_z", "w_x"):                # mamba [D, d_inner]
+        return pick(-1)
+    if name == "conv_w":                      # [W, d_inner]
+        return pick(-1)
+    if name == "w_out":                       # [d_inner|D, D]
+        return pick(-2)
+    if name == "w_in":                        # slstm [D, H, 4hd]
+        return pick(-1)
+    if name == "r":                           # slstm [H, hd, 4hd]
+        return pick(-1)
+    if name == "wo_gate":                     # mlstm [D, D]
+        return pick(-1)
+    if name == "w" and len(shape) == 2:       # dense (unembed/frontend) [D, V]
+        return pick(-1)
+    # norms, routers, scalars, gates, a_log, dt_bias, ...
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec tree matching ``params``' structure."""
+    def spec_of(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        base = _leaf_rule(name or "", leaf.shape, mesh)
+        # left-pad for scan-stacked leading axes
+        pad = leaf.ndim - len(base)
+        return P(*([None] * pad + list(base)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh) -> P:
+    """[B, S] token batches."""
+    return P(dp_axes(mesh), None)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """[B, S, D] hidden states."""
+    return P(dp_axes(mesh), None, None)
+
+
+def kv_cache_specs(cache, mesh: Mesh, batch: int, shard_seq: bool = False,
+                   seq_on_model: bool = False):
+    """Specs for a decode cache pytree (see transformer.init_cache).
+
+    shard_seq=True is the long-context mode: batch is tiny (1), so the
+    cache SEQUENCE dim carries the data axes instead (sequence-parallel
+    attention over the cache).
+
+    seq_on_model=True (§Perf, flash-decode layout): batch stays on the
+    data axes and the cache SEQUENCE shards over `model` — attention over
+    the cache then reduces to per-shard partial softmax + tiny psums,
+    instead of resharding/gathering the cache to match head layouts.
+    """
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    batch_ok = batch % max(n_dp, 1) == 0 and not shard_seq
+
+    def spec_of(path, leaf):
+        names = [str(e.key) for e in path
+                 if isinstance(e, jax.tree_util.DictKey)]
+        if "pos" in names:
+            return P()
+        ndim = leaf.ndim
+        # KVCache leaves: [n_periods, B, L, Kv, hd].  KVCache is a
+        # NamedTuple, so its fields appear as SequenceKey entries (not
+        # DictKey); SSM/xLSTM states are dicts and end in a DictKey.
+        is_kv = (ndim == 5 and path and
+                 isinstance(path[-1], jax.tree_util.SequenceKey))
+        if is_kv:
+            b = dp if batch_ok else None
+            if seq_on_model and _div(leaf.shape[2], mesh):
+                return P(None, b, "model", None, None)
+            s = dp if (shard_seq and leaf.shape[2] % max(n_dp, 1) == 0) else None
+            kv_dim, hd_dim = None, None
+            if _div(leaf.shape[3], mesh):
+                kv_dim = "model"
+            elif _div(leaf.shape[4], mesh):
+                hd_dim = "model"
+            return P(None, b, s, kv_dim, hd_dim)
+        # SSM / xLSTM states: [n_periods, B, ...] — shard batch + widest
+        # trailing dim divisible by model
+        spec = [None] * ndim
+        if ndim >= 2 and batch_ok:
+            spec[1] = dp
+        for di in range(ndim - 1, 1, -1):
+            if _div(leaf.shape[di], mesh):
+                spec[di] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def opt_state_specs(param_spec_tree):
+    """Adam m/v mirror the param specs; scalars replicated."""
+    return param_spec_tree

@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) dry-run cell.
+
+No device memory is ever allocated here: params, optimizer state, caches
+and batches are all ``jax.eval_shape`` products, which is what lets the
+40-cell x 2-mesh matrix lower full-size 22B-140B configs on a CPU host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tf
+from ..train import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# encoder memory length for enc-dec archs (speech frames, precomputed
+# embeddings per the frontend-stub assignment)
+ENC_MEMORY_LEN = 4_096
+
+
+def microbatches_for(cell: ShapeCell, n_dp: int) -> int:
+    """Grad-accumulation depth: keep per-device micro batch ~1 sequence at
+    4k, so activation carries stay bounded (see DESIGN.md §6)."""
+    if cell.kind != "train":
+        return 1
+    per_dev = max(cell.global_batch // n_dp, 1)
+    return min(per_dev, 8)
+
+
+def params_shape(cfg: tf.ArchCfg):
+    return jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_shape(p_shape):
+    return jax.eval_shape(opt_mod.init_state, p_shape)
+
+
+def cache_shape(cfg: tf.ArchCfg, batch: int, seq: int):
+    return jax.eval_shape(lambda: tf.init_cache(cfg, batch, seq))
+
+
+def batch_specs(cfg: tf.ArchCfg, cell: ShapeCell) -> dict:
+    """Training/prefill batch ShapeDtypeStructs."""
+    B, S = cell.global_batch, cell.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.enc_segments:
+        out["enc_embeddings"] = jax.ShapeDtypeStruct(
+            (B, ENC_MEMORY_LEN, cfg.d_model), jnp.float32)
+    return out
+
+
+def decode_specs(cfg: tf.ArchCfg, cell: ShapeCell):
+    """(token, cache, memory?) ShapeDtypeStructs for serve_step."""
+    B, S = cell.global_batch, cell.seq_len
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = cache_shape(cfg, B, S)
+    memory = None
+    if cfg.enc_segments:
+        memory = jax.ShapeDtypeStruct((B, ENC_MEMORY_LEN, cfg.d_model),
+                                      jnp.bfloat16)
+    return token, cache, memory
+
+
+def cell_is_runnable(cfg: tf.ArchCfg, cell: ShapeCell) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5)."""
+    if cell.name == "long_500k" and not cfg.supports_long:
+        return False, ("full-attention arch: 500k-token KV decode is "
+                       "quadratic-prefill / unbounded-KV — skipped per "
+                       "DESIGN.md §5")
+    return True, ""

@@ -1,0 +1,96 @@
+"""Training driver: config-driven, mesh-aware, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_8b \
+        --steps 100 [--reduced] [--ckpt-dir DIR]
+
+On this CPU container only ``--reduced`` is practical; on a TPU pod the
+same driver runs the full config with the production mesh.  Per-arch
+performance policies (EXPERIMENTS.md §Perf) are applied automatically:
+sequence-parallel residual only for archs whose head count is below the
+model-axis width (e.g. gemma3), where it repairs the TP pathology.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..configs import get_config, get_reduced
+from ..data import TokenPipeline
+from ..models import init_params
+from ..train import optimizer as opt_mod
+from ..train.train_step import TrainConfig, make_train_step
+from .mesh import make_host_mesh
+
+
+def perf_policy(cfg, mesh) -> dict:
+    """§Perf per-arch flags: SP residual pays off exactly when attention
+    cannot use the full model axis (heads < axis) — measured in
+    EXPERIMENTS.md §Perf (gemma3: -57% collective; llama3: 3x WORSE)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return {}
+    return {"sp_residual": cfg.n_heads < mesh.shape["model"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    a = ap.parse_args()
+
+    cfg = get_reduced(a.arch) if a.reduced else get_config(a.arch)
+    mesh = make_host_mesh(model_parallel=1) if len(jax.devices()) > 1 else None
+    tcfg = TrainConfig(
+        n_microbatches=a.microbatches,
+        adamw=opt_mod.AdamWConfig(peak_lr=3e-3, warmup_steps=10,
+                                  total_steps=a.steps),
+        **perf_policy(cfg, mesh))
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = opt_mod.init_state(params)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, {a.steps} steps")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh))
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=a.batch, seq=a.seq, seed=0,
+                         enc_seq=64 if cfg.enc_segments else 0,
+                         d_model=cfg.d_model)
+    ck = Checkpointer(a.ckpt_dir) if a.ckpt_dir else None
+    start = 0
+    if ck and ck.latest() is not None:
+        restored, extras = ck.restore(ck.latest(),
+                                      {"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        pipe.restore(extras["pipeline"])
+        start = extras["step"]
+        print(f"resumed from step {start}")
+
+    it = iter(pipe)
+    for s in range(start, a.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+        t0 = time.perf_counter()
+        params, opt, m = step_fn(params, opt, batch)
+        if ck and s and s % a.ckpt_every == 0:
+            ck.save_async(s, {"params": params, "opt": opt},
+                          extras={"pipeline": pipe.state(), "step": s})
+        if s % 10 == 0:
+            print(f"step {s:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"({time.perf_counter()-t0:.2f}s)")
+    if ck:
+        ck.wait()
+    print(f"done: final loss {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

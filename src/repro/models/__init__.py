@@ -1,0 +1,12 @@
+"""LM substrate: composable blocks (attention/MoE/Mamba2/xLSTM) assembled
+into decoder-only and encoder-decoder stacks via scan-over-periods."""
+
+from .transformer import (
+    ArchCfg, BlockCfg, MoECfg, Segment,
+    init_params, init_cache, forward_train, forward_decode, encode,
+)
+
+__all__ = [
+    "ArchCfg", "BlockCfg", "MoECfg", "Segment",
+    "init_params", "init_cache", "forward_train", "forward_decode", "encode",
+]

@@ -1,0 +1,188 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding windows, logit soft-capping,
+causal & bidirectional modes, cross-attention, and KV-cached decoding.
+
+Design notes for the scan-over-layers stack (``transformer.py``):
+
+  * ``window`` is a TRACED per-layer scalar, not a Python branch.  A
+    local:global pattern (gemma2/gemma3) lowers to ONE attention HLO whose
+    mask depends on the scanned window value — this keeps compile time and
+    HLO size O(1) in depth while preserving exact masking semantics.
+  * decode keeps a ring-buffer cache of length ``cache_len`` = min(seq,
+    window) for SWA layers: a 500k-context danube/mixtral decode holds a
+    4k cache per layer (this is what makes ``long_500k`` sub-quadratic).
+  * soft-capping (gemma2) is tanh-based and applied pre-softmax.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d_model)
+    so = 1.0 / np.sqrt(n_heads * head_dim)
+    return {
+        "wq": jax.random.normal(kq, (d_model, n_heads, head_dim), jnp.float32) * s,
+        "wk": jax.random.normal(kk, (d_model, n_kv, head_dim), jnp.float32) * s,
+        "wv": jax.random.normal(kv, (d_model, n_kv, head_dim), jnp.float32) * s,
+        "wo": jax.random.normal(ko, (n_heads, head_dim, d_model), jnp.float32) * so,
+    }
+
+
+def _soft_cap(logits, cap):
+    """gemma2 logit soft-capping; cap <= 0 disables (traced-friendly)."""
+    capped = jnp.tanh(logits / jnp.maximum(cap, 1e-6)) * cap
+    return jnp.where(cap > 0, capped, logits)
+
+
+def _expand_kv(k, n_heads):
+    """[B,T,Kv,hd] -> [B,T,H,hd] by repeating each KV head group-times.
+
+    Broadcast+merge keeps the head axis sharding intact under GSPMD
+    (reshaping Q's head axis into [Kv, group] instead forces an
+    involuntary resharding copy — measured in the dry-run HLO)."""
+    B, T, Kv, hd = k.shape
+    group = n_heads // Kv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, Kv, group, hd))
+    return k.reshape(B, T, n_heads, hd)
+
+
+def _gqa_scores(q, k, scale):
+    """q: [B,S,H,hd], k: [B,T,Kv,hd] -> [B,H,S,T] with head grouping."""
+    k = _expand_kv(k, q.shape[2])
+    return jnp.einsum("bshk,bthk->bhst", q * scale, k)
+
+
+def _gqa_out(w, v):
+    """w: [B,H,S,T], v: [B,T,Kv,hd] -> [B,S,H,hd]."""
+    v = _expand_kv(v, w.shape[1])
+    return jnp.einsum("bhst,bthk->bshk", w, v)
+
+
+def attention_train(p, x, *, window, softcap, rope_theta: float,
+                    causal: bool = True, memory: Optional[jnp.ndarray] = None,
+                    positions: Optional[jnp.ndarray] = None):
+    """Full-sequence attention (training / prefill).
+
+    window/softcap are traced scalars (f32; window >= seq means full).
+    ``memory`` switches to cross-attention (KV from memory, no mask).
+    """
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    src = x if memory is None else memory
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"].astype(dt))
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if memory is None:                     # self-attention: rotate q & k
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_scores(q, k, scale).astype(jnp.float32)   # [B,H,S,T]
+    logits = _soft_cap(logits, softcap)
+
+    if memory is None:
+        T = k.shape[1]
+        qp = positions[:, None, :, None]                    # [B,1,S,1]
+        kp = positions[:, None, None, :]                    # [B,1,1,T]
+        mask = jnp.ones((B, 1, S, T), bool)
+        if causal:
+            mask &= kp <= qp
+        mask &= (qp - kp) < window                          # SWA band
+        logits = jnp.where(mask, logits, NEG_INF)
+
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    o = _gqa_out(w, v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache.  ``k``/``v``: [B, cache_len, Kv, hd].
+    For SWA layers cache_len == window; writes wrap (slot = pos % len)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+    @classmethod
+    def zeros(cls, B, cache_len, n_kv, head_dim, dtype=jnp.bfloat16):
+        z = jnp.zeros((B, cache_len, n_kv, head_dim), dtype)
+        return cls(k=z, v=z)
+
+
+def attention_decode(p, x, cache: KVCache, pos, *, window, softcap,
+                     rope_theta: float,
+                     memory: Optional[jnp.ndarray] = None,
+                     cache_constraint=None):
+    """One-token decode step.  x: [B, 1, D]; pos: [] int32 current position.
+
+    Cross-attention (memory != None) reads precomputed memory directly and
+    ignores the cache.
+    """
+    B = x.shape[0]
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+
+    if memory is not None:
+        k = jnp.einsum("btd,dhk->bthk", memory, p["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", memory, p["wv"].astype(dt))
+        scale = 1.0 / np.sqrt(q.shape[-1])
+        logits = _gqa_scores(q, k, scale).astype(jnp.float32)
+        logits = _soft_cap(logits, softcap)
+        w = jax.nn.softmax(logits, axis=-1).astype(dt)
+        return jnp.einsum("bshk,hkd->bsd", _gqa_out(w, v),
+                          p["wo"].astype(dt)), cache
+
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, pos_b, rope_theta)
+    if cache_constraint is not None:
+        q = cache_constraint(q, "q")     # replicate q heads over `model`
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    k_new = apply_rope(k_new, pos_b, rope_theta)
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+
+    L = cache.k.shape[1]
+    slot = jnp.mod(pos, L)
+    k_all = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+    if cache_constraint is not None:
+        # §Perf flash-decode layout: pin the cache to its (e.g. sequence-
+        # over-model) sharding so GSPMD reduces attention to per-shard
+        # partial softmax + small psums instead of re-gathering the cache
+        k_all = cache_constraint(k_all, "kv")
+        v_all = cache_constraint(v_all, "kv")
+
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_scores(q, k_all.astype(dt), scale).astype(jnp.float32)
+    if cache_constraint is not None:
+        logits = cache_constraint(logits, "scores")
+    logits = _soft_cap(logits, softcap)                      # [B,H,1,L]
+
+    # ring-buffer validity: slot s holds absolute position p_s with
+    # p_s = pos - ((pos - s) mod L); valid iff p_s >= 0, p_s <= pos and
+    # pos - p_s < window
+    slots = jnp.arange(L)
+    age = jnp.mod(pos - slots, L)                            # 0..L-1
+    abs_pos = pos - age
+    valid = (abs_pos >= 0) & (age < window)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    if cache_constraint is not None:
+        w = cache_constraint(w, "scores")
+    o = _gqa_out(w, v_all.astype(dt))
+    if cache_constraint is not None:
+        o = cache_constraint(o, "out")
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return out, KVCache(k=k_all, v=v_all)

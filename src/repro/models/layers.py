@@ -1,0 +1,123 @@
+"""Base layers: norms, embeddings, RoPE, gated MLPs.
+
+Functional style throughout: ``init_*`` returns a param dict, ``*_apply``
+consumes it.  Every param dict has a parallel PartitionSpec tree produced
+by ``shardings.param_specs`` (tree structure must match exactly — tests
+assert this).
+
+Dtype policy (production default): parameters are stored f32 (optimizer
+master), activations/compute are bf16; the cast happens at parameter use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cast(p, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype), p)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}   # (1 + scale) convention
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(rng, vocab: int, d: int):
+    return {"table": jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(p, x):
+    """Logits against the (possibly tied) embedding table."""
+    table = p["table"].astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0):
+    return theta ** (-np.arange(0, head_dim // 2, dtype=np.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (d, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d), jnp.float32) * s_out,
+    }
+
+
+def mlp(p, x, activation: str = "silu"):
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt))
+    act = jax.nn.silu if activation == "silu" else (
+        lambda a: jax.nn.gelu(a, approximate=True))
+    h = act(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(dt))
+
+
+def init_dense(rng, d_in: int, d_out: int):
+    return {"w": jax.random.normal(rng, (d_in, d_out), jnp.float32)
+            / np.sqrt(d_in)}
+
+
+def dense(p, x):
+    return jnp.einsum("...d,de->...e", x, p["w"].astype(x.dtype))

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded einsum
+dispatch (Mesh-TF style) + optional always-on shared experts (Qwen-MoE).
+
+The dispatch/combine formulation keeps MoE as dense einsums — the idiom
+that shards cleanly under GSPMD: expert weights are laid out [E, D, F] and
+TP-sharded on F over the ``model`` axis (E is rarely divisible by the axis;
+F always is for the assigned archs).  Expert-parallel all-to-all dispatch
+is an alternative layout explored in the §Perf hillclimb.
+
+POP tie-in: ``plan_expert_placement`` maps experts onto devices by solving
+the paper's load-balancing MILP (experts = shards with their routing load,
+devices = servers) via ``problems/load_balancing.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import init_mlp, mlp
+
+
+def init_moe(rng, d: int, d_ff_expert: int, n_experts: int, n_shared: int = 0,
+             d_ff_shared: int = 0):
+    k_r, k_e, k_s = jax.random.split(rng, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(d_ff_expert)
+    p = {
+        "router": jax.random.normal(k_r, (d, n_experts), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(k_e, (n_experts, d, d_ff_expert),
+                                    jnp.float32) * s_in,
+        "w_up": jax.random.normal(jax.random.fold_in(k_e, 1),
+                                  (n_experts, d, d_ff_expert),
+                                  jnp.float32) * s_in,
+        "w_down": jax.random.normal(jax.random.fold_in(k_e, 2),
+                                    (n_experts, d_ff_expert, d),
+                                    jnp.float32) * s_out,
+    }
+    if n_shared > 0:
+        p["shared"] = init_mlp(k_s, d, d_ff_shared)
+    return p
+
+
+def moe(p, x, *, top_k: int, capacity_factor: float = 1.25,
+        activation: str = "silu"):
+    """x: [B, S, D] -> [B, S, D].
+
+    Capacity-bounded top-k dispatch: each expert processes at most
+    C = ceil(cf * S * top_k / E) tokens per sequence; overflow tokens drop
+    their lowest-priority expert (standard practice — keeps all shapes
+    static and the whole layer a pair of einsums on the MXU).
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    C = int(np.ceil(capacity_factor * S * top_k / E))
+    C = min(C, S)
+    dt = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)         # [B,S,k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # position of each (token, choice) in its expert's queue
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)    # [B,S,k,E]
+    flat = onehot.reshape(B, S * top_k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) * flat - 1.0          # [B,S*k,E]
+    pos_in_e = pos_in_e.reshape(B, S, top_k, E)
+    keep = (pos_in_e >= 0) & (pos_in_e < C)
+
+    # dispatch tensor [B, S, E, C]
+    cap_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, -1), C, dtype=jnp.float32)
+    dispatch = jnp.einsum("bske,bskec->bsec", onehot * keep, cap_oh)
+    combine = jnp.einsum("bsk,bske,bskec->bsec",
+                         gate_vals.astype(jnp.float32), onehot * keep, cap_oh)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(dt), x)  # [B,E,C,D]
+    act = jax.nn.silu if activation == "silu" else (
+        lambda a: jax.nn.gelu(a, approximate=True))
+    g = jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(dt))
+    ye = jnp.einsum("becf,efd->becd", act(g) * u, p["w_down"].astype(dt))
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(dt), ye)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, activation)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# POP-based expert placement (the paper's load-balancing MILP, reused)
+# ---------------------------------------------------------------------------
+
+def plan_expert_placement(expert_load: np.ndarray, n_devices: int,
+                          current: np.ndarray | None = None, k: int = 4,
+                          seed: int = 0):
+    """Place experts on devices balancing routing load while minimising
+    expert-weight movement from ``current`` — literally the paper's §3.3
+    MILP with experts as shards.  Returns device id per expert."""
+    from ..problems.load_balancing import LoadBalanceProblem, ShardWorkload
+
+    E = expert_load.shape[0]
+    rng = np.random.default_rng(seed)
+    if current is None:
+        current = np.arange(E) % n_devices
+    wl = ShardWorkload(
+        load=expert_load.astype(np.float64),
+        mem=np.ones(E),                      # uniform expert size
+        placement=current.astype(np.int64),
+        cap=np.full(n_devices, np.ceil(2.0 * E / n_devices)),
+        eps_frac=0.2,
+    )
+    prob = LoadBalanceProblem(wl)
+    k_eff = max(1, min(k, n_devices // 2))
+    res = (prob.pop_solve(k_eff, seed=seed) if k_eff > 1
+           else prob.solve_full())
+    return res.placement

@@ -1,0 +1,188 @@
+"""Mamba2 (State Space Duality) block: chunked parallel scan for training,
+O(1)-state recurrent step for decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024): per head h with state
+size N and head dim P,
+
+    h_t = exp(a_t) * h_{t-1} + dt_t * B_t x_t^T      (a_t = -softplus-ish)
+    y_t = C_t . h_t + D * x_t
+
+Training computes y in CHUNKS: quadratic attention-like term inside each
+chunk + a cross-chunk recurrence on chunk-final states via an associative
+scan — this is the TPU-native layout (batched matmuls over chunks feed the
+MXU; no sequential loop over 4k steps).
+
+This is the sub-quadratic mixer that makes zamba2/xlstm eligible for the
+``long_500k`` shape (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_mamba2(rng, d_model: int, d_state: int = 64, expand: int = 2,
+                head_dim: int = 64, conv_width: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / np.sqrt(d_model)
+    # separate projections (not one fused [z|x|B|C|dt] matrix): the d_inner
+    # outputs TP-shard over the model axis while B/C/dt stay replicated —
+    # a fused layout would split mid-boundary under GSPMD
+    return {
+        "w_z": jax.random.normal(ks[0], (d_model, d_inner), jnp.float32) * s,
+        "w_x": jax.random.normal(ks[1], (d_model, d_inner), jnp.float32) * s,
+        "w_B": jax.random.normal(ks[2], (d_model, d_state), jnp.float32) * s,
+        "w_C": jax.random.normal(ks[3], (d_model, d_state), jnp.float32) * s,
+        "w_dt": jax.random.normal(ks[4], (d_model, n_heads), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[5], (conv_width, d_inner),
+                                    jnp.float32) * 0.2,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),   # per-head decay
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "w_out": jax.random.normal(jax.random.fold_in(ks[5], 1),
+                                   (d_inner, d_model),
+                                   jnp.float32) / np.sqrt(d_inner),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+    }
+
+
+def _split_proj(p, x):
+    """Returns z, xc, B, C, dt — shapes [B,S,d_inner]x2, [B,S,N]x2, [B,S,H]."""
+    dt_c = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_c))
+    xc = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_c))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_c))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_c))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_c))
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(p, xc, conv_state=None):
+    """Depthwise causal conv along S.  With ``conv_state`` ([B, W-1, d])
+    performs the one-step streaming update and returns the new state."""
+    W = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(xc.dtype)
+    if conv_state is None:
+        pad = jnp.pad(xc, ((0, 0), (W - 1, 0), (0, 0)))
+        out = sum(pad[:, i: i + xc.shape[1], :] * w[i] for i in range(W))
+        return jax.nn.silu(out), None
+    window = jnp.concatenate([conv_state, xc], axis=1)        # [B, W, d]
+    out = jnp.einsum("bwd,wd->bd", window, w)[:, None, :]
+    return jax.nn.silu(out), window[:, 1:, :]
+
+
+def _segsum(a):
+    """Stable log-space segment sums: out[..., t, s] = sum_{s<r<=t} a_r."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_train(p, x, chunk: int = 256):
+    """x: [B, S, D] -> [B, S, D].  Chunk adapts to divide S."""
+    import math
+    Bsz, S, D = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = math.gcd(S, chunk)
+    dt_model = x.dtype
+    z, xc, Bm, Cm, dt = _split_proj(p, x)
+    xc, _ = _causal_conv(p, xc)
+
+    H = p["a_log"].shape[0]
+    P = xc.shape[-1] // H
+    N = Bm.shape[-1]
+    nC = S // chunk
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt             # [B,S,H] (<0)
+    xh = xc.astype(jnp.float32).reshape(Bsz, nC, chunk, H, P)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nC, chunk, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nC, chunk, N)
+    ac = a.reshape(Bsz, nC, chunk, H).transpose(0, 1, 3, 2)       # [B,c,H,L]
+    dtc = dt.reshape(Bsz, nC, chunk, H)
+
+    # 1) intra-chunk (quadratic in chunk, batched matmuls)
+    L = jnp.exp(_segsum(ac))                                      # [B,c,H,L,L]
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcsh,bcshp->bclhp",
+                        Cc, Bc, L, dtc, xh)
+
+    # 2) chunk-final states
+    a_cum = jnp.cumsum(ac, axis=-1)                               # [B,c,H,L]
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)               # [B,c,H,L]
+    states = jnp.einsum("bcsn,bchs,bcsh,bcshp->bchpn",
+                        Bc, decay_to_end, dtc, xh)                # [B,c,H,P,N]
+
+    # 3) cross-chunk recurrence on states (associative scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                         # [B,c,H]
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    _, states_inc = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    # state ENTERING chunk c = inclusive result of chunk c-1 (shift right)
+    states_in = jnp.concatenate(
+        [jnp.zeros_like(states_inc[:, :1]), states_inc[:, :-1]], axis=1)
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(a_cum)                                  # [B,c,H,L]
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", Cc, state_decay, states_in)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + p["d_skip"][None, None, :, None] * xh.reshape(Bsz, S, H, P)
+    y = y.reshape(Bsz, S, H * P).astype(dt_model)
+
+    # gated RMS norm (Mamba2's z-gate)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_scale"])).astype(dt_model)
+    return jnp.einsum("bsd,de->bse", y, p["w_out"].astype(dt_model))
+
+
+def mamba2_init_state(p, batch: int, dtype=jnp.float32):
+    d_inner = p["w_out"].shape[0]
+    H = p["a_log"].shape[0]
+    P = d_inner // H
+    N = p["w_B"].shape[1]
+    W = p["conv_w"].shape[0]
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, W - 1, d_inner), dtype),
+    }
+
+
+def mamba2_decode(p, x, state):
+    """One-step recurrence.  x: [B, 1, D]."""
+    dt_model = x.dtype
+    z, xc, Bm, Cm, dt = _split_proj(p, x)
+    xc, conv_state = _causal_conv(p, xc, state["conv"])
+
+    H = p["a_log"].shape[0]
+    P = xc.shape[-1] // H
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(-jnp.exp(p["a_log"]) * dt)                             # [B,H]
+    xh = xc[:, 0].astype(jnp.float32).reshape(-1, H, P)
+    Bv = Bm[:, 0].astype(jnp.float32)                                  # [B,N]
+    Cv = Cm[:, 0].astype(jnp.float32)
+
+    h = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, H * P).astype(dt_model)
+
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_scale"])).astype(dt_model)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(dt_model))
+    return out, {"ssm": h, "conv": conv_state}

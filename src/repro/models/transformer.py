@@ -1,0 +1,483 @@
+"""Composable decoder / encoder-decoder stacks over heterogeneous blocks.
+
+The unit of composition is a **period** — a short sequence of blocks (e.g.
+gemma3's [local x5, global], gemma2's [local, global], zamba2's
+[mamba x6, shared-attn]) — and a **segment** scans a stack of identical
+periods with ``jax.lax.scan`` + ``jax.checkpoint``:
+
+  * compile time / HLO size stay O(period), not O(depth) — 34-56 layer
+    models lower in seconds, which the 80-cell dry-run matrix depends on;
+  * remat per period bounds activation memory (carries are bf16);
+  * block position within the period is STATIC, so window sizes /
+    mixer kinds never become traced branches (one attention HLO per block
+    position, exact masking).
+
+Weight-shared blocks (zamba2's shared attention) live OUTSIDE the scanned
+params and are closed over — applied once per period with the same weights,
+while their KV caches remain per-application (stacked on the period axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .attention import KVCache
+from .layers import (cast, dense, embed, init_dense, init_embedding, init_mlp,
+                     init_rmsnorm, mlp, rmsnorm, unembed)
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    mixer: str = "attn"          # attn | mamba2 | mlstm | slstm | shared_attn
+    ffn: str = "dense"           # dense | moe | none
+    window: Optional[int] = None  # None = full attention (SWA band otherwise)
+    cross_attn: bool = False     # decoder block with encoder cross-attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    period: tuple                # tuple[BlockCfg, ...]
+    n_periods: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOpts:
+    """Beyond-paper performance knobs (EXPERIMENTS.md §Perf).
+
+    sp_residual: Megatron-SP-style sequence-sharded residual stream — the
+        hidden state between blocks is sharded over the `model` axis on the
+        SEQUENCE dim, turning each TP all-reduce into reduce-scatter +
+        all-gather around the (now 1/|model|-sized) norms.
+    bf16_barrier: pins an optimization_barrier on each NORM OUTPUT (the
+        tensor the TP/SP collective moves) so XLA cannot hoist the f32
+        upcast above the collective (measured ~2x wire inflation without
+        it: the HLO shows f32 all-gathers of bf16-semantics tensors).
+    """
+    sp_residual: bool = False
+    bf16_barrier: bool = False
+    gather_once: bool = False   # gather the SP-sharded norm output ONCE so
+                                # gate/up/q/k/v einsums CSE a single AG
+    cache_seq_on_model: bool = False  # flash-decode: cache seq over `model`
+    mesh: object = None
+
+    def constrain(self, x):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if self.sp_residual and self.mesh is not None:
+            dp = tuple(a for a in ("pod", "data")
+                       if a in self.mesh.axis_names)
+            if x.shape[1] % self.mesh.shape["model"] == 0:
+                x = jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, P(dp, "model", None)))
+        return x
+
+    def cache_constraint(self):
+        if not (self.cache_seq_on_model and self.mesh is not None):
+            return None
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+        m = self.mesh.shape["model"]
+
+        def constrain(t, kind):
+            # kv [B,L,Kv,hd]: seq over `model`; scores [B,H,1,L]: L over
+            # `model`; q/out [B,1,H,hd]: replicated over `model` (tiny) —
+            # pins every attention intermediate so wo's head sharding
+            # cannot back-propagate a cache re-gather
+            if kind == "kv" and t.shape[1] % m == 0:
+                spec = P(dp, "model", None, None)
+            elif kind == "scores" and t.shape[-1] % m == 0:
+                spec = P(dp, None, None, "model")
+            elif kind in ("q", "out"):
+                spec = P(dp, None, None, None)
+            else:
+                return t
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(self.mesh, spec))
+        return constrain
+
+    def pin(self, h):
+        """Apply to norm outputs feeding TP matmuls."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if self.bf16_barrier:
+            h = jax.lax.optimization_barrier(h)
+        if (self.gather_once and self.sp_residual and self.mesh is not None
+                and h.shape[1] % self.mesh.shape["model"] == 0):
+            dp = tuple(a for a in ("pod", "data")
+                       if a in self.mesh.axis_names)
+            h = jax.lax.with_sharding_constraint(
+                h, NamedSharding(self.mesh, P(dp, None, None)))
+        return h
+
+
+DEFAULT_OPTS = ModelOpts()
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchCfg:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    segments: tuple               # decoder/main stack
+    enc_segments: tuple = ()      # encoder stack (enc-dec archs)
+    softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    act: str = "silu"
+    tied_embeddings: bool = True
+    moe: Optional[MoECfg] = None
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    frontend: Optional[str] = None   # None | "audio" | "vision"
+    family: str = "dense"            # dense | moe | hybrid | ssm | audio | vlm
+    # which shapes are runnable (long_500k needs sub-quadratic attention)
+    supports_long: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(s.period) * s.n_periods for s in self.segments)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model FLOPs)."""
+        return int(sum(np.prod(np.asarray(l.shape))
+                       for l in jax.tree.leaves(
+                           jax.eval_shape(lambda: init_params(
+                               jax.random.PRNGKey(0), self)))))
+
+
+# ---------------------------------------------------------------------------
+# per-block init/apply
+# ---------------------------------------------------------------------------
+
+def _init_block(rng, cfg: ArchCfg, bcfg: BlockCfg):
+    ks = jax.random.split(rng, 4)
+    p = {"norm1": init_rmsnorm(cfg.d_model)}
+    if bcfg.mixer == "attn":
+        p["mixer"] = attn_mod.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim)
+    elif bcfg.mixer == "mamba2":
+        p["mixer"] = ssm_mod.init_mamba2(
+            ks[0], cfg.d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim)
+    elif bcfg.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(ks[0], cfg.d_model, cfg.n_heads)
+    elif bcfg.mixer == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(ks[0], cfg.d_model, cfg.n_heads)
+    elif bcfg.mixer == "shared_attn":
+        pass                       # weights live outside the scan
+    else:
+        raise ValueError(bcfg.mixer)
+
+    if bcfg.cross_attn:
+        p["norm_cross"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn_mod.init_attention(
+            ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim)
+
+    if bcfg.ffn == "dense":
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["ffn"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff)
+    elif bcfg.ffn == "moe":
+        m = cfg.moe
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["ffn"] = moe_mod.init_moe(ks[2], cfg.d_model, m.d_ff_expert,
+                                    m.n_experts, m.n_shared, m.d_ff_shared)
+    return p
+
+
+def _mixer_cache_init(cfg: ArchCfg, bcfg: BlockCfg, batch: int, seq: int,
+                      shared_params=None):
+    """Zero cache for one block (decode).  SWA layers get window-sized
+    ring buffers — the long_500k memory win."""
+    if bcfg.mixer in ("attn", "shared_attn"):
+        cache_len = min(seq, bcfg.window) if bcfg.window else seq
+        return KVCache.zeros(batch, cache_len, cfg.n_kv, cfg.head_dim)
+    if bcfg.mixer == "mamba2":
+        proto = shared_params if shared_params is not None else None
+        p = proto or ssm_mod.init_mamba2(jax.random.PRNGKey(0), cfg.d_model,
+                                         cfg.ssm_state, cfg.ssm_expand,
+                                         cfg.ssm_head_dim)
+        return ssm_mod.mamba2_init_state(p, batch)
+    if bcfg.mixer == "mlstm":
+        p = xlstm_mod.init_mlstm(jax.random.PRNGKey(0), cfg.d_model, cfg.n_heads)
+        return xlstm_mod.mlstm_init_state(p, batch)
+    if bcfg.mixer == "slstm":
+        p = xlstm_mod.init_slstm(jax.random.PRNGKey(0), cfg.d_model, cfg.n_heads)
+        return xlstm_mod.slstm_init_state(p, batch)
+    raise ValueError(bcfg.mixer)
+
+
+def _apply_block_train(p, cfg: ArchCfg, bcfg: BlockCfg, x, shared_attn_params,
+                       memory=None, causal=True, opts=DEFAULT_OPTS):
+    window = float(bcfg.window) if bcfg.window else float(x.shape[1] + 1)
+    h = opts.pin(rmsnorm(p["norm1"], x))
+    if bcfg.mixer in ("attn", "shared_attn"):
+        mp = p["mixer"] if bcfg.mixer == "attn" else shared_attn_params
+        h = attn_mod.attention_train(
+            mp, h, window=window, softcap=cfg.softcap,
+            rope_theta=cfg.rope_theta, causal=causal)
+    elif bcfg.mixer == "mamba2":
+        h = ssm_mod.mamba2_train(p["mixer"], h)
+    elif bcfg.mixer == "mlstm":
+        h = xlstm_mod.mlstm_train(p["mixer"], h)
+    elif bcfg.mixer == "slstm":
+        h = xlstm_mod.slstm_train(p["mixer"], h)
+    x = x + h
+
+    if bcfg.cross_attn:
+        h = opts.pin(rmsnorm(p["norm_cross"], x))
+        h = attn_mod.attention_train(
+            p["cross"], h, window=float(memory.shape[1] + 1),
+            softcap=cfg.softcap, rope_theta=cfg.rope_theta,
+            causal=False, memory=memory)
+        x = x + h
+
+    x = opts.constrain(x)
+    if bcfg.ffn == "dense":
+        x = x + mlp(p["ffn"], opts.pin(rmsnorm(p["norm2"], x)), cfg.act)
+    elif bcfg.ffn == "moe":
+        x = x + moe_mod.moe(p["ffn"], opts.pin(rmsnorm(p["norm2"], x)),
+                            top_k=cfg.moe.top_k,
+                            capacity_factor=cfg.moe.capacity_factor,
+                            activation=cfg.act)
+    return opts.constrain(x)
+
+
+def _apply_block_decode(p, cfg: ArchCfg, bcfg: BlockCfg, x, cache, pos,
+                        shared_attn_params, memory=None, opts=DEFAULT_OPTS):
+    window = float(bcfg.window) if bcfg.window else 2.0 ** 31
+    h = rmsnorm(p["norm1"], x)
+    if bcfg.mixer in ("attn", "shared_attn"):
+        mp = p["mixer"] if bcfg.mixer == "attn" else shared_attn_params
+        h, cache = attn_mod.attention_decode(
+            mp, h, cache, pos, window=window, softcap=cfg.softcap,
+            rope_theta=cfg.rope_theta,
+            cache_constraint=opts.cache_constraint())
+    elif bcfg.mixer == "mamba2":
+        h, cache = ssm_mod.mamba2_decode(p["mixer"], h, cache)
+    elif bcfg.mixer == "mlstm":
+        h, cache = xlstm_mod.mlstm_decode(p["mixer"], h, cache)
+    elif bcfg.mixer == "slstm":
+        h, cache = xlstm_mod.slstm_decode(p["mixer"], h, cache)
+    x = x + h
+
+    if bcfg.cross_attn:
+        h = rmsnorm(p["norm_cross"], x)
+        h, _ = attn_mod.attention_decode(
+            p["cross"], h, cache=None, pos=pos, window=2.0 ** 31,
+            softcap=cfg.softcap, rope_theta=cfg.rope_theta, memory=memory)
+        x = x + h
+
+    if bcfg.ffn == "dense":
+        x = x + mlp(p["ffn"], rmsnorm(p["norm2"], x), cfg.act)
+    elif bcfg.ffn == "moe":
+        x = x + moe_mod.moe(p["ffn"], rmsnorm(p["norm2"], x),
+                            top_k=cfg.moe.top_k,
+                            capacity_factor=cfg.moe.capacity_factor,
+                            activation=cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# segments (scan over periods)
+# ---------------------------------------------------------------------------
+
+def _init_segment(rng, cfg: ArchCfg, seg: Segment):
+    """Stacked period params: leaf shapes get a leading [n_periods] axis."""
+    def one_period(r):
+        ks = jax.random.split(r, len(seg.period))
+        return {f"b{i}": _init_block(ks[i], cfg, b)
+                for i, b in enumerate(seg.period)}
+    rngs = jax.random.split(rng, seg.n_periods)
+    periods = [one_period(r) for r in rngs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+
+
+def _segment_train(seg_params, cfg: ArchCfg, seg: Segment, x,
+                   shared_attn_params, memory=None, causal=True,
+                   remat: bool = True, unroll: bool = False,
+                   opts=DEFAULT_OPTS):
+    def body(carry, period_params):
+        h = carry
+        for i, b in enumerate(seg.period):
+            h = _apply_block_train(period_params[f"b{i}"], cfg, b, h,
+                                   shared_attn_params, memory, causal, opts)
+        return h, None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if unroll:
+        # cost-probe mode: XLA's HloCostAnalysis counts while bodies once,
+        # so roofline probes lower the stack unrolled (see launch/dryrun.py)
+        for i in range(seg.n_periods):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], seg_params))
+        return x
+    x, _ = jax.lax.scan(body, x, seg_params)
+    return x
+
+
+def _segment_decode(seg_params, cfg: ArchCfg, seg: Segment, x, seg_cache, pos,
+                    shared_attn_params, memory=None, unroll: bool = False,
+                    opts=DEFAULT_OPTS):
+    def body(carry, scanned):
+        h = carry
+        period_params, period_cache = scanned
+        new_cache = {}
+        for i, b in enumerate(seg.period):
+            h, c = _apply_block_decode(period_params[f"b{i}"], cfg, b, h,
+                                       period_cache[f"b{i}"], pos,
+                                       shared_attn_params, memory, opts)
+            new_cache[f"b{i}"] = c
+        return h, new_cache
+    if unroll:
+        outs = []
+        for i in range(seg.n_periods):
+            x, nc = body(x, jax.tree.map(lambda a: a[i],
+                                         (seg_params, seg_cache)))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_cache
+    x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+    return x, new_cache
+
+
+def _init_segment_cache(cfg: ArchCfg, seg: Segment, batch: int, seq: int):
+    def one():
+        return {f"b{i}": _mixer_cache_init(cfg, b, batch, seq)
+                for i, b in enumerate(seg.period)}
+    protos = [one() for _ in range(seg.n_periods)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *protos)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _has_shared_attn(cfg: ArchCfg) -> bool:
+    return any(b.mixer == "shared_attn"
+               for s in cfg.segments for b in s.period)
+
+
+def init_params(rng, cfg: ArchCfg):
+    ks = jax.random.split(rng, 8)
+    p = {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "segments": [
+            _init_segment(jax.random.fold_in(ks[1], i), cfg, s)
+            for i, s in enumerate(cfg.segments)],
+    }
+    if not cfg.tied_embeddings:
+        p["unembed"] = init_dense(ks[2], cfg.d_model, cfg.vocab)
+    if _has_shared_attn(cfg):
+        p["shared_attn"] = attn_mod.init_attention(
+            ks[3], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim)
+    if cfg.enc_segments:
+        p["enc_segments"] = [
+            _init_segment(jax.random.fold_in(ks[4], i), cfg, s)
+            for i, s in enumerate(cfg.enc_segments)]
+        p["enc_norm"] = init_rmsnorm(cfg.d_model)
+    if cfg.frontend is not None:
+        # modality stub: a linear adapter over PRECOMPUTED frame/patch
+        # embeddings (input_specs supplies them; the real frontend is out of
+        # scope per the assignment)
+        p["frontend"] = init_dense(ks[5], cfg.d_model, cfg.d_model)
+    return p
+
+
+def _encode(params, cfg: ArchCfg, enc_embeddings, remat=True, unroll=False,
+            opts=DEFAULT_OPTS):
+    x = dense(params["frontend"], enc_embeddings) if cfg.frontend else enc_embeddings
+    for seg_p, seg in zip(params["enc_segments"], cfg.enc_segments):
+        x = _segment_train(seg_p, cfg, seg, x, None, causal=False,
+                           remat=remat, unroll=unroll, opts=opts)
+    return rmsnorm(params["enc_norm"], x)
+
+
+def forward_train(params, cfg: ArchCfg, tokens, enc_embeddings=None,
+                  remat: bool = True, compute_dtype=jnp.bfloat16,
+                  unroll: bool = False, opts=DEFAULT_OPTS):
+    """Logits for next-token prediction.  tokens: [B, S] int32."""
+    memory = None
+    if cfg.enc_segments:
+        memory = _encode(params, cfg, enc_embeddings.astype(compute_dtype),
+                         remat=remat, unroll=unroll, opts=opts)
+    x = embed(params["embed"], tokens, compute_dtype)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), compute_dtype)
+    shared = params.get("shared_attn")
+    for seg_p, seg in zip(params["segments"], cfg.segments):
+        x = _segment_train(seg_p, cfg, seg, x, shared, memory=memory,
+                           remat=remat, unroll=unroll, opts=opts)
+    # SP residual ends here: gather the sequence back before the norm+vocab
+    if opts.sp_residual and opts.mesh is not None:
+        import jax as _jax
+        from jax.sharding import NamedSharding as _NS, PartitionSpec as _P
+        dp = tuple(a for a in ("pod", "data") if a in opts.mesh.axis_names)
+        x = _jax.lax.with_sharding_constraint(
+            x, _NS(opts.mesh, _P(dp, None, None)))
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tied_embeddings:
+        return unembed(params["embed"], x)
+    return dense(params["unembed"], x)
+
+
+def init_cache(cfg: ArchCfg, batch: int, seq: int):
+    """Decode cache for a maximum context of ``seq``."""
+    return {
+        "seg_caches": [_init_segment_cache(cfg, s, batch, seq)
+                       for s in cfg.segments],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward_decode(params, cfg: ArchCfg, token, cache, enc_memory=None,
+                   compute_dtype=jnp.bfloat16, unroll: bool = False,
+                   opts=DEFAULT_OPTS):
+    """One decode step.  token: [B, 1] int32 -> (logits [B, 1, V], cache)."""
+    x = embed(params["embed"], token, compute_dtype)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), compute_dtype)
+    pos = cache["pos"]
+    shared = params.get("shared_attn")
+    new_segs = []
+    for seg_p, seg, seg_c in zip(params["segments"], cfg.segments,
+                                 cache["seg_caches"]):
+        x, nc = _segment_decode(seg_p, cfg, seg, x, seg_c, pos, shared,
+                                memory=enc_memory, unroll=unroll, opts=opts)
+        new_segs.append(nc)
+    x = rmsnorm(params["final_norm"], x)
+    logits = (unembed(params["embed"], x) if cfg.tied_embeddings
+              else dense(params["unembed"], x))
+    return logits, {"seg_caches": new_segs, "pos": pos + 1}
+
+
+def encode(params, cfg: ArchCfg, enc_embeddings, compute_dtype=jnp.bfloat16):
+    """Public encoder entry (serving: run once per request batch)."""
+    return _encode(params, cfg, enc_embeddings.astype(compute_dtype),
+                   remat=False)

@@ -1,0 +1,181 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, sequential recurrence).
+
+mLSTM training uses the stabilised parallel (quadratic) form — a
+decay-masked attention-like matmul, MXU-friendly like standard attention.
+Decode is the O(d^2)-per-head recurrent update, which is what qualifies
+xlstm-350m for ``long_500k``.
+
+sLSTM's gates depend on the previous hidden state, so training runs a
+``lax.scan`` over time (sequential by construction — noted in DESIGN.md;
+xLSTM interleaves only a few sLSTM blocks for this reason).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(rng, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        "wq": jax.random.normal(ks[0], (d_model, n_heads, hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d_model, n_heads, hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d_model, n_heads, hd), jnp.float32) * s,
+        "w_if": jax.random.normal(ks[3], (d_model, n_heads, 2), jnp.float32) * s,
+        "wo_gate": jax.random.normal(ks[4], (d_model, d_model), jnp.float32) * s,
+        "w_out": jax.random.normal(ks[5], (d_model, d_model), jnp.float32) * s,
+    }
+
+
+def mlstm_train(p, x):
+    """Stabilised parallel mLSTM.  x: [B, S, D]."""
+    B, S, D = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt)).astype(jnp.float32)
+    gates = jnp.einsum("bsd,dhg->bshg", x, p["w_if"].astype(dt)).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[..., 0])            # log sigmoid(i)
+    log_f = -jax.nn.softplus(-gates[..., 1])            # log sigmoid(f)
+
+    hd = q.shape[-1]
+    F = jnp.cumsum(log_f, axis=1)                       # [B,S,H]
+    # D[t,s] = exp(F_t - F_s + log_i_s) for s <= t (log-space, stabilised)
+    logD = (F[:, :, None, :] - F[:, None, :, :]
+            + log_i[:, None, :, :])                     # [B,t,s,H]
+    mask = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    logD = jnp.where(mask, logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)            # stabiliser [B,t,1,H]
+    Dmat = jnp.exp(logD - m)
+
+    scores = jnp.einsum("bthk,bshk->btsh", q, k) / np.sqrt(hd)
+    w = scores * Dmat
+    num = jnp.einsum("btsh,bshk->bthk", w, v)
+    den = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0, :]))
+    h = num / den[..., None]                            # [B,S,H,hd]
+
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"].astype(dt))
+                       .astype(jnp.float32))
+    h = (h.reshape(B, S, D) * o).astype(dt)
+    return jnp.einsum("bsd,de->bse", h, p["w_out"].astype(dt))
+
+
+def mlstm_init_state(p, batch: int, dtype=jnp.float32):
+    D, H, hd = p["wq"].shape
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), dtype),   # matrix memory
+        "n": jnp.zeros((batch, H, hd), dtype),       # normaliser
+        "m": jnp.full((batch, H), -1e30, dtype),     # stabiliser
+    }
+
+
+def mlstm_decode(p, x, state):
+    """O(d^2) recurrent step.  x: [B, 1, D]."""
+    B, _, D = x.shape
+    dt = x.dtype
+    xt = x[:, 0]
+    q = jnp.einsum("bd,dhk->bhk", xt, p["wq"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bd,dhk->bhk", xt, p["wk"].astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", xt, p["wv"].astype(dt)).astype(jnp.float32)
+    gates = jnp.einsum("bd,dhg->bhg", xt, p["w_if"].astype(dt)).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-gates[..., 0])
+    log_f = -jax.nn.softplus(-gates[..., 1])
+
+    hd = q.shape[-1]
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    C = state["C"] * f_s[..., None, None] + i_s[..., None, None] * (
+        v[..., :, None] * k[..., None, :])              # [B,H,hd,hd]
+    n = state["n"] * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q) / np.sqrt(hd)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)) / np.sqrt(hd),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+
+    o = jax.nn.sigmoid(jnp.einsum("bd,de->be", xt, p["wo_gate"].astype(dt))
+                       .astype(jnp.float32))
+    h = (h.reshape(B, D) * o).astype(dt)
+    out = jnp.einsum("bd,de->be", h, p["w_out"].astype(dt))[:, None, :]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 3)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        # input weights for [z, i, f, o]
+        "w_in": jax.random.normal(ks[0], (d_model, n_heads, 4 * hd),
+                                  jnp.float32) * s,
+        # block-diagonal recurrent weights per head
+        "r": jax.random.normal(ks[1], (n_heads, hd, 4 * hd),
+                               jnp.float32) / np.sqrt(hd),
+        "w_out": jax.random.normal(ks[2], (d_model, d_model),
+                                   jnp.float32) * s,
+    }
+
+
+def slstm_init_state(p, batch: int, dtype=jnp.float32):
+    D, H, four_hd = p["w_in"].shape
+    hd = four_hd // 4
+    return {
+        "h": jnp.zeros((batch, H, hd), dtype),
+        "c": jnp.zeros((batch, H, hd), dtype),
+        "n": jnp.ones((batch, H, hd), dtype),
+        "m": jnp.zeros((batch, H), dtype),
+    }
+
+
+def _slstm_cell(p, state, u):
+    """u: [B, H, 4*hd] pre-activation input for one step."""
+    hd = u.shape[-1] // 4
+    rec = jnp.einsum("bhk,hkg->bhg", state["h"], p["r"])
+    z, i, f, o = jnp.split(u + rec, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f)                         # sigmoid forget
+    m_new = jnp.maximum(log_f.mean(-1) + state["m"], i.mean(-1))
+    i_s = jnp.exp(i - m_new[..., None])
+    f_s = jnp.exp(log_f + (state["m"] - m_new)[..., None])
+    c = f_s * state["c"] + i_s * jnp.tanh(z)
+    n = f_s * state["n"] + i_s
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_train(p, x):
+    """Sequential scan over time.  x: [B, S, D]."""
+    B, S, D = x.shape
+    dt = x.dtype
+    u = jnp.einsum("bsd,dhg->bshg", x, p["w_in"].astype(dt)).astype(jnp.float32)
+    state0 = slstm_init_state(p, B)
+
+    def step(state, u_t):
+        new = _slstm_cell(p, state, u_t)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, u.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(dt)
+    return jnp.einsum("bsd,de->bse", h, p["w_out"].astype(dt))
+
+
+def slstm_decode(p, x, state):
+    dt = x.dtype
+    u = jnp.einsum("bd,dhg->bhg", x[:, 0],
+                   p["w_in"].astype(dt)).astype(jnp.float32)
+    new = _slstm_cell(p, state, u)
+    B, D = x.shape[0], x.shape[2]
+    h = new["h"].reshape(B, D).astype(dt)
+    return jnp.einsum("bd,de->be", h, p["w_out"].astype(dt))[:, None, :], new

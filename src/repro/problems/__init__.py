@@ -1,0 +1,16 @@
+"""The paper's three problem domains (§3), with full optimization
+formulations, POP-able operator forms, and the heuristic baselines the
+paper compares against (Gandiva-like packing, CSPF, E-Store greedy)."""
+
+from .cluster_scheduling import GavelProblem, gandiva_heuristic, make_cluster_workload
+from .traffic_engineering import (
+    TrafficProblem, cspf_heuristic, make_topology, make_demands, k_shortest_paths,
+)
+from .load_balancing import LoadBalanceProblem, estore_greedy, make_shard_workload
+
+__all__ = [
+    "GavelProblem", "gandiva_heuristic", "make_cluster_workload",
+    "TrafficProblem", "cspf_heuristic", "make_topology", "make_demands",
+    "k_shortest_paths",
+    "LoadBalanceProblem", "estore_greedy", "make_shard_workload",
+]

@@ -1,0 +1,4 @@
+"""Cluster scheduling (POP-Gavel) + fault tolerance/elasticity runtime."""
+from .gavel_service import GavelScheduler, SchedulerConfig, JobSpec
+from .elastic import (HeartbeatMonitor, StragglerDetector, plan_remesh,
+                      scale_microbatches, redispatch, speculative_backups)

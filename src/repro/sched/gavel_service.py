@@ -1,0 +1,114 @@
+"""Cluster scheduler service: POP-accelerated Gavel for the training fleet.
+
+This is where the paper's technique becomes a first-class feature of the
+framework: the scheduler periodically recomputes the fleet-wide max-min
+fair allocation of accelerator types to training jobs (the LM archs in
+``repro.configs``) by solving the Gavel LP through POP — so a 10k-job fleet
+reallocates in seconds instead of the ~30 minutes the paper quotes for the
+full formulation.
+
+Flow per scheduling round:
+    observe() -> jobs + measured throughputs     (from job heartbeats)
+    allocate() -> POP-k Gavel solve              (core/pop + problems/*)
+    to_assignments() -> per-job (resource type, time fraction) leases
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import pop
+from ..problems.cluster_scheduling import ClusterWorkload, GavelProblem
+
+
+@dataclasses.dataclass
+class JobSpec:
+    job_id: str
+    arch: str                   # one of repro.configs.ARCH_IDS
+    priority: float = 1.0
+    n_workers: int = 1
+    # measured tokens/sec per accelerator type (filled by heartbeats)
+    throughputs: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    resource_types: tuple = ("tpu_v5e", "tpu_v4", "gpu_h100")
+    num_workers: tuple = (256, 256, 256)
+    pop_k: int = 8
+    space_sharing: bool = False
+    round_seconds: float = 300.0
+    # equilibrate: probe-based operator scaling — measured -29% iterations
+    # on Gavel-type LPs (EXPERIMENTS.md §Perf cell 3)
+    solver_kw: dict = dataclasses.field(default_factory=lambda: dict(
+        max_iters=20_000, tol_primal=1e-4, tol_gap=1e-4, equilibrate=True))
+
+
+class GavelScheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.jobs: Dict[str, JobSpec] = {}
+        self.last_alloc: Optional[np.ndarray] = None
+        self.last_round_time: float = 0.0
+
+    # ------------------------------------------------------------- job API --
+    def submit(self, job: JobSpec):
+        if job.throughputs is None:
+            # cold-start prior: arch-family default speedup profile
+            job.throughputs = np.array([1.0, 0.6, 0.8]) * (
+                0.5 + abs(hash(job.arch)) % 1000 / 1000.0)
+        self.jobs[job.job_id] = job
+
+    def remove(self, job_id: str):
+        self.jobs.pop(job_id, None)
+
+    def report_throughput(self, job_id: str, measured: np.ndarray):
+        """Heartbeat path: refine T with live measurements (EMA)."""
+        j = self.jobs[job_id]
+        j.throughputs = 0.7 * j.throughputs + 0.3 * measured
+
+    # ---------------------------------------------------------- scheduling --
+    def _workload(self) -> ClusterWorkload:
+        jobs = list(self.jobs.values())
+        T = np.stack([j.throughputs for j in jobs])
+        return ClusterWorkload(
+            T=T,
+            w=np.array([j.priority for j in jobs]),
+            z=np.array([float(j.n_workers) for j in jobs]),
+            num_workers=np.asarray(self.cfg.num_workers, np.float64),
+            interference=np.full(len(jobs), 0.8),
+            job_type=np.zeros(len(jobs), np.int64),
+        )
+
+    def allocate(self) -> Dict[str, np.ndarray]:
+        """One scheduling round: POP-k Gavel solve -> {job: X_row}."""
+        if not self.jobs:
+            return {}
+        t0 = time.perf_counter()
+        wl = self._workload()
+        prob = GavelProblem(wl, space_sharing=self.cfg.space_sharing)
+        k = max(1, min(self.cfg.pop_k, len(self.jobs) // 8))
+        if k > 1:
+            res = pop.pop_solve(prob, k, strategy="stratified",
+                                solver_kw=self.cfg.solver_kw)
+            rho = res.alloc
+        else:
+            rho, _, _, _ = pop.solve_full(prob, solver_kw=self.cfg.solver_kw)
+        self.last_round_time = time.perf_counter() - t0
+        self.last_alloc = rho
+        return {j.job_id: rho[i] for i, j in enumerate(self.jobs.values())}
+
+    def fairness_report(self) -> dict:
+        if self.last_alloc is None:
+            return {}
+        rho = np.atleast_1d(self.last_alloc)
+        return {
+            "min_norm_throughput": float(rho.min()),
+            "mean_norm_throughput": float(rho.mean()),
+            "round_time_s": self.last_round_time,
+            "n_jobs": len(self.jobs),
+        }

@@ -1,0 +1,2 @@
+"""Serving substrate: KV/state-cached decode engine + POP request balancer."""
+from .engine import ServeConfig, make_serve_step, jit_serve_step, prefill

@@ -1,0 +1,87 @@
+"""Serving engine: batched prefill + decode with donated caches.
+
+``serve_step`` is the unit the decode_32k / long_500k dry-run cells lower:
+one new token against a KV/state cache of ``seq_len``, cache donated so the
+update is in-place at the XLA level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import transformer as tf
+from ..launch import shardings as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_seq: int
+    compute_dtype: str = "bfloat16"
+    shard_cache_seq: bool = False     # long-context mode (batch too small)
+    unroll_segments: bool = False     # cost-probe mode (see launch/dryrun.py)
+    cache_seq_on_model: bool = False  # §Perf: flash-decode cache layout
+
+
+def make_serve_step(cfg: tf.ArchCfg, scfg: ServeConfig,
+                    mesh: Optional[Mesh] = None):
+    dtype = jnp.bfloat16 if scfg.compute_dtype == "bfloat16" else jnp.float32
+    opts = tf.ModelOpts(cache_seq_on_model=scfg.cache_seq_on_model, mesh=mesh)
+
+    def serve_step(params, cache, token, enc_memory=None):
+        logits, cache = tf.forward_decode(params, cfg, token, cache,
+                                          enc_memory=enc_memory,
+                                          compute_dtype=dtype,
+                                          unroll=scfg.unroll_segments,
+                                          opts=opts)
+        # greedy next token (sampling plugs in here)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+
+    return serve_step
+
+
+def jit_serve_step(cfg: tf.ArchCfg, scfg: ServeConfig, mesh: Mesh,
+                   params_shape, cache_shape, has_memory: bool = False):
+    p_shard = sh.param_shardings(params_shape, mesh)
+    c_specs = sh.kv_cache_specs(cache_shape, mesh, scfg.batch,
+                                shard_seq=scfg.shard_cache_seq,
+                                seq_on_model=scfg.cache_seq_on_model)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+    dp = sh.dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tok_spec = P(dp, None) if scfg.batch % max(n_dp, 1) == 0 else P(None, None)
+    t_shard = NamedSharding(mesh, tok_spec)
+
+    in_sh = [p_shard, c_shard, t_shard]
+    if has_memory:
+        mem_spec = (P(dp, None, None) if scfg.batch % max(n_dp, 1) == 0
+                    else P(None, None, None))
+        in_sh.append(NamedSharding(mesh, mem_spec))
+
+    step = make_serve_step(cfg, scfg, mesh)
+    return jax.jit(
+        step,
+        in_shardings=tuple(in_sh),
+        out_shardings=(t_shard, c_shard),
+        donate_argnums=(1,),          # cache updated in place
+    )
+
+
+def prefill(params, cfg: tf.ArchCfg, tokens, cache,
+            compute_dtype=jnp.bfloat16):
+    """Sequential prefill via the decode path (correct for ring buffers and
+    SSM state; a fused chunked prefill is a serving optimisation tracked in
+    EXPERIMENTS.md §Perf)."""
+    def body(cache, tok):
+        _, cache = tf.forward_decode(params, cfg, tok[:, None], cache,
+                                     compute_dtype=compute_dtype)
+        return cache, None
+    cache, _ = jax.lax.scan(body, cache, tokens.T)
+    return cache

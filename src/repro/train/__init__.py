@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, sharded train step, gradient compression."""
+from .optimizer import AdamWConfig, AdamWState, init_state, apply_updates
+from .train_step import TrainConfig, make_train_step, jit_train_step, cross_entropy

@@ -1,0 +1,7 @@
+"""Shared pytest config: deterministic hypothesis profile (reproducible CI
+across runs — property tests explore a fixed corpus)."""
+
+from hypothesis import settings
+
+settings.register_profile("ci", derandomize=True, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs
+(full configs are exercised only via the dry-run's ShapeDtypeStructs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import (forward_decode, forward_train, init_cache,
+                          init_params, encode)
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def _batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.enc_segments:
+        out["enc_embeddings"] = jnp.asarray(
+            rng.normal(0, 1, (B, 32, cfg.d_model)), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b = _batch(cfg)
+    logits = forward_train(params, cfg, b["tokens"],
+                           enc_embeddings=b.get("enc_embeddings"))
+    assert logits.shape == (2, 64, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = opt_mod.init_state(params)
+    tcfg = TrainConfig(n_microbatches=2,
+                       adamw=opt_mod.AdamWConfig(warmup_steps=1, total_steps=4))
+    step = jax.jit(make_train_step(cfg, tcfg, mesh=None))
+    params2, opt2, metrics = step(params, opt, _batch(cfg, B=4))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    deltas = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                          params, params2)
+    assert max(jax.tree.leaves(deltas)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    b = _batch(cfg)
+    cache = init_cache(cfg, 2, 96)
+    memory = (encode(params, cfg, b["enc_embeddings"])
+              if cfg.enc_segments else None)
+    logits, cache2 = forward_decode(params, cfg, b["tokens"][:, :1], cache,
+                                    enc_memory=memory)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert int(cache2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full-size configs must carry the EXACT assigned hyperparams."""
+    spec = {
+        "h2o_danube3_4b": dict(L=24, d=3840, H=32, kv=8, ff=10240, V=32000),
+        "gemma3_4b": dict(L=34, d=2560, H=8, kv=4, ff=10240, V=262144),
+        "gemma2_27b": dict(L=46, d=4608, H=32, kv=16, ff=36864, V=256000),
+        "llama3_8b": dict(L=32, d=4096, H=32, kv=8, ff=14336, V=128256),
+        "mixtral_8x22b": dict(L=56, d=6144, H=48, kv=8, ff=16384, V=32768),
+        "qwen2_moe_a2_7b": dict(L=24, d=2048, H=16, kv=16, ff=1408, V=151936),
+        "zamba2_2_7b": dict(L=63, d=2560, H=32, kv=32, ff=10240, V=32000),
+        "seamless_m4t_medium": dict(L=12, d=1024, H=16, kv=16, ff=4096,
+                                    V=256206),
+        "chameleon_34b": dict(L=48, d=8192, H=64, kv=8, ff=22016, V=65536),
+        "xlstm_350m": dict(L=24, d=1024, H=4, kv=4, ff=0, V=50304),
+    }[arch]
+    cfg = get_config(arch)
+    assert cfg.d_model == spec["d"]
+    assert cfg.n_heads == spec["H"]
+    assert cfg.n_kv == spec["kv"]
+    assert cfg.vocab == spec["V"]
+    if cfg.moe is not None:
+        assert cfg.moe.d_ff_expert == spec["ff"]
+    elif spec["ff"]:
+        assert cfg.d_ff == spec["ff"]
+    # zamba2: 54 mamba + 9 shared-attn applications = 63 block applications;
+    # the assignment's "54L" counts the mamba layers
+    if arch == "zamba2_2_7b":
+        mamba_layers = sum(
+            sum(1 for b in s.period if b.mixer == "mamba2") * s.n_periods
+            for s in cfg.segments)
+        assert mamba_layers == 54
+    elif arch == "seamless_m4t_medium":
+        assert cfg.n_layers == 12                  # + 12 encoder layers
+        enc_layers = sum(len(s.period) * s.n_periods for s in cfg.enc_segments)
+        assert enc_layers == 12
+    else:
+        assert cfg.n_layers == spec["L"]
+
+
+@pytest.mark.parametrize("arch,expected_b", [
+    ("h2o_danube3_4b", 3.8e9), ("llama3_8b", 8.0e9),
+    ("gemma2_27b", 27e9), ("mixtral_8x22b", 140e9),
+    ("chameleon_34b", 34e9),
+])
+def test_param_counts_in_range(arch, expected_b):
+    """Full configs land within 20% of the published parameter count."""
+    cfg = get_config(arch)
+    import repro.launch.specs as sp
+    flat = jax.tree.leaves(sp.params_shape(cfg))
+    n = sum(int(np.prod(l.shape)) for l in flat)
+    assert 0.8 * expected_b < n < 1.25 * expected_b, f"{arch}: {n:.3g}"

@@ -1,0 +1,131 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode on CPU) vs ref.py
+pure-jnp oracles, across shapes and dtypes, plus hypothesis property tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+SHAPES = [
+    (1, 128, 128),     # single sub-problem, exactly one block
+    (2, 256, 256),     # block-aligned
+    (3, 300, 180),     # ragged (exercise padding)
+    (4, 64, 512),      # wide
+    (2, 512, 64),      # tall
+    (8, 129, 257),     # off-by-one over block edges
+]
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(shape_kmn, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    k, M, N = shape_kmn
+    A = jnp.asarray(rng.normal(size=(k, M, N)), dtype)
+    x = jnp.asarray(rng.normal(size=(k, N)), dtype)
+    y = jnp.asarray(rng.normal(size=(k, M)), dtype)
+    return A, x, y
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bmatvec_matches_ref(shape, dtype):
+    A, x, _ = _mk(shape, dtype)
+    got = ops.bmatvec(A, x)
+    want = ref.bmatvec(A, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bmatvec_t_matches_ref(shape, dtype):
+    A, _, y = _mk(shape, dtype)
+    got = ops.bmatvec_t(A, y)
+    want = ref.bmatvec_t(A, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_primal_step_matches_ref(shape):
+    rng = np.random.default_rng(1)
+    k, M, N = shape
+    A, x, y = _mk(shape, jnp.float32, seed=1)
+    x = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
+    l = jnp.asarray(rng.normal(size=(k, N)) - 2.0, jnp.float32)
+    u = l + jnp.asarray(rng.uniform(0.5, 3.0, (k, N)), jnp.float32)
+    tau = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
+    xn, xb = ops.fused_primal_step(A, y, x, c, l, u, tau)
+    rn, rb = ref.fused_primal_step(A, y, x, c, l, u, tau[:, None])
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(rn), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xb), np.asarray(rb), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_dual_step_matches_ref(shape):
+    rng = np.random.default_rng(2)
+    k, M, N = shape
+    A, x, y = _mk(shape, jnp.float32, seed=2)
+    q = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
+    mask = jnp.asarray(rng.random((k, M)) < 0.6)
+    yn = ops.fused_dual_step(A, x, y, q, sigma, mask)
+    rn = ref.fused_dual_step(A, x, y, q, sigma[:, None], mask)
+    np.testing.assert_allclose(np.asarray(yn), np.asarray(rn), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    m=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bmatvec_arbitrary_shapes(k, m, n, seed):
+    """Padding logic must be exact for ANY shape (property: pad+slice == ref)."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(k, m, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.bmatvec(A, x, block_m=128, block_n=128)),
+        np.asarray(ref.bmatvec(A, x)), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fused_primal_respects_box(seed):
+    """Property: fused primal output ALWAYS lies inside [l, u]."""
+    rng = np.random.default_rng(seed)
+    k, M, N = 2, 160, 96
+    A = jnp.asarray(rng.normal(size=(k, M, N)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(k, N)) * 10, jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
+    l = jnp.asarray(rng.normal(size=(k, N)) - 1, jnp.float32)
+    u = l + jnp.asarray(rng.uniform(0.0, 2.0, (k, N)), jnp.float32)
+    tau = jnp.asarray(rng.uniform(0.001, 1.0, k), jnp.float32)
+    xn, _ = ops.fused_primal_step(A, y, x, c, l, u, tau)
+    assert bool(jnp.all(xn >= l - 1e-6) & jnp.all(xn <= u + 1e-6))
+
+
+def test_block_size_sweep():
+    """Results are block-size independent (tiling must not change math)."""
+    rng = np.random.default_rng(3)
+    A = jnp.asarray(rng.normal(size=(2, 384, 320)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 320)), jnp.float32)
+    base = np.asarray(ref.bmatvec(A, x))
+    for bm, bn in [(128, 128), (256, 128), (128, 256), (384, 320)]:
+        got = np.asarray(ops.bmatvec(A, x, block_m=bm, block_n=bn))
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,118 @@
+"""Launch-layer units: HLO collective parser, input specs, shape policy,
+mesh planning — everything the dry-run/roofline pipeline depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as sp
+from repro.launch.hlo_stats import active_param_counts, collective_bytes
+
+
+# ---------------------------------------------------------------------------
+# collective_bytes parser
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule jit_step
+ENTRY %main {
+  %all-reduce.37 = f32[2,4096,4096]{2,1,0} all-reduce(%fusion.1), channel_id=7
+  %misleading-name = f32[8,8]{1,0} add(%all-reduce.37, %all-reduce.37)
+  %ag = bf16[16,128]{1,0} all-gather(%p0), dimensions={0}
+  %t = (f32[4,4]{1,0}, f32[2]{0}) all-reduce(%a, %b), channel_id=9
+  %ar2 = f32[10]{0} all-reduce-start(%x), channel_id=11
+  %done = f32[10]{0} all-reduce-done(%ar2)
+  %cp = u8[32]{0} collective-permute(%y), source_target_pairs={{0,1}}
+  ROOT %r = f32[2]{0} reduce-scatter(%z), dimensions={0}
+}
+"""
+
+
+def test_collective_parser_counts_results_only():
+    out = collective_bytes(HLO_SAMPLE)
+    ar = 2 * 4096 * 4096 * 4 + (4 * 4 * 4 + 2 * 4) + 10 * 4   # .37 + tuple + start
+    assert out["all-reduce"] == ar
+    assert out["all-gather"] == 16 * 128 * 2
+    assert out["collective-permute"] == 32
+    assert out["reduce-scatter"] == 2 * 4
+    # `add` of an all-reduce-named operand must NOT count;
+    # `-done` must not double count
+    assert out["count"] == 6
+    assert out["total"] == sum(out[k] for k in
+                               ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+# ---------------------------------------------------------------------------
+# specs / shape policy
+# ---------------------------------------------------------------------------
+
+def test_long_500k_skip_policy_matches_design():
+    runnable = {a: sp.cell_is_runnable(get_config(a), sp.SHAPES["long_500k"])[0]
+                for a in ARCH_IDS}
+    assert runnable == {
+        "h2o_danube3_4b": True,      # SWA
+        "gemma3_4b": True,           # 5:1 local:global
+        "gemma2_27b": False,         # alternating -> global full attention
+        "llama3_8b": False,
+        "mixtral_8x22b": True,       # SWA
+        "qwen2_moe_a2_7b": False,
+        "zamba2_2_7b": True,         # hybrid SSM
+        "seamless_m4t_medium": False,
+        "chameleon_34b": False,
+        "xlstm_350m": True,          # recurrent state
+    }
+
+
+def test_batch_specs_shapes():
+    cfg = get_config("llama3_8b")
+    cell = sp.SHAPES["train_4k"]
+    b = sp.batch_specs(cfg, cell)
+    assert b["tokens"].shape == (256, 4096)
+    assert b["labels"].shape == (256, 4096)
+    assert "enc_embeddings" not in b
+    # enc-dec arch gets encoder memory
+    cfg2 = get_config("seamless_m4t_medium")
+    b2 = sp.batch_specs(cfg2, cell)
+    assert b2["enc_embeddings"].shape == (256, sp.ENC_MEMORY_LEN, 1024)
+
+
+def test_decode_specs_cache_sized_by_window():
+    """SWA archs allocate ring buffers of window size, not seq size."""
+    cfg = get_config("h2o_danube3_4b")       # window 4096 everywhere
+    cell = sp.SHAPES["long_500k"]
+    _, cache, _ = sp.decode_specs(cfg, cell)
+    kv_leaves = [l for l in jax.tree.leaves(cache) if l.ndim == 5]
+    assert kv_leaves and all(l.shape[2] == 4096 for l in kv_leaves)
+    # full-attention arch at 32k allocates the full 32k
+    cfg2 = get_config("llama3_8b")
+    _, cache2, _ = sp.decode_specs(cfg2, sp.SHAPES["decode_32k"])
+    kv2 = [l for l in jax.tree.leaves(cache2) if l.ndim == 5]
+    assert kv2 and all(l.shape[2] == 32_768 for l in kv2)
+
+
+def test_microbatching_policy():
+    cell = sp.SHAPES["train_4k"]
+    assert sp.microbatches_for(cell, n_dp=16) == 8      # 256/16 -> cap 8
+    assert sp.microbatches_for(cell, n_dp=32) == 8
+    assert sp.microbatches_for(sp.SHAPES["decode_32k"], 16) == 1
+
+
+def test_active_params_moe_vs_dense():
+    mix = active_param_counts(get_config("mixtral_8x22b"))
+    assert mix["total"] > 120e9                          # ~140B total
+    assert mix["active"] < 0.45 * mix["total"]           # top-2 of 8
+    dense = active_param_counts(get_config("llama3_8b"))
+    assert dense["active"] == dense["total"]
+
+
+# ---------------------------------------------------------------------------
+# mesh planning
+# ---------------------------------------------------------------------------
+
+def test_make_host_mesh_uses_available_devices():
+    from repro.launch.mesh import make_host_mesh, mesh_chip_count
+    m = make_host_mesh(model_parallel=1)
+    assert mesh_chip_count(m) == len(jax.devices())

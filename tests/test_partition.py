@@ -1,0 +1,113 @@
+"""Partitioner + replication + reduce invariants (property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    random_partition, stratified_partition, stratified_partition_multidim,
+    clustered_partition, skewed_partition, similarity_report,
+    plan_replication, replicated_partition,
+    coalesce_concat, coalesce_replicated,
+)
+
+
+def _check_exact_cover(idx, n):
+    ids = idx[idx >= 0]
+    assert sorted(ids.tolist()) == list(range(n)), "each entity appears exactly once"
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 500), k=st.integers(1, 16), seed=st.integers(0, 10_000))
+def test_random_partition_exact_cover_and_balance(n, k, seed):
+    idx = random_partition(n, k, seed)
+    _check_exact_cover(idx, n)
+    sizes = (idx >= 0).sum(axis=1)
+    assert sizes.max() - sizes.min() <= 1, "balanced within 1"
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 400), k=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_stratified_partition_cover(n, k, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.exponential(size=n)
+    idx = stratified_partition(scores, k)
+    _check_exact_cover(idx, n)
+    # stratified: per-bin mean load within 25% of global for reasonable sizes
+    if n >= 64 * k:
+        means = [scores[row[row >= 0]].mean() for row in idx]
+        assert max(means) / max(min(means), 1e-9) < 1.35
+
+
+def test_stratified_beats_skewed_similarity():
+    """The paper's core claim about partition quality, as a testable
+    invariant: stratified splits are closer to the global distribution."""
+    rng = np.random.default_rng(0)
+    n, k = 1024, 8
+    group = rng.integers(0, k, n)                  # skew driver
+    attrs = np.stack([rng.exponential(1 + 3 * group), rng.normal(size=n)], 1)
+    strat = stratified_partition_multidim(attrs, k)
+    skew = skewed_partition(group, k)
+    s_strat = similarity_report(attrs, strat)
+    s_skew = similarity_report(attrs, skew)
+    assert s_strat["max_mean_dist"] < 0.5 * s_skew["max_mean_dist"]
+
+
+def test_clustered_partition_spreads_types():
+    rng = np.random.default_rng(1)
+    n, k = 600, 6
+    labels = rng.integers(0, 3, n)
+    idx = clustered_partition(labels, k)
+    _check_exact_cover(idx, n)
+    for lab in range(3):
+        counts = [(labels[row[row >= 0]] == lab).sum() for row in idx]
+        assert max(counts) - min(counts) <= 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 200), k=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_replication_distinct_bins(n, k, seed):
+    """Replicas of one entity must land on distinct sub-problems."""
+    rng = np.random.default_rng(seed)
+    demands = rng.exponential(size=n)
+    demands[0] = demands.sum()                    # one Taylor-Swift entity
+    plan = plan_replication(demands, k, threshold=0.5)
+    idx = replicated_partition(plan, demands, k, seed)
+    # exact cover of replicas
+    ids = idx[idx >= 0]
+    assert sorted(ids.tolist()) == list(range(plan.n_expanded))
+    for e in range(n):
+        bins = [b for b in range(k) for r in idx[b][idx[b] >= 0]
+                if plan.replica_entity[r] == e]
+        assert len(bins) == len(set(bins))
+
+
+def test_replication_scales_sum_to_one():
+    demands = np.array([10.0, 1.0, 1.0, 1.0])
+    plan = plan_replication(demands, 4, threshold=0.5)
+    for e in range(4):
+        s = plan.replica_scale[plan.replica_entity == e].sum()
+        np.testing.assert_allclose(s, 1.0)
+
+
+def test_coalesce_concat_roundtrip():
+    rng = np.random.default_rng(2)
+    n, k = 37, 4
+    idx = random_partition(n, k, 0)
+    vals = rng.normal(size=(k, idx.shape[1], 3))
+    out = coalesce_concat(vals, idx, n)
+    for b in range(k):
+        for s, e in enumerate(idx[b]):
+            if e >= 0:
+                np.testing.assert_allclose(out[e], vals[b, s])
+
+
+def test_coalesce_replicated_sums():
+    demands = np.array([5.0, 1.0, 1.0])
+    plan = plan_replication(demands, 3, threshold=0.5)
+    idx = replicated_partition(plan, demands, 3, 0)
+    vals = np.ones((3, idx.shape[1], 2))
+    vals[idx < 0] = 0.0
+    out = coalesce_replicated(vals, idx, plan)
+    n_rep = np.array([(plan.replica_entity == e).sum() for e in range(3)])
+    np.testing.assert_allclose(out[:, 0], n_rep.astype(float))

@@ -1,0 +1,113 @@
+"""PDHG solver correctness vs scipy.optimize.linprog (HiGHS) oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linprog
+
+from repro.core import LinearProgram, pdhg
+
+
+def _random_lp(seed, n=50, mi=30, me=0):
+    """Random bounded-feasible LP: box [0,1], Gx <= h with slack-positive h."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    G = rng.normal(size=(mi, n))
+    h = G @ rng.uniform(0.2, 0.8, n) + rng.uniform(0.1, 1.0, mi)  # strictly feasible
+    A = rng.normal(size=(me, n)) if me else None
+    b = (A @ rng.uniform(0.2, 0.8, n)) if me else None
+    return c, G, h, A, b
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_matches_scipy_inequality(seed):
+    c, G, h, _, _ = _random_lp(seed)
+    ref = linprog(c, A_ub=G, b_ub=h, bounds=(0, 1), method="highs")
+    lp = LinearProgram.build(c=c, G=G, h=h, l=np.zeros_like(c), u=np.ones_like(c))
+    res = pdhg.solve_dense(lp, max_iters=60_000, tol_primal=1e-6, tol_gap=1e-6)
+    assert abs(float(res.primal_obj) - ref.fun) < 1e-3 * (1 + abs(ref.fun))
+    # and the solution is feasible in the ORIGINAL problem
+    v = lp.violations(res.x)
+    assert float(v["ineq_max"]) < 1e-3
+    assert float(v["box_max"]) < 1e-5
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_matches_scipy_with_equalities(seed):
+    c, G, h, A, b = _random_lp(seed + 100, n=40, mi=20, me=5)
+    ref = linprog(c, A_ub=G, b_ub=h, A_eq=A, b_eq=b, bounds=(0, 1), method="highs")
+    lp = LinearProgram.build(c=c, G=G, h=h, A=A, b=b,
+                             l=np.zeros_like(c), u=np.ones_like(c))
+    res = pdhg.solve_dense(lp, max_iters=60_000, tol_primal=1e-6, tol_gap=1e-6)
+    assert abs(float(res.primal_obj) - ref.fun) < 2e-3 * (1 + abs(ref.fun))
+    v = lp.violations(res.x)
+    assert float(v["eq_max"]) < 2e-3
+
+
+def test_padding_invariance():
+    """128-padding must not change the solution (pinned vars, BIG rows)."""
+    c, G, h, _, _ = _random_lp(7, n=33, mi=17)
+    lp_small = LinearProgram.build(c=c, G=G, h=h, l=np.zeros_like(c),
+                                   u=np.ones_like(c), pad_to=64)
+    lp_big = LinearProgram.build(c=c, G=G, h=h, l=np.zeros_like(c),
+                                 u=np.ones_like(c), pad_to=512)
+    r1 = pdhg.solve_dense(lp_small, max_iters=40_000)
+    r2 = pdhg.solve_dense(lp_big, max_iters=40_000)
+    assert abs(float(r1.primal_obj) - float(r2.primal_obj)) < 1e-3 * (
+        1 + abs(float(r1.primal_obj)))
+
+
+def test_batched_matches_individual():
+    """vmap-batched solve (POP's map step) == per-problem solves."""
+    lps = []
+    for seed in range(4):
+        c, G, h, _, _ = _random_lp(seed + 50, n=30, mi=20)
+        lps.append(LinearProgram.build(c=c, G=G, h=h, l=np.zeros_like(c),
+                                       u=np.ones_like(c)))
+    import jax
+    ops = jax.tree.map(lambda *xs: jnp.stack(xs), *[pdhg.dense_ops(lp) for lp in lps])
+    batched = pdhg.solve_batched(ops, max_iters=40_000)
+    for i, lp in enumerate(lps):
+        single = pdhg.solve_dense(lp, max_iters=40_000)
+        assert abs(float(batched.primal_obj[i]) - float(single.primal_obj)) < 2e-3 * (
+            1 + abs(float(single.primal_obj)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_feasibility_and_bound(seed):
+    """Property: PDHG never returns an infeasible x, and its objective is
+    within tolerance of (i.e. not meaningfully BELOW) the LP optimum."""
+    c, G, h, _, _ = _random_lp(seed % 10_000, n=24, mi=12)
+    ref = linprog(c, A_ub=G, b_ub=h, bounds=(0, 1), method="highs")
+    lp = LinearProgram.build(c=c, G=G, h=h, l=np.zeros_like(c), u=np.ones_like(c))
+    res = pdhg.solve_dense(lp, max_iters=60_000)
+    v = lp.violations(res.x)
+    # PDHG at rel-tol 1e-4 leaves small absolute violations on unlucky
+    # random instances; the property is "never meaningfully infeasible"
+    assert float(v["ineq_max"]) < 1e-2
+    assert float(res.primal_obj) >= ref.fun - 1e-2 * (1 + abs(ref.fun))
+
+
+def test_operator_form_matches_dense():
+    """A structured K_mv/KT_mv must agree with the dense path (this is the
+    contract the domain problems rely on)."""
+    rng = np.random.default_rng(11)
+    n, mi = 40, 24
+    c, G, h, _, _ = _random_lp(11, n=n, mi=mi)
+    lp = LinearProgram.build(c=c, G=G, h=h, l=np.zeros_like(c), u=np.ones_like(c))
+    op = pdhg.dense_ops(lp)
+
+    # "structured" version: split K into two halves stitched by custom mv
+    K, q, mask = lp.stacked()
+    half = K.shape[0] // 2
+    data = (K[:half], K[half:])
+    K_mv = lambda d, x: jnp.concatenate([d[0] @ x, d[1] @ x])
+    KT_mv = lambda d, y: d[0].T @ y[:half] + d[1].T @ y[half:]
+    op2 = pdhg.OperatorLP(c=op.c, q=q, l=op.l, u=op.u, ineq_mask=mask, data=data)
+
+    r1 = pdhg.solve(op, max_iters=30_000)
+    r2 = pdhg.solve(op2, K_mv, KT_mv, max_iters=30_000)
+    assert abs(float(r1.primal_obj) - float(r2.primal_obj)) < 2e-3 * (
+        1 + abs(float(r1.primal_obj)))

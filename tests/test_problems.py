@@ -1,0 +1,192 @@
+"""Domain-problem tests: operator correctness (adjointness), POP quality
+vs full solve, heuristic comparisons, feasibility of coalesced solutions."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pop, skewed_partition
+from repro.problems.cluster_scheduling import (
+    GavelProblem, gandiva_heuristic, make_cluster_workload)
+from repro.problems.traffic_engineering import (
+    TrafficProblem, cspf_heuristic, make_topology, make_demands,
+    k_shortest_paths)
+from repro.problems.load_balancing import (
+    LoadBalanceProblem, estore_greedy, make_shard_workload)
+
+SOLVER_KW = dict(max_iters=20_000, tol_primal=1e-4, tol_gap=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fixtures (module-scoped: building paths etc. is the slow part)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gavel():
+    wl = make_cluster_workload(48, num_workers=(10, 10, 10), seed=3)
+    return GavelProblem(wl, space_sharing=False)
+
+
+@pytest.fixture(scope="module")
+def gavel_ss():
+    wl = make_cluster_workload(32, num_workers=(8, 8, 8), seed=4)
+    return GavelProblem(wl, space_sharing=True)
+
+
+@pytest.fixture(scope="module")
+def traffic():
+    # enough demands that links congest — the regime the paper targets
+    # (under light load greedy CSPF is trivially near-optimal)
+    topo = make_topology(n_nodes=60, target_edges=140, seed=0)
+    pairs, dem = make_demands(topo, 1500, seed=1)
+    pe = k_shortest_paths(topo, pairs, n_paths=3, max_len=24, seed=2)
+    return TrafficProblem(topo, pairs, dem, pe)
+
+
+# ---------------------------------------------------------------------------
+# operator adjointness: <K x, y> == <x, K^T y>  (catches any index bug)
+# ---------------------------------------------------------------------------
+
+def _adjoint_check(problem, op, n_var, n_con, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n_var), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n_con), jnp.float32)
+    lhs = float(jnp.dot(problem.K_mv(op.data, x), y))
+    rhs = float(jnp.dot(x, problem.KT_mv(op.data, y)))
+    assert abs(lhs - rhs) < 1e-2 * (1 + abs(lhs)), (lhs, rhs)
+
+
+def test_gavel_operator_adjoint(gavel):
+    op = gavel.build_full()
+    _adjoint_check(gavel, op, op.c.shape[0], op.q.shape[0])
+
+
+def test_gavel_ss_operator_adjoint(gavel_ss):
+    op = gavel_ss.build_full()
+    _adjoint_check(gavel_ss, op, op.c.shape[0], op.q.shape[0])
+
+
+def test_traffic_operator_adjoint(traffic):
+    op = traffic.build_full()
+    _adjoint_check(traffic, op, op.c.shape[0], op.q.shape[0])
+
+
+def test_lb_operator_adjoint():
+    wl = make_shard_workload(64, 8, seed=0)
+    prob = LoadBalanceProblem(wl)
+    op = prob._relax_op(np.arange(64), np.arange(8), 64, 8)
+    from repro.problems.load_balancing import _k_mv, _kt_mv
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=op.c.shape[0]), jnp.float32)
+    y = jnp.asarray(rng.normal(size=op.q.shape[0]), jnp.float32)
+    lhs = float(jnp.dot(_k_mv(op.data, x), y))
+    rhs = float(jnp.dot(x, _kt_mv(op.data, y)))
+    assert abs(lhs - rhs) < 1e-2 * (1 + abs(lhs))
+
+
+# ---------------------------------------------------------------------------
+# cluster scheduling
+# ---------------------------------------------------------------------------
+
+def test_gavel_pop_close_to_full(gavel):
+    full, res, _, _ = pop.solve_full(gavel, solver_kw=SOLVER_KW)
+    ev_full = gavel.evaluate(full)
+    r = pop.pop_solve(gavel, 4, strategy="stratified", solver_kw=SOLVER_KW)
+    ev_pop = gavel.evaluate(r.alloc)
+    # paper: quasi-optimal (sub-problems here are small, allow 12%)
+    assert ev_pop["mean_norm_throughput"] > 0.88 * ev_full["mean_norm_throughput"]
+    assert ev_pop["min_norm_throughput"] > 0.80 * ev_full["min_norm_throughput"]
+
+
+def test_gavel_beats_gandiva_on_fairness(gavel):
+    full, _, _, _ = pop.solve_full(gavel, solver_kw=SOLVER_KW)
+    rho_h = gandiva_heuristic(gavel.wl, space_sharing=False)
+    assert (gavel.evaluate(full)["min_norm_throughput"]
+            > 2.0 * gavel.evaluate(rho_h)["min_norm_throughput"])
+
+
+def test_gavel_space_sharing_improves_throughput(gavel_ss):
+    """Space sharing strictly enlarges the feasible set -> mean cannot drop."""
+    wl = gavel_ss.wl
+    base = GavelProblem(wl, space_sharing=False)
+    f_base, _, _, _ = pop.solve_full(base, solver_kw=SOLVER_KW)
+    f_ss, _, _, _ = pop.solve_full(gavel_ss, solver_kw=SOLVER_KW)
+    assert (gavel_ss.evaluate(f_ss)["mean_norm_throughput"]
+            >= 0.98 * base.evaluate(f_base)["mean_norm_throughput"])
+
+
+def test_gavel_allocation_feasible(gavel):
+    """Coalesced POP allocation satisfies the ORIGINAL worker constraints."""
+    r = pop.pop_solve(gavel, 4, strategy="stratified", solver_kw=SOLVER_KW)
+    # rho <= 1 per job (time feasibility implies this after scaling)
+    assert (r.alloc <= 1.0 + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# traffic engineering
+# ---------------------------------------------------------------------------
+
+def test_traffic_pop_close_to_full_and_feasible(traffic):
+    full, res, _, _ = pop.solve_full(traffic, solver_kw=SOLVER_KW)
+    ev_full = traffic.evaluate(full)
+    r = pop.pop_solve(traffic, 4, strategy="random", seed=0, solver_kw=SOLVER_KW)
+    ev = traffic.evaluate(r.alloc)
+    assert ev["total_flow"] > 0.85 * ev_full["total_flow"]
+    assert ev["max_edge_util"] < 1.01      # concatenation stays feasible
+    assert ev_full["max_edge_util"] < 1.01
+
+
+def test_traffic_random_beats_skewed(traffic):
+    """Paper Fig. 6: same-source (skewed) splits lose flow vs random."""
+    k = 8
+    r_rand = pop.pop_solve(traffic, k, strategy="random", solver_kw=SOLVER_KW)
+    idx = skewed_partition(traffic.source_groups(), k)
+    r_skew = pop.pop_solve(traffic, k, partition_idx=idx, solver_kw=SOLVER_KW)
+    f_rand = traffic.evaluate(r_rand.alloc)["total_flow"]
+    f_skew = traffic.evaluate(r_skew.alloc)["total_flow"]
+    assert f_rand > f_skew
+
+
+def test_traffic_pop_beats_cspf(traffic):
+    r = pop.pop_solve(traffic, 4, strategy="random", solver_kw=SOLVER_KW)
+    f_pop = traffic.evaluate(r.alloc)["total_flow"]
+    f_cspf = traffic.evaluate(cspf_heuristic(traffic))["total_flow"]
+    assert f_pop > 0.97 * f_cspf           # typically strictly better
+
+
+def test_cspf_feasible(traffic):
+    ev = traffic.evaluate(cspf_heuristic(traffic))
+    assert ev["max_edge_util"] <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# load balancing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 2, 4])
+def test_lb_full_and_pop_feasible(seed):
+    wl = make_shard_workload(256, 16, seed=seed)
+    prob = LoadBalanceProblem(wl)
+    full = prob.solve_full(solver_kw=SOLVER_KW)
+    assert full.feasible
+    r = prob.pop_solve(4, solver_kw=SOLVER_KW)
+    assert r.max_load_dev < 2.0 * wl.eps_frac   # near-window even when tight
+    # POP movement within 2x of full (paper: near-optimal)
+    assert r.movement < 2.0 * full.movement + 1e-9
+
+
+def test_lb_beats_greedy_on_balance():
+    wl = make_shard_workload(256, 16, seed=0)
+    prob = LoadBalanceProblem(wl)
+    full = prob.solve_full(solver_kw=SOLVER_KW)
+    ev_g = prob.evaluate(estore_greedy(wl))
+    assert full.max_load_dev < ev_g["max_load_dev"]
+
+
+def test_lb_placement_valid():
+    wl = make_shard_workload(128, 8, seed=1)
+    prob = LoadBalanceProblem(wl)
+    r = prob.pop_solve(2, solver_kw=SOLVER_KW)
+    assert r.placement.shape == (128,)
+    assert ((r.placement >= 0) & (r.placement < 8)).all()
