@@ -1,0 +1,19 @@
+# Convenience entry points (PYTHONPATH=src is set for you).
+#
+#   make check-imports   smoke-import every repro.* module (seconds; catches
+#                        version-rot ImportErrors before any test runs)
+#   make test            tier-1: check-imports + full pytest suite
+#   make bench-backends  POP scaling sweep across map-step backends
+
+PY = PYTHONPATH=src python
+
+.PHONY: test check-imports bench-backends
+
+check-imports:
+	$(PY) scripts/check_imports.py
+
+test:
+	sh scripts/test.sh
+
+bench-backends:
+	$(PY) -m benchmarks.bench_pop_scaling --backend vmap --backend chunked_vmap --backend shard_map

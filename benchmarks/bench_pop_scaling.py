@@ -1,4 +1,4 @@
-"""Paper §2.4: runtime scaling in k.
+"""Paper §2.4: runtime scaling in k, per map-step execution backend.
 
 Measures POP map-step runtime vs k on a fixed cluster-scheduling instance
 and fits the empirical exponent: the paper predicts superlinear speedup
@@ -6,42 +6,72 @@ and fits the empirical exponent: the paper predicts superlinear speedup
 observed exponent blends the k^2 variable reduction with PDHG's
 iteration-count advantage on smaller, better-conditioned problems).
 
+``--backend`` sweeps execution backends from the ``core/backends.py``
+registry (default: vmap, chunked_vmap, shard_map) so the scaling curve is
+recorded per backend — the data that justifies ``backend="auto"``'s
+selection thresholds on each platform.
+
 Also benchmarks the PDHG solver itself against scipy (HiGHS) on random
 dense LPs — the solver-substrate sanity check.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 from scipy.optimize import linprog
 
-from repro.core import LinearProgram, pdhg, pop
+from repro.core import LinearProgram, backends as backends_mod, pdhg, pop
 from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
 from .common import Timer, emit, save_json
 
+DEFAULT_BACKENDS = ("vmap", "chunked_vmap", "shard_map")
 
-def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0) -> dict:
+
+def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0,
+        backends=DEFAULT_BACKENDS) -> dict:
     wl = make_cluster_workload(n_jobs, num_workers=(128, 128, 128), seed=seed)
     prob = GavelProblem(wl, space_sharing=True)
     kw = dict(max_iters=12_000, tol_primal=1e-4, tol_gap=1e-4)
     rows = []
-    t1 = None
-    for k in ks:
-        if k == 1:
-            _, _, t, _ = pop.solve_full(prob, solver_kw=kw)
+    expos = {}
+    # the k=1 baseline is the unpartitioned solve — backend-independent,
+    # so run it once and share it across the sweep
+    t_full = None
+    if 1 in ks:
+        _, _, t_full, _ = pop.solve_full(prob, solver_kw=kw)
+    for backend in backends:
+        t1 = None
+        for k in ks:
+            if k == 1:
+                t = t_full
+            else:
+                t = pop.pop_solve(prob, k, strategy="stratified",
+                                  backend=backend,
+                                  solver_kw=kw).solve_time_s
+            rows.append(dict(backend=backend, k=k, solve_s=t))
+            t1 = t1 or t
+            emit(f"pop_scaling_{backend}_k{k}", t * 1e6,
+                 f"speedup={t1/t:.2f}x")
+        # empirical exponent from the k>=2 tail (needs >= 2 points to fit)
+        kk = np.array([r["k"] for r in rows
+                       if r["backend"] == backend and r["k"] >= 2], float)
+        tt = np.array([r["solve_s"] for r in rows
+                       if r["backend"] == backend and r["k"] >= 2], float)
+        if kk.size >= 2:
+            expos[backend] = float(
+                np.polyfit(np.log(kk), np.log(t1 / tt), 1)[0])
+            emit(f"pop_scaling_exponent_{backend}", 0.0,
+                 f"speedup~k^{expos[backend]:.2f}")
         else:
-            t = pop.pop_solve(prob, k, strategy="stratified",
-                              solver_kw=kw).solve_time_s
-        rows.append(dict(k=k, solve_s=t))
-        t1 = t1 or t
-        emit(f"pop_scaling_k{k}", t * 1e6, f"speedup={t1/t:.2f}x")
-    # empirical exponent from the k>=2 tail
-    kk = np.array([r["k"] for r in rows if r["k"] >= 2], float)
-    tt = np.array([r["solve_s"] for r in rows if r["k"] >= 2], float)
-    expo = float(np.polyfit(np.log(kk), np.log(t1 / tt), 1)[0])
-    emit("pop_scaling_exponent", 0.0, f"speedup~k^{expo:.2f}")
+            # None (JSON null), not NaN — json.dump emits a non-standard
+            # NaN token that strict parsers reject
+            expos[backend] = None
+            emit(f"pop_scaling_exponent_{backend}", 0.0,
+                 f"skipped: need >=2 ks above 1, got {kk.size}")
+    expo = expos[backends[0]]
 
     # solver substrate vs scipy
     rng = np.random.default_rng(0)
@@ -62,13 +92,22 @@ def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0) -> dict:
          f"scipy_us={t_sp.seconds*1e6:.0f};rel_obj_gap={gap:.2e};"
          f"iters={int(res.iterations)}")
 
-    out = {"rows": rows, "exponent": expo}
+    out = {"rows": rows, "exponent": expo, "exponents": expos}
     save_json("pop_scaling", out)
     return out
 
 
-def main():
-    run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=sorted(backends_mod.available_backends()),
+                    help="map-step backend to sweep (repeatable; default: "
+                         f"{', '.join(DEFAULT_BACKENDS)})")
+    ap.add_argument("--n-jobs", type=int, default=512)
+    ap.add_argument("--ks", type=int, nargs="+", default=[1, 2, 4, 8, 16, 32])
+    args = ap.parse_args(argv)
+    run(n_jobs=args.n_jobs, ks=tuple(args.ks),
+        backends=tuple(args.backend or DEFAULT_BACKENDS))
 
 
 if __name__ == "__main__":

@@ -13,8 +13,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import init_cache, init_params
-from repro.problems.load_balancing import LoadBalanceProblem, ShardWorkload
-from repro.serve.engine import ServeConfig, make_serve_step
+from repro.serve.engine import ServeConfig, balance_requests, make_serve_step
 
 
 def main():
@@ -30,15 +29,10 @@ def main():
     current = rng.integers(0, n_replicas, n_groups)   # sticky sessions
 
     # POP load balancer: request groups = shards, replicas = servers
-    wl = ShardWorkload(load=load, mem=np.ones(n_groups), placement=current,
-                       cap=np.full(n_replicas, n_groups), eps_frac=0.25)
-    prob = LoadBalanceProblem(wl)
-    t0 = time.perf_counter()
-    res = prob.pop_solve(2, solver_kw=dict(max_iters=6_000))
-    t_balance = time.perf_counter() - t0
-    moved = int((res.placement != current).sum())
+    res = balance_requests(load, n_replicas, current, pop_k=2,
+                           solver_kw=dict(max_iters=6_000))
     print(f"balancer: {n_groups} request groups -> {n_replicas} replicas "
-          f"in {t_balance:.2f}s; moved {moved} sticky groups; "
+          f"in {res.solve_time_s:.2f}s; moved {res.moved} sticky groups; "
           f"max load dev {res.max_load_dev:.2f}")
 
     # serve: each replica decodes its assigned groups as one batch

@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Smoke-import every ``repro.*`` module.
+
+Catches version-rot ImportErrors (e.g. a JAX release moving ``shard_map``)
+in seconds, without running a single test.  Exits non-zero and lists every
+module that failed, so one run reports all the rot at once.
+
+    python scripts/check_imports.py            # src/ inferred from repo layout
+"""
+
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = REPO_ROOT / "src"
+
+
+def module_names() -> list[str]:
+    """Enumerate repro.* from the filesystem, not pkgutil.walk_packages —
+    the walk imports packages as it goes, so one broken ``__init__`` would
+    abort the scan or silently prune a whole subtree; we want EVERY
+    failure in one run."""
+    names = []
+    for path in sorted(SRC.glob("repro/**/*.py")):
+        parts = path.relative_to(SRC).with_suffix("").parts
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        names.append(".".join(parts))
+    return names
+
+
+def main() -> int:
+    sys.path.insert(0, str(SRC))
+    names = module_names()
+    failed = []
+    for name in names:
+        try:
+            importlib.import_module(name)
+        except Exception:
+            failed.append(name)
+            print(f"FAIL {name}", file=sys.stderr)
+            traceback.print_exc()
+    print(f"imported {len(names) - len(failed)}/{len(names)} repro modules")
+    if failed:
+        print("failed: " + ", ".join(failed), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+#!/bin/sh
+# Tier-1 verify: smoke-import every repro module, then run the test suite
+# with src/ on PYTHONPATH (the repo has no installed package).
+#
+#     scripts/test.sh              # full tier-1
+#     scripts/test.sh tests/test_backends.py -k padding   # args pass through
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/check_imports.py
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -11,6 +11,10 @@ from .partition import (
 )
 from .replicate import ReplicationPlan, plan_replication, replicated_partition
 from .reduce import coalesce_concat, coalesce_replicated
+from .backends import (
+    MAP_BACKENDS, available_backends, get_backend, register_backend,
+    select_backend, solve_map,
+)
 from .pop import POPProblem, POPResult, pop_solve, solve_full
 from .maxmin import epigraph_rows, maxmin_objective
 from .rounding import round_relaxation
@@ -23,6 +27,8 @@ __all__ = [
     "clustered_partition", "skewed_partition", "similarity_report",
     "ReplicationPlan", "plan_replication", "replicated_partition",
     "coalesce_concat", "coalesce_replicated",
+    "MAP_BACKENDS", "available_backends", "get_backend", "register_backend",
+    "select_backend", "solve_map",
     "POPProblem", "POPResult", "pop_solve", "solve_full",
     "epigraph_rows", "maxmin_objective",
     "round_relaxation",

@@ -1,0 +1,260 @@
+"""POP map-step execution substrate: pluggable backends for the batched solve.
+
+POP's whole speedup lives in the map step — k independent sub-LPs solved
+with ZERO collectives (they share no variables by construction).  How those
+k solves are *executed* is an orthogonal choice, so it lives here as a
+registry of interchangeable backends, all with the same contract:
+
+    backend(ops, K_mv, KT_mv, solver_kw, **opts) -> SolveResult
+
+where ``ops`` is an :class:`~repro.core.pdhg.OperatorLP` pytree stacked on
+a leading axis of length k, and the result carries the same leading axis.
+Backends differ only in scheduling, never in math — every backend must
+match ``vmap`` to float tolerance (enforced by ``tests/test_backends.py``).
+
+Registered backends:
+
+``serial``
+    Python loop over the k sub-problems, one jitted solve each.  The
+    reference/debugging backend: what the other four must reproduce.
+``vmap``
+    One batched solve on one device.  Best below the device-memory knee.
+``chunked_vmap``
+    ``lax.map`` over fixed-size vmapped chunks: peak memory is bounded by
+    the chunk size, not k, so huge k fits on one device at the cost of a
+    sequential walk over chunks.
+``shard_map``
+    Sub-problems spread over a mesh axis, vmapped within each shard.  k is
+    padded up to a multiple of the device count with dummy sub-problems
+    (replicas of sub-problem 0) and the padding is sliced off afterwards —
+    no device idles, and results are bit-identical to the unpadded solve
+    (each lane is independent, so extra lanes cannot perturb real ones).
+``pmap``
+    Same layout via ``jax.pmap`` — the fallback for JAX versions or
+    platforms where shard_map misbehaves.
+
+``backend="auto"`` picks by device count, k, and per-sub-problem size
+(:func:`select_backend`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import compat
+from . import pdhg
+from .pdhg import OperatorLP, SolveResult
+
+MapBackend = Callable[..., SolveResult]
+
+MAP_BACKENDS: Dict[str, MapBackend] = {}
+
+# chunked_vmap default chunk; auto-selection switches off plain vmap above
+# this many sub-problems (CPU-sized default — meshes usually decide first)
+DEFAULT_CHUNK = 16
+AUTO_VMAP_MAX_K = 64
+# ... or above this many floats of stacked problem data (~256 MB fp32)
+AUTO_VMAP_MAX_ELEMS = 64_000_000
+
+
+def register_backend(name: str) -> Callable[[MapBackend], MapBackend]:
+    def deco(fn: MapBackend) -> MapBackend:
+        MAP_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def available_backends() -> tuple:
+    return tuple(MAP_BACKENDS)
+
+
+def get_backend(name: str) -> MapBackend:
+    if name not in MAP_BACKENDS:
+        raise ValueError(
+            f"unknown map backend {name!r}; registered: {sorted(MAP_BACKENDS)}")
+    return MAP_BACKENDS[name]
+
+
+# --------------------------------------------------------------------------
+# padding: k -> multiple of the device axis
+# --------------------------------------------------------------------------
+
+def batch_size(ops: OperatorLP) -> int:
+    return jax.tree.leaves(ops)[0].shape[0]
+
+
+def pad_to_multiple(ops: OperatorLP, m: int):
+    """Pad the stacked sub-problem axis to a multiple of ``m`` by repeating
+    sub-problem 0.  Returns ``(padded_ops, k)`` with the ORIGINAL k, so the
+    caller slices ``[:k]`` off every result leaf.  Dummy lanes solve a real
+    (already-solved-elsewhere) LP and are discarded; lanes are independent,
+    so the real lanes' trajectories are unchanged."""
+    k = batch_size(ops)
+    pad = (-k) % m
+    if pad == 0:
+        return ops, k
+    padded = jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]),
+        ops)
+    return padded, k
+
+
+def _slice_result(res: SolveResult, k: int) -> SolveResult:
+    return jax.tree.map(lambda a: a[:k], res)
+
+
+def _vmapped_solve(K_mv, KT_mv, solver_kw):
+    return jax.vmap(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw))
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+@register_backend("serial")
+def solve_serial(ops: OperatorLP, K_mv, KT_mv, solver_kw) -> SolveResult:
+    """One jitted solve per sub-problem, in a Python loop.  Slowest and
+    simplest — the numerical reference the parallel backends must match."""
+    fn = jax.jit(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw))
+    outs = [fn(jax.tree.map(lambda a: a[i], ops))
+            for i in range(batch_size(ops))]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
+@register_backend("vmap")
+def solve_vmap(ops: OperatorLP, K_mv, KT_mv, solver_kw) -> SolveResult:
+    return jax.jit(_vmapped_solve(K_mv, KT_mv, solver_kw))(ops)
+
+
+@register_backend("chunked_vmap")
+def solve_chunked_vmap(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+                       chunk: int = DEFAULT_CHUNK) -> SolveResult:
+    """``lax.map`` over vmapped chunks: peak memory ~ one chunk of
+    sub-problems instead of all k.  k pads up to a chunk multiple."""
+    k = batch_size(ops)
+    chunk = max(1, min(chunk, k))
+    padded, _ = pad_to_multiple(ops, chunk)
+    k_pad = batch_size(padded)
+    chunked = jax.tree.map(
+        lambda a: a.reshape((k_pad // chunk, chunk) + a.shape[1:]), padded)
+    inner = _vmapped_solve(K_mv, KT_mv, solver_kw)
+    res = jax.jit(lambda c: jax.lax.map(inner, c))(chunked)
+    res = jax.tree.map(lambda a: a.reshape((k_pad,) + a.shape[2:]), res)
+    return _slice_result(res, k)
+
+
+@register_backend("shard_map")
+def solve_shard_map(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+                    mesh: Optional[Mesh] = None,
+                    axis: str = "pop",
+                    chunk: Optional[int] = None) -> SolveResult:
+    """Shard the k sub-problems over a mesh axis; vmap within each shard.
+    No collectives in the mapped body — POP sub-problems are independent
+    by construction.  Goes through :mod:`repro.core.compat` so it runs on
+    any JAX that has shard_map under either name/kwarg spelling.
+
+    ``chunk`` bounds per-device memory the same way chunked_vmap does on
+    one device: each shard walks its lanes in vmapped chunks of that size
+    (``None`` = decide from the per-device share: chunk only when it
+    exceeds the single-device vmap ceiling; ``0`` = never chunk)."""
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (axis,))
+    n_dev = mesh.shape[axis]
+    if chunk is None:
+        per_dev = -(-batch_size(ops) // n_dev)
+        heavy = (per_dev > AUTO_VMAP_MAX_K
+                 or per_dev * max(_n_elems_per_sub(ops), 1)
+                 > AUTO_VMAP_MAX_ELEMS)
+        chunk = DEFAULT_CHUNK if heavy else 0
+    padded, k = pad_to_multiple(ops, n_dev * chunk if chunk else n_dev)
+
+    inner = _vmapped_solve(K_mv, KT_mv, solver_kw)
+    if chunk:
+        def local_solve(local_ops):
+            chunked = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // chunk, chunk)
+                                    + a.shape[1:]), local_ops)
+            res = jax.lax.map(inner, chunked)
+            return jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), res)
+    else:
+        local_solve = inner
+    spec = jax.tree.map(lambda _: P(axis), padded)
+    out_spec = jax.tree.map(lambda _: P(axis),
+                            jax.eval_shape(local_solve, padded))
+    fn = compat.shard_map(local_solve, mesh=mesh, in_specs=(spec,),
+                          out_specs=out_spec,
+                          # solver constants (power-iteration seed vectors)
+                          # are unvarying while problem data varies over the
+                          # POP axis — exactly the intent; skip the check
+                          check=False)
+    return _slice_result(jax.jit(fn)(padded), k)
+
+
+@register_backend("pmap")
+def solve_pmap(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+               devices: Optional[list] = None) -> SolveResult:
+    """Per-device vmapped shards via ``jax.pmap`` — fallback when shard_map
+    is unusable on the installed JAX/platform."""
+    devices = list(devices if devices is not None else jax.devices())
+    n_dev = len(devices)
+    padded, k = pad_to_multiple(ops, n_dev)
+    k_pad = batch_size(padded)
+    sharded = jax.tree.map(
+        lambda a: a.reshape((n_dev, k_pad // n_dev) + a.shape[1:]), padded)
+    fn = jax.pmap(_vmapped_solve(K_mv, KT_mv, solver_kw), devices=devices)
+    res = fn(sharded)
+    res = jax.tree.map(lambda a: a.reshape((k_pad,) + a.shape[2:]), res)
+    return _slice_result(res, k)
+
+
+# --------------------------------------------------------------------------
+# auto-selection + entry point
+# --------------------------------------------------------------------------
+
+def select_backend(k: int, n_elems_per_sub: int = 0,
+                   n_dev: Optional[int] = None) -> str:
+    """Pick a backend from (k, per-sub-problem element count, devices).
+
+    Multi-device and enough sub-problems to fill the mesh -> ``shard_map``
+    (each device solves its own lanes, zero communication).  Single device
+    -> ``vmap`` until the stacked batch gets big (many lanes or a large
+    stacked footprint), then ``chunked_vmap`` to bound peak memory.
+    """
+    n_dev = compat.device_count() if n_dev is None else n_dev
+    if n_dev > 1 and k >= n_dev:
+        # memory-safe at any k: solve_shard_map self-chunks each shard when
+        # the per-device share exceeds the single-device vmap ceiling
+        return "shard_map"
+    if k > AUTO_VMAP_MAX_K or k * max(n_elems_per_sub, 1) > AUTO_VMAP_MAX_ELEMS:
+        return "chunked_vmap"
+    return "vmap"
+
+
+def _n_elems_per_sub(ops: OperatorLP) -> int:
+    return sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(ops))
+
+
+def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
+              backend: str = "auto", **opts: Any) -> SolveResult:
+    """Run the POP map step on stacked ``ops`` with the named backend
+    (``"auto"`` resolves via :func:`select_backend`).
+
+    Under ``"auto"``, opts the chosen backend doesn't take (e.g. ``chunk=``
+    when it resolves to vmap) are dropped — they are hints for *whichever*
+    backend wins, not requirements.  An explicitly named backend still
+    rejects unknown opts."""
+    solver_kw = dict(solver_kw or {})
+    if backend == "auto":
+        backend = select_backend(batch_size(ops), _n_elems_per_sub(ops))
+        if opts:
+            import inspect
+            accepted = inspect.signature(get_backend(backend)).parameters
+            opts = {k: v for k, v in opts.items() if k in accepted}
+    return get_backend(backend)(ops, K_mv, KT_mv, solver_kw, **opts)

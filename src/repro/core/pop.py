@@ -7,9 +7,10 @@ placement, ...) subclasses :class:`POPProblem`; ``pop_solve`` then
   1. partitions entities into k self-similar subsets (``core/partition.py``),
      optionally replicating hot entities (``core/replicate.py``),
   2. builds k identically-shaped sub-LPs and STACKS them on a leading axis,
-  3. solves them as ONE batched PDHG solve — ``vmap`` on a single device, or
-     ``shard_map`` over a mesh axis (sub-problems are independent, so the
-     map step needs ZERO collectives; this is the whole point of POP), and
+  3. solves them as ONE batched PDHG solve through a pluggable execution
+     backend (``core/backends.py``: serial / vmap / chunked_vmap /
+     shard_map / pmap — sub-problems are independent, so the map step
+     needs ZERO collectives; this is the whole point of POP), and
   4. coalesces sub-allocations (``core/reduce.py``).
 
 ``solve_full`` runs the unpartitioned baseline (k=1 path) for quality
@@ -25,9 +26,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import backends as backends_mod
 from . import partition as part_mod
 from . import pdhg
 from .pdhg import OperatorLP, SolveResult
@@ -95,48 +95,11 @@ class POPResult:
 
 
 # --------------------------------------------------------------------------
-# map-step backends
+# map-step backends — the execution substrate lives in ``core/backends.py``;
+# this alias keeps the historical ``pop.MAP_BACKENDS`` surface working
 # --------------------------------------------------------------------------
 
-def _solve_vmap(ops: OperatorLP, K_mv, KT_mv, solver_kw) -> SolveResult:
-    fn = jax.jit(jax.vmap(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw)))
-    return fn(ops)
-
-
-def _solve_shard_map(ops: OperatorLP, K_mv, KT_mv, solver_kw,
-                     mesh: Optional[Mesh] = None,
-                     axis: str = "pop") -> SolveResult:
-    """Shard the k sub-problems over a mesh axis.  Inside each shard we vmap
-    over the local sub-problems; there are NO collectives in the mapped
-    body — POP sub-problems are independent by construction."""
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs, (axis,))
-    k = ops.c.shape[0]
-    n_dev = mesh.shape[axis]
-    if k % n_dev:
-        # shrink the mesh to the largest device count dividing k (the map
-        # step is embarrassingly parallel — leftover devices just idle)
-        n_dev = max(d for d in range(1, min(k, n_dev) + 1)
-                    if k % d == 0 and n_dev % d == 0)
-        mesh = Mesh(np.array(mesh.devices).reshape(-1)[:n_dev], (axis,))
-
-    def local_solve(local_ops):
-        return jax.vmap(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw))(local_ops)
-
-    spec = jax.tree.map(lambda _: P(axis), ops)
-    fn = shard_map(local_solve, mesh=mesh,
-                   in_specs=(spec,),
-                   out_specs=jax.tree.map(lambda _: P(axis),
-                                          jax.eval_shape(local_solve, ops)),
-                   # solver constants (power-iteration seed vectors) are
-                   # unvarying while problem data varies over the POP axis;
-                   # that is exactly the intent — disable the vma check
-                   check_vma=False)
-    return jax.jit(fn)(ops)
-
-
-MAP_BACKENDS = {"vmap": _solve_vmap, "shard_map": _solve_shard_map}
+MAP_BACKENDS = backends_mod.MAP_BACKENDS
 
 
 # --------------------------------------------------------------------------
@@ -148,16 +111,20 @@ def pop_solve(
     k: int,
     *,
     strategy: str = "random",
-    backend: str = "vmap",
+    backend: str = "auto",
     seed: int = 0,
     replicate_threshold: Optional[float] = None,
     partition_idx: Optional[np.ndarray] = None,
     solver_kw: Optional[dict] = None,
+    backend_opts: Optional[dict] = None,
 ) -> POPResult:
     """Run POP-k on ``problem``.  ``strategy`` ∈ {random, stratified, skewed-*}
     (domain problems may pass an explicit ``partition_idx`` for custom or
     adversarial splits).  ``replicate_threshold`` enables §4.3 hot-entity
-    replication."""
+    replication.  ``backend`` names a map-step backend from
+    ``core/backends.py`` (``"auto"`` picks by k, device count and problem
+    size); ``backend_opts`` are forwarded to it (e.g. ``chunk=``,
+    ``mesh=``)."""
     solver_kw = dict(solver_kw or {})
     n = problem.n_entities
     scores = np.asarray(problem.entity_scores(), np.float64)
@@ -204,7 +171,8 @@ def pop_solve(
     build_time = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    res = MAP_BACKENDS[backend](ops, problem.K_mv, problem.KT_mv, solver_kw)
+    res = backends_mod.solve_map(ops, problem.K_mv, problem.KT_mv, solver_kw,
+                                 backend=backend, **(backend_opts or {}))
     jax.block_until_ready(res.x)
     solve_time = time.perf_counter() - t1
 

@@ -94,25 +94,15 @@ def moe(p, x, *, top_k: int, capacity_factor: float = 1.25,
 
 def plan_expert_placement(expert_load: np.ndarray, n_devices: int,
                           current: np.ndarray | None = None, k: int = 4,
-                          seed: int = 0):
+                          seed: int = 0, backend: str = "auto"):
     """Place experts on devices balancing routing load while minimising
     expert-weight movement from ``current`` — literally the paper's §3.3
     MILP with experts as shards.  Returns device id per expert."""
-    from ..problems.load_balancing import LoadBalanceProblem, ShardWorkload
+    from ..problems.load_balancing import balance_placement
 
     E = expert_load.shape[0]
-    rng = np.random.default_rng(seed)
-    if current is None:
-        current = np.arange(E) % n_devices
-    wl = ShardWorkload(
-        load=expert_load.astype(np.float64),
-        mem=np.ones(E),                      # uniform expert size
-        placement=current.astype(np.int64),
+    res = balance_placement(
+        expert_load, n_devices, current,
         cap=np.full(n_devices, np.ceil(2.0 * E / n_devices)),
-        eps_frac=0.2,
-    )
-    prob = LoadBalanceProblem(wl)
-    k_eff = max(1, min(k, n_devices // 2))
-    res = (prob.pop_solve(k_eff, seed=seed) if k_eff > 1
-           else prob.solve_full())
+        eps_frac=0.2, pop_k=k, seed=seed, backend=backend)
     return res.placement

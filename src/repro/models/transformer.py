@@ -214,12 +214,13 @@ def _init_block(rng, cfg: ArchCfg, bcfg: BlockCfg):
 
 
 def _mixer_cache_init(cfg: ArchCfg, bcfg: BlockCfg, batch: int, seq: int,
-                      shared_params=None):
+                      shared_params=None, kv_dtype=jnp.bfloat16):
     """Zero cache for one block (decode).  SWA layers get window-sized
     ring buffers — the long_500k memory win."""
     if bcfg.mixer in ("attn", "shared_attn"):
         cache_len = min(seq, bcfg.window) if bcfg.window else seq
-        return KVCache.zeros(batch, cache_len, cfg.n_kv, cfg.head_dim)
+        return KVCache.zeros(batch, cache_len, cfg.n_kv, cfg.head_dim,
+                             dtype=kv_dtype)
     if bcfg.mixer == "mamba2":
         proto = shared_params if shared_params is not None else None
         p = proto or ssm_mod.init_mamba2(jax.random.PRNGKey(0), cfg.d_model,
@@ -368,9 +369,11 @@ def _segment_decode(seg_params, cfg: ArchCfg, seg: Segment, x, seg_cache, pos,
     return x, new_cache
 
 
-def _init_segment_cache(cfg: ArchCfg, seg: Segment, batch: int, seq: int):
+def _init_segment_cache(cfg: ArchCfg, seg: Segment, batch: int, seq: int,
+                        kv_dtype=jnp.bfloat16):
     def one():
-        return {f"b{i}": _mixer_cache_init(cfg, b, batch, seq)
+        return {f"b{i}": _mixer_cache_init(cfg, b, batch, seq,
+                                           kv_dtype=kv_dtype)
                 for i, b in enumerate(seg.period)}
     protos = [one() for _ in range(seg.n_periods)]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *protos)
@@ -448,10 +451,17 @@ def forward_train(params, cfg: ArchCfg, tokens, enc_embeddings=None,
     return dense(params["unembed"], x)
 
 
-def init_cache(cfg: ArchCfg, batch: int, seq: int):
-    """Decode cache for a maximum context of ``seq``."""
+def init_cache(cfg: ArchCfg, batch: int, seq: int, kv_dtype=jnp.bfloat16):
+    """Decode cache for a maximum context of ``seq``.
+
+    ``kv_dtype`` is the KV-cache storage dtype.  It must match the serving
+    compute dtype: a bf16 cache under float32 decode silently truncates the
+    KV history every step, so decode drifts ~1e-3 relative from the
+    teacher-forcing forward (amplified further by MoE gate renormalisation)
+    even though both paths "compute in float32"."""
     return {
-        "seg_caches": [_init_segment_cache(cfg, s, batch, seq)
+        "seg_caches": [_init_segment_cache(cfg, s, batch, seq,
+                                           kv_dtype=kv_dtype)
                        for s in cfg.segments],
         "pos": jnp.zeros((), jnp.int32),
     }

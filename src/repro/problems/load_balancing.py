@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import backends as backends_mod
 from ..core import pdhg
 from ..core.pdhg import OperatorLP
 
@@ -324,10 +325,11 @@ class LoadBalanceProblem:
 
     # ----------------------------------------------------------------- POP --
     def pop_solve(self, k: int, seed: int = 0,
-                  solver_kw: Optional[dict] = None) -> LBResult:
+                  solver_kw: Optional[dict] = None,
+                  backend: str = "auto") -> LBResult:
         """Domain-aware POP: server groups (round-robin by load), shards
-        follow their current server; batched PDHG map step; per-sub
-        round+repair reduce."""
+        follow their current server; batched PDHG map step through the
+        ``core/backends.py`` registry; per-sub round+repair reduce."""
         solver_kw = dict(solver_kw or {})
         wl = self.wl
         # deal servers into k groups by descending current load (stratified)
@@ -379,8 +381,8 @@ class LoadBalanceProblem:
         ops = [self._relax_op(s, g, n_pad, s_pad, L_target=L, eps_eff=e)
                for s, g, e in zip(shard_sets, groups, sub_eps)]
         batched = jax.tree.map(lambda *xs: jnp.stack(xs), *ops)
-        fn = jax.jit(jax.vmap(lambda o: pdhg.solve(o, _k_mv, _kt_mv, **solver_kw)))
-        res = fn(batched)
+        res = backends_mod.solve_map(batched, _k_mv, _kt_mv, solver_kw,
+                                     backend=backend)
         jax.block_until_ready(res.x)
         placement = wl.placement.copy()
         for i, (s, g) in enumerate(zip(shard_sets, groups)):
@@ -393,6 +395,41 @@ class LoadBalanceProblem:
                         max_load_dev=ev["max_load_dev"],
                         feasible=ev["load_feasible"] and ev["mem_feasible"],
                         solve_time_s=dt, extra=ev)
+
+
+# ---------------------------------------------------------------------------
+# shared placement entry point
+# ---------------------------------------------------------------------------
+
+def balance_placement(load: np.ndarray, n_targets: int,
+                      current: Optional[np.ndarray] = None, *,
+                      cap: Optional[np.ndarray] = None,
+                      eps_frac: float = 0.2, pop_k: int = 4, seed: int = 0,
+                      backend: str = "auto",
+                      solver_kw: Optional[dict] = None) -> LBResult:
+    """Place ``load``-weighted shards onto ``n_targets`` via the §3.3 MILP.
+
+    The one entry point for every "shards onto servers" reuse of the paper
+    (MoE expert placement in ``models/moe.py``, request balancing in
+    ``serve/engine.py``): default sticky placement, uniform memory, the
+    shared k_eff heuristic, and the POP-vs-full branch live here once.
+    ``backend`` names a map-step backend from ``core/backends.py``.
+    """
+    load = np.asarray(load, np.float64)
+    n = load.shape[0]
+    if current is None:
+        current = np.arange(n) % n_targets
+    if cap is None:
+        cap = np.full(n_targets, float(n))
+    wl = ShardWorkload(load=load, mem=np.ones(n),
+                       placement=np.asarray(current, np.int64),
+                       cap=cap, eps_frac=eps_frac)
+    prob = LoadBalanceProblem(wl)
+    k_eff = max(1, min(pop_k, n_targets // 2))
+    if k_eff > 1:
+        return prob.pop_solve(k_eff, seed=seed, solver_kw=solver_kw,
+                              backend=backend)
+    return prob.solve_full(solver_kw=solver_kw)
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,9 @@ class SchedulerConfig:
     pop_k: int = 8
     space_sharing: bool = False
     round_seconds: float = 300.0
+    # map-step execution backend (core/backends.py registry); "auto" picks
+    # shard_map on a multi-device mesh, (chunked_)vmap on one device
+    map_backend: str = "auto"
     # equilibrate: probe-based operator scaling — measured -29% iterations
     # on Gavel-type LPs (EXPERIMENTS.md §Perf cell 3)
     solver_kw: dict = dataclasses.field(default_factory=lambda: dict(
@@ -94,6 +97,7 @@ class GavelScheduler:
         k = max(1, min(self.cfg.pop_k, len(self.jobs) // 8))
         if k > 1:
             res = pop.pop_solve(prob, k, strategy="stratified",
+                                backend=self.cfg.map_backend,
                                 solver_kw=self.cfg.solver_kw)
             rho = res.alloc
         else:

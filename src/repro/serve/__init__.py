@@ -1,2 +1,3 @@
 """Serving substrate: KV/state-cached decode engine + POP request balancer."""
-from .engine import ServeConfig, make_serve_step, jit_serve_step, prefill
+from .engine import (BalanceResult, ServeConfig, balance_requests,
+                     jit_serve_step, make_serve_step, prefill)

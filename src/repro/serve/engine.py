@@ -1,8 +1,14 @@
-"""Serving engine: batched prefill + decode with donated caches.
+"""Serving engine: batched prefill + decode with donated caches, plus the
+POP request balancer that places request groups onto decode replicas.
 
 ``serve_step`` is the unit the decode_32k / long_500k dry-run cells lower:
 one new token against a KV/state cache of ``seq_len``, cache donated so the
 update is in-place at the XLA level.
+
+``balance_requests`` is the serving-path use of the paper: request groups
+are shards, replicas are servers, and the §3.3 load-balancing MILP is
+solved through POP with a pluggable map-step backend
+(``core/backends.py``) — so the balancer itself scales with the mesh.
 """
 
 from __future__ import annotations
@@ -71,6 +77,41 @@ def jit_serve_step(cfg: tf.ArchCfg, scfg: ServeConfig, mesh: Mesh,
         in_shardings=tuple(in_sh),
         out_shardings=(t_shard, c_shard),
         donate_argnums=(1,),          # cache updated in place
+    )
+
+
+@dataclasses.dataclass
+class BalanceResult:
+    placement: np.ndarray        # replica id per request group
+    moved: int                   # sticky groups that changed replica
+    max_load_dev: float
+    solve_time_s: float
+
+
+def balance_requests(load: np.ndarray, n_replicas: int,
+                     current: Optional[np.ndarray] = None,
+                     *, pop_k: int = 2, eps_frac: float = 0.25,
+                     backend: str = "auto",
+                     solver_kw: Optional[dict] = None) -> BalanceResult:
+    """Place request groups onto decode replicas balancing generation load
+    while keeping sticky sessions where they are — the paper's §3.3 MILP
+    with request groups as shards.  ``backend`` selects the POP map-step
+    execution backend (``core/backends.py`` registry)."""
+    from ..problems.load_balancing import balance_placement
+
+    load = np.asarray(load, np.float64)
+    if current is None:
+        current = np.arange(load.shape[0]) % n_replicas
+    if solver_kw is None:           # explicit {} means "solver defaults"
+        solver_kw = dict(max_iters=6_000)
+    res = balance_placement(
+        load, n_replicas, current, eps_frac=eps_frac, pop_k=pop_k,
+        backend=backend, solver_kw=dict(solver_kw))
+    return BalanceResult(
+        placement=res.placement,
+        moved=int((res.placement != current).sum()),
+        max_load_dev=float(res.max_load_dev),
+        solve_time_s=float(res.solve_time_s),
     )
 
 

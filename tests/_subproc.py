@@ -1,0 +1,26 @@
+"""Shared helper for tests that spawn subprocesses needing ``import repro``.
+
+pytest may have found ``repro`` through a sys.path entry that was never
+exported (e.g. conftest/rootdir injection), so child processes must be
+handed an explicit PYTHONPATH derived from wherever THIS process imported
+it — covering both a regular package (``__file__``) and the namespace
+package the src/ layout actually produces (``__file__`` is None).
+"""
+
+import os
+
+import repro
+
+
+def repro_env() -> dict:
+    pkg_dir = (os.path.dirname(os.path.abspath(repro.__file__))
+               if getattr(repro, "__file__", None)
+               else next(iter(repro.__path__)))
+    src_dir = os.path.dirname(pkg_dir)
+    env = dict(os.environ)
+    existing = env.get("PYTHONPATH")
+    # no trailing separator when PYTHONPATH is unset: an empty entry would
+    # put the child's cwd on sys.path
+    env["PYTHONPATH"] = (src_dir + os.pathsep + existing if existing
+                         else src_dir)
+    return env

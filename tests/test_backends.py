@@ -1,0 +1,148 @@
+"""Execution-substrate tests: every registered map-step backend must return
+the same sub-problem solutions as ``vmap`` (backends differ in scheduling,
+never in math), including when k does not divide the device/chunk count
+(the padding path).  Multi-device shard_map/pmap padding runs in a
+subprocess with forced host devices (the main pytest process keeps 1)."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from _subproc import repro_env
+from repro.core import backends as backends_mod
+from repro.core import compat, pop
+from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
+
+SOLVER_KW = dict(max_iters=4_000, tol_primal=1e-4, tol_gap=1e-4)
+
+
+def _problem(n_jobs=30, seed=5):
+    wl = make_cluster_workload(n_jobs, num_workers=(8, 8, 8), seed=seed)
+    return GavelProblem(wl, space_sharing=False)
+
+
+@pytest.fixture(scope="module")
+def vmap_ref():
+    # k=6: not a multiple of chunked_vmap's test chunk (4) — on a
+    # multi-device mesh it also exercises the shard_map/pmap padding
+    return pop.pop_solve(_problem(), 6, strategy="stratified",
+                         backend="vmap", solver_kw=SOLVER_KW)
+
+
+@pytest.mark.parametrize("backend", sorted(backends_mod.MAP_BACKENDS))
+def test_backend_matches_vmap(backend, vmap_ref):
+    opts = {"chunk": 4} if backend == "chunked_vmap" else {}
+    r = pop.pop_solve(_problem(), 6, strategy="stratified", backend=backend,
+                      solver_kw=SOLVER_KW, backend_opts=opts)
+    np.testing.assert_allclose(r.alloc, vmap_ref.alloc, atol=1e-6)
+    np.testing.assert_array_equal(r.iterations, vmap_ref.iterations)
+
+
+def test_auto_backend_matches_vmap(vmap_ref):
+    r = pop.pop_solve(_problem(), 6, strategy="stratified", backend="auto",
+                      solver_kw=SOLVER_KW)
+    np.testing.assert_allclose(r.alloc, vmap_ref.alloc, atol=1e-6)
+
+
+def test_auto_backend_drops_foreign_opts(vmap_ref):
+    """Under auto, opts are hints for whichever backend wins: chunk= must
+    not crash when auto resolves to vmap.  Explicitly named backends still
+    reject opts they don't take."""
+    r = pop.pop_solve(_problem(), 6, strategy="stratified", backend="auto",
+                      solver_kw=SOLVER_KW, backend_opts=dict(chunk=4))
+    np.testing.assert_allclose(r.alloc, vmap_ref.alloc, atol=1e-6)
+    with pytest.raises(TypeError):
+        pop.pop_solve(_problem(), 6, backend="vmap", solver_kw=SOLVER_KW,
+                      backend_opts=dict(chunk=4))
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown map backend"):
+        backends_mod.get_backend("warp_drive")
+
+
+def test_pad_to_multiple():
+    import jax.numpy as jnp
+    from repro.core.pdhg import OperatorLP
+    ops = OperatorLP(c=jnp.ones((6, 3)), q=jnp.ones((6, 2)),
+                     l=jnp.zeros((6, 3)), u=jnp.ones((6, 3)),
+                     ineq_mask=jnp.ones((6, 2), bool), data=(jnp.ones((6, 2, 3)),))
+    padded, k = backends_mod.pad_to_multiple(ops, 4)
+    assert k == 6
+    assert backends_mod.batch_size(padded) == 8
+    # padding replicates sub-problem 0
+    np.testing.assert_array_equal(np.asarray(padded.c[6:]),
+                                  np.asarray(ops.c[:1].repeat(2, 0)))
+    # already-multiple is a no-op (same object, no copy)
+    same, k2 = backends_mod.pad_to_multiple(ops, 3)
+    assert same is ops and k2 == 6
+
+
+def test_select_backend_heuristics():
+    assert backends_mod.select_backend(4, 100, n_dev=1) == "vmap"
+    assert backends_mod.select_backend(6, 100, n_dev=4) == "shard_map"
+    # fewer sub-problems than devices: not worth a mesh
+    assert backends_mod.select_backend(2, 100, n_dev=4) == "vmap"
+    # large k or a huge stacked footprint bounds memory via chunking
+    assert backends_mod.select_backend(
+        backends_mod.AUTO_VMAP_MAX_K + 1, 100, n_dev=1) == "chunked_vmap"
+    assert backends_mod.select_backend(
+        8, backends_mod.AUTO_VMAP_MAX_ELEMS, n_dev=1) == "chunked_vmap"
+    # memory-heavy multi-device runs still shard (the backend self-chunks
+    # per shard rather than falling back to a single device)
+    assert backends_mod.select_backend(
+        4 * backends_mod.AUTO_VMAP_MAX_K + 4, 100, n_dev=4) == "shard_map"
+
+
+def test_shard_map_chunked_matches_vmap(vmap_ref):
+    """Per-shard chunking (chunk=2 with k=6 pads to a n_dev*chunk multiple)
+    must not change results — it only bounds per-device memory."""
+    r = pop.pop_solve(_problem(), 6, strategy="stratified",
+                      backend="shard_map", solver_kw=SOLVER_KW,
+                      backend_opts=dict(chunk=2))
+    np.testing.assert_allclose(r.alloc, vmap_ref.alloc, atol=1e-6)
+    np.testing.assert_array_equal(r.iterations, vmap_ref.iterations)
+
+
+def test_compat_shard_map_runs():
+    """The compat shim maps ``check=`` onto whatever this JAX calls it."""
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]), ("m",))
+    fn = compat.shard_map(lambda a: a * 2.0, mesh=mesh, in_specs=(P(),),
+                          out_specs=P(), check=False)
+    out = jax.jit(fn)(jnp.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(out), [0.0, 2.0, 4.0, 6.0])
+
+
+def test_multi_device_padding_subprocess():
+    """k=6 on a forced 4-device host mesh: shard_map and pmap pad to 8
+    lanes (no mesh shrinking, no idle device) and still match vmap."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, numpy as np
+        assert jax.device_count() == 4, jax.device_count()
+        from repro.core import pop, select_backend
+        from repro.problems.cluster_scheduling import (GavelProblem,
+                                                       make_cluster_workload)
+        wl = make_cluster_workload(30, num_workers=(8, 8, 8), seed=5)
+        prob = GavelProblem(wl, space_sharing=False)
+        kw = dict(max_iters=4_000, tol_primal=1e-4, tol_gap=1e-4)
+        ref = pop.pop_solve(prob, 6, strategy="stratified", backend="vmap",
+                            solver_kw=kw)
+        for b in ("shard_map", "pmap"):
+            r = pop.pop_solve(prob, 6, strategy="stratified", backend=b,
+                              solver_kw=kw)
+            np.testing.assert_allclose(r.alloc, ref.alloc, atol=1e-6)
+        assert select_backend(6) == "shard_map"
+        print("multi-device padding ok")
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600, env=repro_env())
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "multi-device padding ok" in r.stdout

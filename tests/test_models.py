@@ -33,7 +33,11 @@ def test_decode_matches_teacher_forcing(arch):
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
 
     ref = forward_train(params, cfg, tokens, compute_dtype=jnp.float32)
-    cache = init_cache(cfg, B, S)
+    # the cache dtype must match the compute dtype: a bf16 cache under
+    # float32 decode truncates the KV history each step, which drifts the
+    # logits ~1e-2 from the teacher-forced forward (MoE gating amplifies
+    # the truncation into near-tolerance failures, e.g. mixtral)
+    cache = init_cache(cfg, B, S, kv_dtype=jnp.float32)
     step = jax.jit(lambda tok, c: forward_decode(params, cfg, tok, c,
                                                  compute_dtype=jnp.float32))
     outs = []
@@ -42,7 +46,7 @@ def test_decode_matches_teacher_forcing(arch):
         outs.append(lg[:, 0])
     got = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=2e-2, atol=2e-2)
+                               rtol=1e-3, atol=1e-3)
 
 
 def test_swa_window_masks_old_tokens():

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from scipy.optimize import linprog
 
 from repro.core import LinearProgram, pdhg

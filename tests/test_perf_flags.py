@@ -8,6 +8,8 @@ import subprocess
 import sys
 import textwrap
 
+from _subproc import repro_env
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -63,7 +65,7 @@ SCRIPT = textwrap.dedent("""
 
 def test_perf_flags_numerically_transparent():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=600)
+                       text=True, timeout=600, env=repro_env())
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     assert "sp_residual transparent" in r.stdout
     assert "cache_seq_on_model transparent" in r.stdout

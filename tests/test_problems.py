@@ -4,7 +4,7 @@ vs full solve, heuristic comparisons, feasibility of coalesced solutions."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import pop, skewed_partition
 from repro.problems.cluster_scheduling import (

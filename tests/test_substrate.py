@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import Checkpointer
 from repro.data import TokenPipeline
@@ -179,7 +179,7 @@ def test_compressed_psum_under_shard_map():
     if len(devs) < 1:
         pytest.skip("no devices")
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro.core import compat
     mesh = Mesh(np.array(devs[:1]), ("dp",))
     g = {"w": jnp.ones((64,), jnp.float32)}
     r = comp.init_residuals(g)
@@ -187,9 +187,9 @@ def test_compressed_psum_under_shard_map():
     def f(g, r):
         return comp.compressed_psum(g, r, "dp")
 
-    out, r2 = jax.jit(shard_map(
+    out, r2 = jax.jit(compat.shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))(g, r)
+        check=False))(g, r)
     np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-2)
 
 
