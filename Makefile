@@ -4,10 +4,16 @@
 #                        version-rot ImportErrors before any test runs)
 #   make test            tier-1: check-imports + full pytest suite
 #   make bench-backends  POP scaling sweep across map-step backends
+#   make bench-smoke     seconds-scale bench sanity: tiny step-engine A/B
+#                        (fused vs matvec) + tiny warm-vs-cold online
+#                        re-solve — catches perf-path breakage without the
+#                        full suite
+#   make bench-snapshot  full --fast suite -> BENCH_pop.json (the committed
+#                        PR-over-PR perf baseline)
 
 PY = PYTHONPATH=src python
 
-.PHONY: test check-imports bench-backends
+.PHONY: test check-imports bench-backends bench-smoke bench-snapshot
 
 check-imports:
 	$(PY) scripts/check_imports.py
@@ -17,3 +23,10 @@ test:
 
 bench-backends:
 	$(PY) -m benchmarks.bench_pop_scaling --backend vmap --backend chunked_vmap --backend shard_map
+
+bench-smoke:
+	$(PY) -m benchmarks.bench_pop_scaling --engine-sweep --smoke
+	$(PY) -m benchmarks.bench_online_resolve --fast
+
+bench-snapshot:
+	$(PY) -m benchmarks.run --fast --emit BENCH_pop.json

@@ -11,6 +11,14 @@ registry (default: vmap, chunked_vmap, shard_map) so the scaling curve is
 recorded per backend — the data that justifies ``backend="auto"``'s
 selection thresholds on each platform.
 
+``--engine-sweep`` (also part of the default run) A/Bs the PDHG *step
+engines* on batched dense LPs at each k: the generic operator-matvec
+engine vs the fused dense engine that hands the whole stack to one fused
+kernel launch per half-step (``core/pdhg.py``; compiled Pallas on TPU,
+XLA-fused reference elsewhere).  Timings are min-of-N after a compile
+warmup, so they measure the steady-state map step — what an online solver
+with a jit-cached engine actually pays.
+
 Also benchmarks the PDHG solver itself against scipy (HiGHS) on random
 dense LPs — the solver-substrate sanity check.
 """
@@ -20,6 +28,8 @@ from __future__ import annotations
 import argparse
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 from scipy.optimize import linprog
 
@@ -28,10 +38,65 @@ from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workloa
 from .common import Timer, emit, save_json
 
 DEFAULT_BACKENDS = ("vmap", "chunked_vmap", "shard_map")
+DEFAULT_KS = (1, 2, 4, 8, 16, 32)
 
 
-def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0,
-        backends=DEFAULT_BACKENDS) -> dict:
+def _random_dense_stack(k: int, n: int, mi: int, rng) -> pdhg.OperatorLP:
+    """k random bounded-feasible dense LPs, stacked (the fused engine's
+    home turf: dense data, block-padded by LinearProgram.build)."""
+    lps = []
+    for _ in range(k):
+        c = rng.normal(size=n)
+        G = rng.normal(size=(mi, n))
+        h = G @ rng.uniform(0.2, 0.8, n) + rng.uniform(0.1, 1.0, mi)
+        lps.append(LinearProgram.build(c=c, G=G, h=h,
+                                       l=np.zeros(n), u=np.ones(n)))
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[pdhg.dense_ops(lp) for lp in lps])
+
+
+def engine_sweep(ks=DEFAULT_KS, n: int = 150, mi: int = 90,
+                 repeats: int = 9, max_iters: int = 2_000,
+                 seed: int = 0) -> list:
+    """Fused vs matvec engine on batched dense solves, per k.
+
+    Both engines run the identical algorithm through ``solve_stacked`` via
+    the jit-cached map solver, so the delta is pure step-execution cost.
+    Returns rows [{engine, k, solve_s, iters}, ...]."""
+    rng = np.random.default_rng(seed)
+    kw = dict(max_iters=max_iters, tol_primal=1e-6, tol_gap=1e-6)
+    rows = []
+    for k in ks:
+        ops = _random_dense_stack(k, n, mi, rng)
+        batch = (ops, *backends_mod.cold_start(ops))
+        fns, results = {}, {}
+        for engine_name in ("matvec", "fused"):
+            engine = (engine_name if engine_name == "matvec"
+                      else pdhg.fused_dense_engine())
+            fns[engine_name] = backends_mod.make_map_solver(
+                pdhg.dense_K_mv, pdhg.dense_KT_mv, kw, engine)
+            jax.block_until_ready(fns[engine_name](batch).x)  # compile warmup
+        # interleave the timed rounds so slow machine-load drift hits both
+        # engines equally; keep the min per engine
+        best = {name: float("inf") for name in fns}
+        for _ in range(repeats):
+            for name, fn in fns.items():
+                t0 = time.perf_counter()
+                res = fn(batch)
+                jax.block_until_ready(res.x)
+                best[name] = min(best[name], time.perf_counter() - t0)
+                results[name] = res
+        for name in fns:
+            iters = int(np.asarray(results[name].iterations).sum())
+            rows.append(dict(engine=name, k=k, solve_s=best[name],
+                             iters=iters))
+            emit(f"pop_engine_{name}_k{k}", best[name] * 1e6,
+                 f"iters={iters}")
+    return rows
+
+
+def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
+        backends=DEFAULT_BACKENDS, engines: bool = True) -> dict:
     wl = make_cluster_workload(n_jobs, num_workers=(128, 128, 128), seed=seed)
     prob = GavelProblem(wl, space_sharing=True)
     kw = dict(max_iters=12_000, tol_primal=1e-4, tol_gap=1e-4)
@@ -40,21 +105,23 @@ def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0,
     # the k=1 baseline is the unpartitioned solve — backend-independent,
     # so run it once and share it across the sweep
     t_full = None
+    iters_full = None
     if 1 in ks:
-        _, _, t_full, _ = pop.solve_full(prob, solver_kw=kw)
+        _, res_full, t_full, _ = pop.solve_full(prob, solver_kw=kw)
+        iters_full = int(res_full.iterations)
     for backend in backends:
         t1 = None
         for k in ks:
             if k == 1:
-                t = t_full
+                t, iters = t_full, iters_full
             else:
-                t = pop.pop_solve(prob, k, strategy="stratified",
-                                  backend=backend,
-                                  solver_kw=kw).solve_time_s
-            rows.append(dict(backend=backend, k=k, solve_s=t))
+                r = pop.pop_solve(prob, k, strategy="stratified",
+                                  backend=backend, solver_kw=kw)
+                t, iters = r.solve_time_s, int(r.iterations.sum())
+            rows.append(dict(backend=backend, k=k, solve_s=t, iters=iters))
             t1 = t1 or t
             emit(f"pop_scaling_{backend}_k{k}", t * 1e6,
-                 f"speedup={t1/t:.2f}x")
+                 f"speedup={t1/t:.2f}x;iters={iters}")
         # empirical exponent from the k>=2 tail (needs >= 2 points to fit)
         kk = np.array([r["k"] for r in rows
                        if r["backend"] == backend and r["k"] >= 2], float)
@@ -72,6 +139,12 @@ def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0,
             emit(f"pop_scaling_exponent_{backend}", 0.0,
                  f"skipped: need >=2 ks above 1, got {kk.size}")
     expo = expos[backends[0]]
+
+    # step-engine A/B on dense stacks (fused must never lose to matvec).
+    # Deliberately full-size even under run.py --fast: this is the
+    # PR-over-PR tracked signal in BENCH_pop.json, so it keeps full k
+    # coverage and repeat count (~3 min of the scenario's wall time).
+    engine_rows = engine_sweep(ks=ks, seed=seed) if engines else []
 
     # solver substrate vs scipy
     rng = np.random.default_rng(0)
@@ -92,7 +165,8 @@ def run(n_jobs: int = 512, ks=(1, 2, 4, 8, 16, 32), seed: int = 0,
          f"scipy_us={t_sp.seconds*1e6:.0f};rel_obj_gap={gap:.2e};"
          f"iters={int(res.iterations)}")
 
-    out = {"rows": rows, "exponent": expo, "exponents": expos}
+    out = {"rows": rows, "exponent": expo, "exponents": expos,
+           "engine_rows": engine_rows}
     save_json("pop_scaling", out)
     return out
 
@@ -104,8 +178,20 @@ def main(argv=None):
                     help="map-step backend to sweep (repeatable; default: "
                          f"{', '.join(DEFAULT_BACKENDS)})")
     ap.add_argument("--n-jobs", type=int, default=512)
-    ap.add_argument("--ks", type=int, nargs="+", default=[1, 2, 4, 8, 16, 32])
+    ap.add_argument("--ks", type=int, nargs="+", default=list(DEFAULT_KS))
+    ap.add_argument("--engine-sweep", action="store_true",
+                    help="run ONLY the step-engine A/B (seconds-scale; "
+                         "what `make bench-smoke` uses)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the engine sweep")
     args = ap.parse_args(argv)
+    if args.engine_sweep:
+        if args.smoke:
+            engine_sweep(ks=(1, 2, 4), n=60, mi=40, repeats=2,
+                         max_iters=400)
+        else:
+            engine_sweep(ks=tuple(args.ks))
+        return
     run(n_jobs=args.n_jobs, ks=tuple(args.ks),
         backends=tuple(args.backend or DEFAULT_BACKENDS))
 

@@ -4,14 +4,35 @@ Prints ``name,us_per_call,derived`` CSV per the repo contract and persists
 JSON artifacts to experiments/bench/.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
+
+``--emit PATH`` additionally writes ONE machine-readable perf snapshot
+(scenario -> wall-clock + the scenario's result payload, plus platform
+metadata) so the perf trajectory is tracked PR-over-PR:
+
+    PYTHONPATH=src python -m benchmarks.run --fast --emit BENCH_pop.json
+
+The committed ``BENCH_pop.json`` at the repo root is the ``--fast``
+snapshot — regenerate it with exactly that command when solver or backend
+changes move the numbers.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def _meta(fast: bool) -> dict:
+    import jax
+    return {
+        "fast": fast,
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
 
 
 def main() -> None:
@@ -20,10 +41,14 @@ def main() -> None:
                     help="reduced sizes (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--emit", default=None, metavar="PATH",
+                    help="write a machine-readable perf snapshot JSON "
+                         "(scenario wall-clock + payloads + platform)")
     args = ap.parse_args()
 
     from . import (bench_cluster_scheduling, bench_load_balancing,
-                   bench_pop_scaling, bench_replication, bench_skewed_splits,
+                   bench_online_resolve, bench_pop_scaling,
+                   bench_replication, bench_skewed_splits,
                    bench_traffic_engineering)
 
     suite = {
@@ -42,9 +67,11 @@ def main() -> None:
             n_demands=2_000 if args.fast else 10_000),
         # paper §4.3
         "replication": lambda: bench_replication.run(),
-        # paper §2.4 + solver substrate
+        # paper §2.4 + solver substrate (backend AND step-engine sweeps)
         "pop_scaling": lambda: bench_pop_scaling.run(
             n_jobs=128 if args.fast else 512),
+        # online setting: warm-started re-solves on perturbed instances
+        "online_resolve": lambda: bench_online_resolve.run(fast=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -52,16 +79,33 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    snapshot = {"meta": _meta(args.fast), "scenarios": {}}
     for name, fn in suite.items():
         t0 = time.perf_counter()
         try:
-            fn()
-            print(f"# {name}: done in {time.perf_counter()-t0:.1f}s",
+            payload = fn()
+            wall = time.perf_counter() - t0
+            snapshot["scenarios"][name] = {
+                "wall_s": round(wall, 3),
+                "result": payload if isinstance(payload, dict) else None,
+            }
+            print(f"# {name}: done in {wall:.1f}s",
                   file=sys.stderr, flush=True)
         except Exception:                                   # noqa: BLE001
             failures += 1
+            snapshot["scenarios"][name] = {
+                "wall_s": round(time.perf_counter() - t0, 3),
+                "error": traceback.format_exc(limit=3),
+            }
             print(f"# {name}: FAILED\n{traceback.format_exc()}",
                   file=sys.stderr, flush=True)
+    if args.emit:
+        # NaN/Infinity -> null: strict JSON parsers reject the bare tokens
+        clean = json.loads(json.dumps(snapshot, default=str),
+                           parse_constant=lambda _: None)
+        with open(args.emit, "w") as f:
+            json.dump(clean, f, indent=1)
+        print(f"# snapshot -> {args.emit}", file=sys.stderr, flush=True)
     if failures:
         raise SystemExit(1)
 

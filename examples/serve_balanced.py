@@ -35,6 +35,14 @@ def main():
           f"in {res.solve_time_s:.2f}s; moved {res.moved} sticky groups; "
           f"max load dev {res.max_load_dev:.2f}")
 
+    # next tick: loads drift a few percent -> warm-started re-solve picks
+    # up from the previous PDHG iterates instead of cold
+    load2 = load * rng.uniform(0.95, 1.05, n_groups)
+    res2 = balance_requests(load2, n_replicas, res.placement, pop_k=2,
+                            solver_kw=dict(max_iters=6_000), warm=res)
+    print(f"warm tick: re-balanced in {res2.solve_time_s:.2f}s; "
+          f"moved {res2.moved} groups; max load dev {res2.max_load_dev:.2f}")
+
     # serve: each replica decodes its assigned groups as one batch
     scfg = ServeConfig(batch=1, max_seq=128)
     step = jax.jit(make_serve_step(cfg, scfg))

@@ -2,8 +2,10 @@
 
 from .problem import LinearProgram, MixedIntegerProgram, stack_lps, BIG
 from .pdhg import (
-    OperatorLP, SolveResult, solve, solve_dense, solve_batched,
+    OperatorLP, SolveResult, solve, solve_stacked, solve_dense, solve_batched,
     dense_ops, dense_K_mv, dense_KT_mv, ruiz_equilibrate,
+    StepEngine, matvec_engine, fused_dense_engine, select_engine,
+    scale_operator, unscale_solution,
 )
 from .partition import (
     random_partition, stratified_partition, stratified_partition_multidim,
@@ -13,7 +15,7 @@ from .replicate import ReplicationPlan, plan_replication, replicated_partition
 from .reduce import coalesce_concat, coalesce_replicated
 from .backends import (
     MAP_BACKENDS, available_backends, get_backend, register_backend,
-    select_backend, solve_map,
+    select_backend, solve_map, make_map_solver,
 )
 from .pop import POPProblem, POPResult, pop_solve, solve_full
 from .maxmin import epigraph_rows, maxmin_objective
@@ -21,14 +23,17 @@ from .rounding import round_relaxation
 
 __all__ = [
     "LinearProgram", "MixedIntegerProgram", "stack_lps", "BIG",
-    "OperatorLP", "SolveResult", "solve", "solve_dense", "solve_batched",
+    "OperatorLP", "SolveResult", "solve", "solve_stacked", "solve_dense",
+    "solve_batched",
     "dense_ops", "dense_K_mv", "dense_KT_mv", "ruiz_equilibrate",
+    "StepEngine", "matvec_engine", "fused_dense_engine", "select_engine",
+    "scale_operator", "unscale_solution",
     "random_partition", "stratified_partition", "stratified_partition_multidim",
     "clustered_partition", "skewed_partition", "similarity_report",
     "ReplicationPlan", "plan_replication", "replicated_partition",
     "coalesce_concat", "coalesce_replicated",
     "MAP_BACKENDS", "available_backends", "get_backend", "register_backend",
-    "select_backend", "solve_map",
+    "select_backend", "solve_map", "make_map_solver",
     "POPProblem", "POPResult", "pop_solve", "solve_full",
     "epigraph_rows", "maxmin_objective",
     "round_relaxation",

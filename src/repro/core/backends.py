@@ -5,30 +5,41 @@ with ZERO collectives (they share no variables by construction).  How those
 k solves are *executed* is an orthogonal choice, so it lives here as a
 registry of interchangeable backends, all with the same contract:
 
-    backend(ops, K_mv, KT_mv, solver_kw, **opts) -> SolveResult
+    backend(batch, K_mv, KT_mv, solver_kw, engine=..., **opts) -> SolveResult
 
-where ``ops`` is an :class:`~repro.core.pdhg.OperatorLP` pytree stacked on
-a leading axis of length k, and the result carries the same leading axis.
-Backends differ only in scheduling, never in math — every backend must
-match ``vmap`` to float tolerance (enforced by ``tests/test_backends.py``).
+where ``batch = (ops, warm_x, warm_y)``: an :class:`~repro.core.pdhg.
+OperatorLP` pytree stacked on a leading axis of length k plus the starting
+iterates for every lane (cold starts are materialised up front by
+:func:`solve_map`, so warm-started online re-solves flow through exactly
+the same code path as cold ones).  The result carries the same leading
+axis.  Backends differ only in scheduling, never in math — every backend
+must match ``vmap`` to float tolerance (``tests/test_backends.py``).
+
+Two *step engines* (see ``core/pdhg.py``) plug into every backend:
+``engine="matvec"`` vmaps the per-problem operator matvecs (any structured
+LP), ``engine="fused"`` hands the whole stacked batch to the fused Pallas
+primal/dual kernels in one launch per half-step (dense LPs; compiled on
+TPU, XLA-fused reference elsewhere).  ``engine="auto"`` picks per
+:func:`repro.core.pdhg.select_engine`.
 
 Registered backends:
 
 ``serial``
-    Python loop over the k sub-problems, one jitted solve each.  The
+    Python loop over the k sub-problems, one jitted k=1 solve each.  The
     reference/debugging backend: what the other four must reproduce.
 ``vmap``
     One batched solve on one device.  Best below the device-memory knee.
 ``chunked_vmap``
-    ``lax.map`` over fixed-size vmapped chunks: peak memory is bounded by
+    ``lax.map`` over fixed-size batched chunks: peak memory is bounded by
     the chunk size, not k, so huge k fits on one device at the cost of a
     sequential walk over chunks.
 ``shard_map``
-    Sub-problems spread over a mesh axis, vmapped within each shard.  k is
-    padded up to a multiple of the device count with dummy sub-problems
-    (replicas of sub-problem 0) and the padding is sliced off afterwards —
-    no device idles, and results are bit-identical to the unpadded solve
-    (each lane is independent, so extra lanes cannot perturb real ones).
+    Sub-problems spread over a mesh axis, solved batched within each
+    shard.  k is padded up to a multiple of the device count with dummy
+    sub-problems (replicas of sub-problem 0) and the padding is sliced off
+    afterwards — no device idles, and results are bit-identical to the
+    unpadded solve (each lane is independent, so extra lanes cannot
+    perturb real ones).
 ``pmap``
     Same layout via ``jax.pmap`` — the fallback for JAX versions or
     platforms where shard_map misbehaves.
@@ -39,7 +50,8 @@ Registered backends:
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +60,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import compat
 from . import pdhg
-from .pdhg import OperatorLP, SolveResult
+from .pdhg import OperatorLP, SolveResult, StepEngine
 
 MapBackend = Callable[..., SolveResult]
 
@@ -60,6 +72,8 @@ DEFAULT_CHUNK = 16
 AUTO_VMAP_MAX_K = 64
 # ... or above this many floats of stacked problem data (~256 MB fp32)
 AUTO_VMAP_MAX_ELEMS = 64_000_000
+
+EngineSpec = Union[str, StepEngine]
 
 
 def register_backend(name: str) -> Callable[[MapBackend], MapBackend]:
@@ -84,24 +98,25 @@ def get_backend(name: str) -> MapBackend:
 # padding: k -> multiple of the device axis
 # --------------------------------------------------------------------------
 
-def batch_size(ops: OperatorLP) -> int:
-    return jax.tree.leaves(ops)[0].shape[0]
+def batch_size(tree) -> int:
+    """Leading-axis length of any stacked pytree (ops or (ops, wx, wy))."""
+    return jax.tree.leaves(tree)[0].shape[0]
 
 
-def pad_to_multiple(ops: OperatorLP, m: int):
-    """Pad the stacked sub-problem axis to a multiple of ``m`` by repeating
-    sub-problem 0.  Returns ``(padded_ops, k)`` with the ORIGINAL k, so the
-    caller slices ``[:k]`` off every result leaf.  Dummy lanes solve a real
-    (already-solved-elsewhere) LP and are discarded; lanes are independent,
-    so the real lanes' trajectories are unchanged."""
-    k = batch_size(ops)
+def pad_to_multiple(tree, m: int):
+    """Pad the stacked sub-problem axis of any pytree to a multiple of ``m``
+    by repeating lane 0.  Returns ``(padded, k)`` with the ORIGINAL k, so
+    the caller slices ``[:k]`` off every result leaf.  Dummy lanes solve a
+    real (already-solved-elsewhere) LP and are discarded; lanes are
+    independent, so the real lanes' trajectories are unchanged."""
+    k = batch_size(tree)
     pad = (-k) % m
     if pad == 0:
-        return ops, k
+        return tree, k
     padded = jax.tree.map(
         lambda a: jnp.concatenate(
             [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]),
-        ops)
+        tree)
     return padded, k
 
 
@@ -109,8 +124,63 @@ def _slice_result(res: SolveResult, k: int) -> SolveResult:
     return jax.tree.map(lambda a: a[:k], res)
 
 
-def _vmapped_solve(K_mv, KT_mv, solver_kw):
-    return jax.vmap(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw))
+# --------------------------------------------------------------------------
+# the per-batch solver (shared by every backend)
+# --------------------------------------------------------------------------
+
+def cold_start(ops: OperatorLP) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The solver's default starting iterates, materialised eagerly so warm
+    and cold solves share one code path (bit-identical to passing no warm
+    start: x0 = clip(0, l, u), y0 = 0)."""
+    return (jnp.clip(jnp.zeros_like(ops.c), ops.l, ops.u),
+            jnp.zeros_like(ops.q))
+
+
+def _freeze_kw(solver_kw: dict):
+    try:
+        return tuple(sorted(solver_kw.items())), True
+    except TypeError:
+        return tuple(solver_kw.items()), False
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_solver(K_mv, KT_mv, kw_items, engine):
+    return jax.jit(_build_solver(K_mv, KT_mv, dict(kw_items), engine))
+
+
+def _build_solver(K_mv, KT_mv, solver_kw: dict, engine: EngineSpec):
+    if engine == "matvec":
+        # vmap over per-lane k=1 solves (pdhg.solve IS solve_stacked at
+        # k=1 — same loop) rather than one native k-stack: per-lane XLA
+        # numerics are then independent of the batch size, which is what
+        # lets serial/chunked/shard_map/pmap match vmap bit-for-bit.
+        sol = functools.partial(pdhg.solve, K_mv=K_mv, KT_mv=KT_mv, **solver_kw)
+        return lambda batch: jax.vmap(
+            lambda o, wx, wy: sol(o, warm_x=wx, warm_y=wy))(*batch)
+    if not isinstance(engine, StepEngine):
+        raise ValueError(f"unresolved engine {engine!r} reached a backend; "
+                         "go through solve_map or pass a StepEngine")
+    return lambda batch: pdhg.solve_stacked(
+        batch[0], engine=engine, warm_x=batch[1], warm_y=batch[2], **solver_kw)
+
+
+def make_map_solver(K_mv, KT_mv, solver_kw: Optional[dict] = None,
+                    engine: EngineSpec = "matvec"):
+    """Jitted ``fn(batch) -> SolveResult`` for one stacked batch, where
+    ``batch = (ops, warm_x, warm_y)``.  The jitted function is cached on
+    (matvecs, solver_kw, engine) when hashable, so online re-solves reuse
+    the compilation instead of retracing every round (engine objects from
+    :func:`pdhg.fused_dense_engine` are themselves cached, so the default
+    fused engine hits this cache too).  Nesting the returned function
+    inside lax.map/shard_map/pmap just inlines its jaxpr."""
+    solver_kw = dict(solver_kw or {})
+    kw_items, hashable = _freeze_kw(solver_kw)
+    if hashable:
+        try:
+            return _cached_solver(K_mv, KT_mv, kw_items, engine)
+        except TypeError:
+            pass
+    return jax.jit(_build_solver(K_mv, KT_mv, solver_kw, engine))
 
 
 # --------------------------------------------------------------------------
@@ -118,68 +188,72 @@ def _vmapped_solve(K_mv, KT_mv, solver_kw):
 # --------------------------------------------------------------------------
 
 @register_backend("serial")
-def solve_serial(ops: OperatorLP, K_mv, KT_mv, solver_kw) -> SolveResult:
-    """One jitted solve per sub-problem, in a Python loop.  Slowest and
+def solve_serial(batch, K_mv, KT_mv, solver_kw,
+                 engine: EngineSpec = "matvec") -> SolveResult:
+    """One jitted k=1 solve per sub-problem, in a Python loop.  Slowest and
     simplest — the numerical reference the parallel backends must match."""
-    fn = jax.jit(lambda o: pdhg.solve(o, K_mv, KT_mv, **solver_kw))
-    outs = [fn(jax.tree.map(lambda a: a[i], ops))
-            for i in range(batch_size(ops))]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    fn = make_map_solver(K_mv, KT_mv, solver_kw, engine)
+    outs = [fn(jax.tree.map(lambda a: a[i:i + 1], batch))
+            for i in range(batch_size(batch))]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
 
 
 @register_backend("vmap")
-def solve_vmap(ops: OperatorLP, K_mv, KT_mv, solver_kw) -> SolveResult:
-    return jax.jit(_vmapped_solve(K_mv, KT_mv, solver_kw))(ops)
+def solve_vmap(batch, K_mv, KT_mv, solver_kw,
+               engine: EngineSpec = "matvec") -> SolveResult:
+    return make_map_solver(K_mv, KT_mv, solver_kw, engine)(batch)
 
 
 @register_backend("chunked_vmap")
-def solve_chunked_vmap(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+def solve_chunked_vmap(batch, K_mv, KT_mv, solver_kw,
+                       engine: EngineSpec = "matvec",
                        chunk: int = DEFAULT_CHUNK) -> SolveResult:
-    """``lax.map`` over vmapped chunks: peak memory ~ one chunk of
+    """``lax.map`` over batched chunks: peak memory ~ one chunk of
     sub-problems instead of all k.  k pads up to a chunk multiple."""
-    k = batch_size(ops)
+    k = batch_size(batch)
     chunk = max(1, min(chunk, k))
-    padded, _ = pad_to_multiple(ops, chunk)
+    padded, _ = pad_to_multiple(batch, chunk)
     k_pad = batch_size(padded)
     chunked = jax.tree.map(
         lambda a: a.reshape((k_pad // chunk, chunk) + a.shape[1:]), padded)
-    inner = _vmapped_solve(K_mv, KT_mv, solver_kw)
+    inner = make_map_solver(K_mv, KT_mv, solver_kw, engine)
     res = jax.jit(lambda c: jax.lax.map(inner, c))(chunked)
     res = jax.tree.map(lambda a: a.reshape((k_pad,) + a.shape[2:]), res)
     return _slice_result(res, k)
 
 
 @register_backend("shard_map")
-def solve_shard_map(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+def solve_shard_map(batch, K_mv, KT_mv, solver_kw,
+                    engine: EngineSpec = "matvec",
                     mesh: Optional[Mesh] = None,
                     axis: str = "pop",
                     chunk: Optional[int] = None) -> SolveResult:
-    """Shard the k sub-problems over a mesh axis; vmap within each shard.
-    No collectives in the mapped body — POP sub-problems are independent
-    by construction.  Goes through :mod:`repro.core.compat` so it runs on
-    any JAX that has shard_map under either name/kwarg spelling.
+    """Shard the k sub-problems over a mesh axis; solve batched within each
+    shard.  No collectives in the mapped body — POP sub-problems are
+    independent by construction.  Goes through :mod:`repro.core.compat` so
+    it runs on any JAX that has shard_map under either name/kwarg spelling.
 
     ``chunk`` bounds per-device memory the same way chunked_vmap does on
-    one device: each shard walks its lanes in vmapped chunks of that size
+    one device: each shard walks its lanes in batched chunks of that size
     (``None`` = decide from the per-device share: chunk only when it
     exceeds the single-device vmap ceiling; ``0`` = never chunk)."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (axis,))
     n_dev = mesh.shape[axis]
     if chunk is None:
-        per_dev = -(-batch_size(ops) // n_dev)
+        per_dev = -(-batch_size(batch) // n_dev)
         heavy = (per_dev > AUTO_VMAP_MAX_K
-                 or per_dev * max(_n_elems_per_sub(ops), 1)
+                 or per_dev * max(_n_elems_per_sub(batch[0]), 1)
                  > AUTO_VMAP_MAX_ELEMS)
         chunk = DEFAULT_CHUNK if heavy else 0
-    padded, k = pad_to_multiple(ops, n_dev * chunk if chunk else n_dev)
+    padded, k = pad_to_multiple(batch, n_dev * chunk if chunk else n_dev)
 
-    inner = _vmapped_solve(K_mv, KT_mv, solver_kw)
+    inner = make_map_solver(K_mv, KT_mv, solver_kw, engine)
     if chunk:
-        def local_solve(local_ops):
+        def local_solve(local_batch):
             chunked = jax.tree.map(
                 lambda a: a.reshape((a.shape[0] // chunk, chunk)
-                                    + a.shape[1:]), local_ops)
+                                    + a.shape[1:]), local_batch)
             res = jax.lax.map(inner, chunked)
             return jax.tree.map(
                 lambda a: a.reshape((-1,) + a.shape[2:]), res)
@@ -198,17 +272,19 @@ def solve_shard_map(ops: OperatorLP, K_mv, KT_mv, solver_kw,
 
 
 @register_backend("pmap")
-def solve_pmap(ops: OperatorLP, K_mv, KT_mv, solver_kw,
+def solve_pmap(batch, K_mv, KT_mv, solver_kw,
+               engine: EngineSpec = "matvec",
                devices: Optional[list] = None) -> SolveResult:
-    """Per-device vmapped shards via ``jax.pmap`` — fallback when shard_map
+    """Per-device batched shards via ``jax.pmap`` — fallback when shard_map
     is unusable on the installed JAX/platform."""
     devices = list(devices if devices is not None else jax.devices())
     n_dev = len(devices)
-    padded, k = pad_to_multiple(ops, n_dev)
+    padded, k = pad_to_multiple(batch, n_dev)
     k_pad = batch_size(padded)
     sharded = jax.tree.map(
         lambda a: a.reshape((n_dev, k_pad // n_dev) + a.shape[1:]), padded)
-    fn = jax.pmap(_vmapped_solve(K_mv, KT_mv, solver_kw), devices=devices)
+    fn = jax.pmap(make_map_solver(K_mv, KT_mv, solver_kw, engine),
+                  devices=devices)
     res = fn(sharded)
     res = jax.tree.map(lambda a: a.reshape((k_pad,) + a.shape[2:]), res)
     return _slice_result(res, k)
@@ -241,20 +317,52 @@ def _n_elems_per_sub(ops: OperatorLP) -> int:
     return sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(ops))
 
 
-def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
-              backend: str = "auto", **opts: Any) -> SolveResult:
-    """Run the POP map step on stacked ``ops`` with the named backend
-    (``"auto"`` resolves via :func:`select_backend`).
+def _resolve_warm(ops: OperatorLP, warm) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Starting iterates from ``warm``: None (cold), a SolveResult-like
+    object with .x/.y, or an (x, y) pair — each stacked [k, ...]."""
+    if warm is None:
+        return cold_start(ops)
+    if hasattr(warm, "x") and hasattr(warm, "y"):
+        wx, wy = warm.x, warm.y
+    else:
+        wx, wy = warm
+    wx = jnp.asarray(wx, ops.c.dtype)
+    wy = jnp.asarray(wy, ops.q.dtype)
+    if wx.shape != ops.c.shape or wy.shape != ops.q.shape:
+        raise ValueError(
+            f"warm-start shapes {wx.shape}/{wy.shape} do not match the "
+            f"stacked problem {ops.c.shape}/{ops.q.shape} — warm re-solves "
+            "need the SAME partition (pass the previous result's idx)")
+    return wx, wy
 
-    Under ``"auto"``, opts the chosen backend doesn't take (e.g. ``chunk=``
-    when it resolves to vmap) are dropped — they are hints for *whichever*
-    backend wins, not requirements.  An explicitly named backend still
-    rejects unknown opts."""
+
+def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
+              backend: str = "auto", engine: EngineSpec = "auto",
+              warm=None, **opts: Any) -> SolveResult:
+    """Run the POP map step on stacked ``ops`` with the named backend
+    (``"auto"`` resolves via :func:`select_backend`) and step engine
+    (``"auto"`` resolves via :func:`repro.core.pdhg.select_engine`).
+
+    ``warm`` seeds every lane from a previous solve of a nearby instance
+    (a SolveResult, or an (x, y) pair) — the online re-solve path.
+
+    Under ``backend="auto"``, opts the chosen backend doesn't take (e.g.
+    ``chunk=`` when it resolves to vmap) are dropped — they are hints for
+    *whichever* backend wins, not requirements.  An explicitly named
+    backend still rejects unknown opts."""
     solver_kw = dict(solver_kw or {})
+    if engine == "auto" or engine is None:
+        engine = pdhg.select_engine(ops, K_mv, KT_mv)
+    if engine != "matvec":
+        # canonical resolution/validation lives in pdhg.resolve_engine;
+        # "matvec" stays a string so _build_solver takes the vmapped path
+        engine = pdhg.resolve_engine(engine, ops, K_mv, KT_mv)
+    batch = (ops, *_resolve_warm(ops, warm))
     if backend == "auto":
         backend = select_backend(batch_size(ops), _n_elems_per_sub(ops))
         if opts:
             import inspect
             accepted = inspect.signature(get_backend(backend)).parameters
             opts = {k: v for k, v in opts.items() if k in accepted}
-    return get_backend(backend)(ops, K_mv, KT_mv, solver_kw, **opts)
+    return get_backend(backend)(batch, K_mv, KT_mv, solver_kw,
+                                engine=engine, **opts)

@@ -20,6 +20,51 @@ kernels in ``repro.kernels``); the big domain problems (traffic engineering
 with >10^6 variables) supply structured matvecs so the full unpartitioned
 baseline never materialises a dense K.
 
+Step-engine contract
+--------------------
+
+The inner-loop math (primal/dual half-steps, matvecs for KKT checks and the
+power iteration) is factored behind a :class:`StepEngine`.  An engine works
+on a whole STACKED batch of k sub-problems at once — every array carries a
+leading ``[k]`` axis and per-sub-problem scalars (step sizes) are ``[k]``
+vectors, because POP sub-problems restart independently and their step
+sizes diverge across the batch.  Two engines ship:
+
+``matvec`` (:func:`matvec_engine`)
+    Wraps the user's ``K_mv``/``KT_mv`` callables with ``jax.vmap`` and
+    applies the element-wise tails in plain jnp.  Works for ANY structured
+    operator; this is the only engine usable for non-dense problems.
+
+``fused`` (:func:`fused_dense_engine`)
+    Dense-data-only.  Routes the primal and dual half-steps through the
+    batched fused kernels in ``repro.kernels.ops`` (``fused_primal_step`` /
+    ``fused_dual_step``), so on TPU the matvec partials stay in VMEM and
+    the axpy+projection tail runs in the SAME kernel launch — one launch
+    per half-step for the whole k-stack instead of k vmapped solves.
+    ``kernels/ops.py`` dispatches per platform: compiled Pallas on TPU,
+    the pure-jnp reference (still algebraically fused) elsewhere, with
+    ``interpret`` available for kernel debugging on CPU.
+
+``engine="auto"`` (:func:`select_engine`) picks ``fused`` for dense
+operator data on TPU and ``matvec`` otherwise.  Engines differ only in
+scheduling/fusion, never in math — ``tests/test_step_engine.py`` pins them
+to each other at 1e-5 on fixed iteration budgets.
+
+:func:`solve_stacked` is the batched entry point (what the map-step
+backends in ``core/backends.py`` call for the fused path);
+:func:`solve` is the single-problem wrapper (a k=1 stack).
+
+Warm starts
+-----------
+
+``solve``/``solve_stacked`` accept ``warm_x``/``warm_y`` — the previous
+solution of a nearby instance.  For online re-solves (scheduler rounds,
+load-balancer ticks) a warm start typically cuts iteration counts by far
+more than half (``benchmarks/bench_online_resolve.py`` measures this).
+With ``equilibrate=True`` the warm iterates are mapped into the scaled
+space (``x/d_c``, ``y/d_r``) before iterating, so warm-starting composes
+with scaling.
+
 Algorithm: Chambolle–Pock primal–dual with
   * power-iteration estimate of ||K||,
   * step sizes tau = eta/(omega*||K||), sigma = eta*omega/||K||,
@@ -33,7 +78,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -80,34 +125,213 @@ class SolveResult(NamedTuple):
 
 
 # --------------------------------------------------------------------------
-# internals
+# step engines
 # --------------------------------------------------------------------------
 
-def _power_iteration(K_mv, KT_mv, data, n_var, iters: int = 30):
-    """||K||_2 via power iteration on K^T K (deterministic start)."""
-    v0 = jnp.full((n_var,), 1.0 / jnp.sqrt(n_var), jnp.float32)
+class StepEngine(NamedTuple):
+    """Batched inner-loop math for the PDHG solver (see module docstring).
+
+    All callables take STACKED arrays (leading ``[k]`` sub-problem axis):
+
+      K(data, x[k,N]) -> [k,M]         KT(data, y[k,M]) -> [k,N]
+      primal(data, y, x, c, l, u, tau[k]) -> (x_new, x_bar)     # [k,N] each
+      dual(data, x_bar, y, q, sigma[k], ineq_mask) -> y_new     # [k,M]
+
+    ``scale_data``, if set, rescales the operator payload for Ruiz
+    equilibration (``data, d_r[k,M], d_c[k,N] -> data``); engines without
+    it (structured operators) get their K/KT wrapped functionally instead.
+    """
+
+    name: str
+    K: Callable
+    KT: Callable
+    primal: Callable
+    dual: Callable
+    scale_data: Optional[Callable] = None
+
+
+def _engine_from_matvecs(name: str, bK: Callable, bKT: Callable,
+                         scale_data: Optional[Callable] = None) -> StepEngine:
+    """Build the element-wise step tails from batched matvecs."""
+
+    def primal(data, y, x, c, l, u, tau):
+        x_new = jnp.clip(x - tau[:, None] * (c + bKT(data, y)), l, u)
+        return x_new, 2.0 * x_new - x
+
+    def dual(data, x_bar, y, q, sigma, ineq_mask):
+        y_new = y + sigma[:, None] * (bK(data, x_bar) - q)
+        return jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+
+    return StepEngine(name, bK, bKT, primal, dual, scale_data)
+
+
+def matvec_engine(K_mv: Callable = dense_K_mv,
+                  KT_mv: Callable = dense_KT_mv) -> StepEngine:
+    """Generic operator engine: vmap the per-problem matvecs over the
+    sub-problem axis.  Works for any structured ``data`` pytree."""
+    return _engine_from_matvecs(
+        "matvec", jax.vmap(K_mv, in_axes=(0, 0)), jax.vmap(KT_mv, in_axes=(0, 0)))
+
+
+@functools.lru_cache(maxsize=16)
+def fused_dense_engine(kernel_backend: Optional[str] = None,
+                       block_m: Optional[int] = None,
+                       block_n: Optional[int] = None) -> StepEngine:
+    """Dense engine over the fused Pallas kernels (``repro.kernels.ops``).
+
+    One kernel launch covers the whole stacked batch per half-step.
+    ``kernel_backend`` follows ``kernels/ops.py`` dispatch: ``None``/"auto"
+    = compiled Pallas on TPU, pure-jnp reference elsewhere; "interpret" and
+    "xla" force the Pallas interpreter / the reference.  Cached so repeated
+    calls return the same object (keeps downstream jit caches warm).
+    """
+    from ..kernels import ops as kops
+
+    kw: dict = dict(backend=kernel_backend)
+    if block_m is not None:
+        kw["block_m"] = block_m
+    if block_n is not None:
+        kw["block_n"] = block_n
+
+    def K(data, x):
+        return kops.bmatvec(data[0], x, **kw)
+
+    def KT(data, y):
+        return kops.bmatvec_t(data[0], y, **kw)
+
+    def primal(data, y, x, c, l, u, tau):
+        return kops.fused_primal_step(data[0], y, x, c, l, u, tau, **kw)
+
+    def dual(data, x_bar, y, q, sigma, ineq_mask):
+        return kops.fused_dual_step(data[0], x_bar, y, q, sigma, ineq_mask, **kw)
+
+    def scale_data(data, d_r, d_c):
+        (K_,) = data
+        return (K_ * d_r[..., :, None] * d_c[..., None, :],)
+
+    return StepEngine("fused", K, KT, primal, dual, scale_data)
+
+
+def is_dense_ops(op: OperatorLP) -> bool:
+    """True iff ``op.data`` is a single dense [..., M, N] constraint matrix
+    (the layout :func:`dense_ops` produces) — the fused engine's requirement."""
+    leaves = jax.tree.leaves(op.data)
+    if len(leaves) != 1:
+        return False
+    K = leaves[0]
+    return (K.ndim == op.c.ndim + 1
+            and K.shape[-1] == op.c.shape[-1]
+            and K.shape[-2] == op.q.shape[-1])
+
+
+def select_engine(op: OperatorLP, K_mv: Callable = dense_K_mv,
+                  KT_mv: Callable = dense_KT_mv) -> str:
+    """``engine="auto"`` rule: fused needs dense data AND the dense matvecs
+    AND a TPU (elsewhere XLA fuses the reference path just as well);
+    structured operators always take the matvec engine."""
+    dense = (K_mv is dense_K_mv and KT_mv is dense_KT_mv and is_dense_ops(op))
+    if dense and jax.default_backend() == "tpu":
+        return "fused"
+    return "matvec"
+
+
+def resolve_engine(engine: Union[None, str, StepEngine], op: OperatorLP,
+                   K_mv: Callable = dense_K_mv,
+                   KT_mv: Callable = dense_KT_mv) -> StepEngine:
+    """Normalise an engine spec (None/"auto"/"matvec"/"fused"/StepEngine)."""
+    if isinstance(engine, StepEngine):
+        return engine
+    if engine is None or engine == "auto":
+        engine = select_engine(op, K_mv, KT_mv)
+    if engine == "matvec":
+        return matvec_engine(K_mv, KT_mv)
+    if engine == "fused":
+        if not is_dense_ops(op):
+            raise ValueError(
+                "engine='fused' needs dense operator data (op.data == (K,) "
+                "with K [..., M, N]); structured operators use engine='matvec'")
+        return fused_dense_engine()
+    raise ValueError(f"unknown engine {engine!r}; "
+                     "expected 'auto', 'matvec', 'fused', or a StepEngine")
+
+
+# --------------------------------------------------------------------------
+# scaling helpers — the ONE place BIG-sentinel bounds handling lives, shared
+# by the probe-based path (solve(equilibrate=True)) and dense ruiz_equilibrate
+# --------------------------------------------------------------------------
+
+def scale_operator(op: OperatorLP, d_r: jnp.ndarray, d_c: jnp.ndarray,
+                   data: Any = None) -> OperatorLP:
+    """Apply diagonal scalings K~ = D_r K D_c to the LP fields.
+
+    BIG-sentinel bounds (|l| or |u| >= BIG/2 — "effectively free") stay
+    untouched so padded/free variables keep their infinite box after
+    scaling.  ``data`` replaces the operator payload when the caller has a
+    scaled one (dense K); by default the payload is left alone and the
+    matvecs are expected to be wrapped instead.
+    """
+    keep_l = jnp.abs(op.l) >= 0.5 * BIG
+    keep_u = jnp.abs(op.u) >= 0.5 * BIG
+    return OperatorLP(
+        c=op.c * d_c, q=op.q * d_r,
+        l=jnp.where(keep_l, op.l, op.l / d_c),
+        u=jnp.where(keep_u, op.u, op.u / d_c),
+        ineq_mask=op.ineq_mask,
+        data=op.data if data is None else data)
+
+
+def scale_warm_start(x: jnp.ndarray, y: jnp.ndarray, d_r, d_c):
+    """Original-space iterates -> scaled space (inverse of unscale)."""
+    return x / d_c, y / d_r
+
+
+def unscale_solution(x: jnp.ndarray, y: jnp.ndarray, d_r, d_c):
+    """Scaled-space iterates -> original space: x = d_c x~, y = d_r y~."""
+    return d_c * x, d_r * y
+
+
+# --------------------------------------------------------------------------
+# internals (all batched over the leading [k] sub-problem axis)
+# --------------------------------------------------------------------------
+
+def _vnorm(a: jnp.ndarray) -> jnp.ndarray:
+    """Per-sub-problem 2-norm: [k, n] -> [k]."""
+    return jnp.linalg.norm(a, axis=-1)
+
+
+def _bcast(cond: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Right-pad a [k] predicate with singleton axes to broadcast against
+    ``like`` ([k] or [k, n])."""
+    return cond.reshape(cond.shape + (1,) * (like.ndim - cond.ndim))
+
+
+def _power_iteration(engine: StepEngine, data, k: int, n_var: int,
+                     iters: int = 30):
+    """||K||_2 per lane via power iteration on K^T K (deterministic start)."""
+    v0 = jnp.full((k, n_var), 1.0 / jnp.sqrt(n_var), jnp.float32)
 
     def body(_, v):
-        w = KT_mv(data, K_mv(data, v))
-        return w / (jnp.linalg.norm(w) + 1e-30)
+        w = engine.KT(data, engine.K(data, v))
+        return w / (_vnorm(w)[:, None] + 1e-30)
 
     v = jax.lax.fori_loop(0, iters, body, v0)
-    return jnp.sqrt(jnp.linalg.norm(KT_mv(data, K_mv(data, v)))) + 1e-12
+    return jnp.sqrt(_vnorm(engine.KT(data, engine.K(data, v)))) + 1e-12
 
 
-def _kkt(op: OperatorLP, K_mv, KT_mv, x, y):
-    """(primal_res_rel, gap_rel, primal_obj, dual_obj)."""
-    Kx = K_mv(op.data, x)
+def _kkt(op: OperatorLP, engine: StepEngine, x, y):
+    """(primal_res_rel, gap_rel, primal_obj, dual_obj), each [k]."""
+    Kx = engine.K(op.data, x)
     resid = Kx - op.q
     prim_viol = jnp.where(op.ineq_mask, jnp.maximum(resid, 0.0), resid)
     # padded rows carry q = BIG — exclude them from the relative denominator
     q_eff = jnp.where(jnp.abs(op.q) >= 0.5 * BIG, 0.0, op.q)
-    prim_res = jnp.linalg.norm(prim_viol) / (1.0 + jnp.linalg.norm(q_eff))
+    prim_res = _vnorm(prim_viol) / (1.0 + _vnorm(q_eff))
 
-    r = op.c + KT_mv(op.data, y)                       # reduced costs
-    p_obj = jnp.dot(op.c, x)
+    r = op.c + engine.KT(op.data, y)                  # reduced costs
+    p_obj = jnp.sum(op.c * x, axis=-1)
     # g(y) = -q.y + sum_i min(l_i r_i, u_i r_i); BIG bounds act as -inf penalty
-    d_obj = -jnp.dot(op.q, y) + jnp.sum(jnp.minimum(op.l * r, op.u * r))
+    d_obj = (-jnp.sum(op.q * y, axis=-1)
+             + jnp.sum(jnp.minimum(op.l * r, op.u * r), axis=-1))
     gap = jnp.abs(p_obj - d_obj) / (1.0 + jnp.abs(p_obj) + jnp.abs(d_obj))
     return prim_res, gap, p_obj, d_obj
 
@@ -117,50 +341,46 @@ class _State(NamedTuple):
     y: jnp.ndarray
     x_sum: jnp.ndarray
     y_sum: jnp.ndarray
-    avg_n: jnp.ndarray        # iterations accumulated since restart
+    avg_n: jnp.ndarray        # [k] iterations accumulated since restart
     x_anchor: jnp.ndarray     # iterate at last restart (for omega update)
     y_anchor: jnp.ndarray
-    omega: jnp.ndarray        # primal weight
-    last_score: jnp.ndarray   # KKT score at last restart (decay test)
-    it: jnp.ndarray
-    done: jnp.ndarray
+    omega: jnp.ndarray        # [k] primal weight
+    last_score: jnp.ndarray   # [k] KKT score at last restart (decay test)
+    it: jnp.ndarray           # [k]
+    done: jnp.ndarray         # [k]
     prim_res: jnp.ndarray
     gap: jnp.ndarray
 
 
-def _probe_norms(K_mv, KT_mv, data, n_var, n_con, d_r, d_c, key, n_probes=4):
-    """Hutchinson-style row/col 2-norm estimates of the SCALED operator
-    D_r K D_c without materialising K:  with Rademacher v (E[vv^T]=I),
-    E[(Kv)_i^2] = sum_j K_ij^2 — i.e. squared row norms; columns dual."""
-    kr, kc = jax.random.split(key)
-    vs = jax.random.rademacher(kr, (n_probes, n_var), jnp.float32)
-    rows = jnp.mean(jax.vmap(
-        lambda v: jnp.square(d_r * K_mv(data, d_c * v)))(vs), axis=0)
-    us = jax.random.rademacher(kc, (n_probes, n_con), jnp.float32)
-    cols = jnp.mean(jax.vmap(
-        lambda u: jnp.square(d_c * KT_mv(data, d_r * u)))(us), axis=0)
-    return jnp.sqrt(rows), jnp.sqrt(cols)
-
-
-def _equilibrate(op: OperatorLP, K_mv, KT_mv, iters: int = 2, n_probes: int = 4):
+def _equilibrate(engine: StepEngine, op: OperatorLP,
+                 iters: int = 2, n_probes: int = 4):
     """Operator-form Ruiz equilibration (EXPERIMENTS.md §Perf hillclimb 3):
-    returns (d_r, d_c) diagonal scalings estimated purely through matvec
-    probes — works for ANY structured operator, not just dense K."""
-    n_var = op.c.shape[0]
-    n_con = op.q.shape[0]
-    d_r = jnp.ones(n_con)
-    d_c = jnp.ones(n_var)
+    per-lane (d_r, d_c) diagonal scalings estimated purely through matvec
+    probes (Hutchinson: with Rademacher v, E[(Kv)_i^2] = squared row norms;
+    columns dual) — works for ANY structured operator, not just dense K.
+    The same probe vectors are shared across the k lanes."""
+    n_var = op.c.shape[-1]
+    n_con = op.q.shape[-1]
+    d_r = jnp.ones_like(op.q)
+    d_c = jnp.ones_like(op.c)
     key = jax.random.PRNGKey(7)
     for i in range(iters):
-        rn, cn = _probe_norms(K_mv, KT_mv, op.data, n_var, n_con,
-                              d_r, d_c, jax.random.fold_in(key, i), n_probes)
+        kr, kc = jax.random.split(jax.random.fold_in(key, i))
+        vs = jax.random.rademacher(kr, (n_probes, n_var), jnp.float32)
+        rows = jnp.mean(jax.vmap(
+            lambda v: jnp.square(d_r * engine.K(op.data, d_c * v)))(vs), axis=0)
+        us = jax.random.rademacher(kc, (n_probes, n_con), jnp.float32)
+        cols = jnp.mean(jax.vmap(
+            lambda u: jnp.square(d_c * engine.KT(op.data, d_r * u)))(us), axis=0)
+        rn, cn = jnp.sqrt(rows), jnp.sqrt(cols)
         d_r = d_r / jnp.sqrt(jnp.where(rn > 1e-8, rn, 1.0))
         d_c = d_c / jnp.sqrt(jnp.where(cn > 1e-8, cn, 1.0))
     return d_r, d_c
 
 
-def solve(
+def solve_stacked(
     op: OperatorLP,
+    engine: Union[None, str, StepEngine] = None,
     K_mv: Callable = dense_K_mv,
     KT_mv: Callable = dense_KT_mv,
     *,
@@ -171,41 +391,54 @@ def solve(
     eta: float = 0.9,
     omega0: float = 1.0,
     equilibrate: bool = False,
-    warm_x: jnp.ndarray | None = None,
-    warm_y: jnp.ndarray | None = None,
+    warm_x: Optional[jnp.ndarray] = None,
+    warm_y: Optional[jnp.ndarray] = None,
 ) -> SolveResult:
-    """Solve one LP.  Fully traceable; vmap over a batched ``op`` for POP."""
-    n_var = op.c.shape[0]
-    n_con = op.q.shape[0]
+    """Solve a STACK of k LPs at once (every ``op`` leaf has a leading [k]
+    axis; the result carries the same axis).  This is the map-step core:
+    one fori/while loop drives all k sub-problems with per-lane step sizes,
+    restarts and termination, so the fused engine can hand the whole batch
+    to single kernel launches.  Fully traceable.
+    """
+    eng = resolve_engine(engine, op, K_mv, KT_mv)
+    k = op.c.shape[0]
+    n_var = op.c.shape[-1]
 
+    op_run, eng_run = op, eng
     if equilibrate:
-        d_r, d_c = _equilibrate(op, K_mv, KT_mv)
-        op_orig, K_mv_orig, KT_mv_orig = op, K_mv, KT_mv
-        K_mv = lambda data, x: d_r * K_mv_orig(data, d_c * x)   # noqa: E731
-        KT_mv = lambda data, y: d_c * KT_mv_orig(data, d_r * y)  # noqa: E731
-        keep_l = jnp.abs(op.l) >= 0.5 * BIG
-        keep_u = jnp.abs(op.u) >= 0.5 * BIG
-        op = OperatorLP(
-            c=op.c * d_c, q=op.q * d_r,
-            l=jnp.where(keep_l, op_orig.l, op_orig.l / d_c),
-            u=jnp.where(keep_u, op_orig.u, op_orig.u / d_c),
-            ineq_mask=op.ineq_mask, data=op.data)
+        d_r, d_c = _equilibrate(eng, op)
+        if eng.scale_data is not None:
+            op_run = scale_operator(op, d_r, d_c,
+                                    data=eng.scale_data(op.data, d_r, d_c))
+        else:
+            op_run = scale_operator(op, d_r, d_c)
+            eng_run = _engine_from_matvecs(
+                eng.name + "_scaled",
+                lambda data, x: d_r * eng.K(data, d_c * x),
+                lambda data, y: d_c * eng.KT(data, d_r * y))
+        # warm iterates arrive in ORIGINAL space — map into scaled space
+        if warm_x is not None:
+            warm_x = warm_x / d_c
+        if warm_y is not None:
+            warm_y = warm_y / d_r
 
-    knorm = _power_iteration(K_mv, KT_mv, op.data, n_var)
+    knorm = _power_iteration(eng_run, op_run.data, k, n_var)   # [k]
 
-    x0 = jnp.clip(jnp.zeros(n_var), op.l, op.u) if warm_x is None else warm_x
-    y0 = jnp.zeros(n_con) if warm_y is None else warm_y
+    x0 = (jnp.clip(jnp.zeros_like(op_run.c), op_run.l, op_run.u)
+          if warm_x is None else jnp.asarray(warm_x, op_run.c.dtype))
+    y0 = (jnp.zeros_like(op_run.q)
+          if warm_y is None else jnp.asarray(warm_y, op_run.q.dtype))
 
     def chunk(state: _State) -> _State:
-        tau = eta / (state.omega * knorm)
-        sigma = eta * state.omega / knorm
+        tau = eta / (state.omega * knorm)          # [k]
+        sigma = eta * state.omega / knorm          # [k]
 
         def one_iter(_, carry):
             x, y, xs, ys = carry
-            x_new = jnp.clip(x - tau * (op.c + KT_mv(op.data, y)), op.l, op.u)
-            x_bar = 2.0 * x_new - x
-            y_new = y + sigma * (K_mv(op.data, x_bar) - op.q)
-            y_new = jnp.where(op.ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+            x_new, x_bar = eng_run.primal(op_run.data, y, x, op_run.c,
+                                          op_run.l, op_run.u, tau)
+            y_new = eng_run.dual(op_run.data, x_bar, y, op_run.q, sigma,
+                                 op_run.ineq_mask)
             return x_new, y_new, xs + x_new, ys + y_new
 
         x, y, xs, ys = jax.lax.fori_loop(
@@ -215,15 +448,15 @@ def solve(
         avg_n = state.avg_n + check_every
 
         # ---- candidate = better of {current, running average} ------------
-        x_avg = xs / avg_n
-        y_avg = ys / avg_n
-        pr_c, gap_c, _, _ = _kkt(op, K_mv, KT_mv, x, y)
-        pr_a, gap_a, _, _ = _kkt(op, K_mv, KT_mv, x_avg, y_avg)
+        x_avg = xs / avg_n[:, None]
+        y_avg = ys / avg_n[:, None]
+        pr_c, gap_c, _, _ = _kkt(op_run, eng_run, x, y)
+        pr_a, gap_a, _, _ = _kkt(op_run, eng_run, x_avg, y_avg)
         score_c = pr_c + gap_c
         score_a = pr_a + gap_a
-        use_avg = score_a < score_c
-        x_r = jnp.where(use_avg, x_avg, x)
-        y_r = jnp.where(use_avg, y_avg, y)
+        use_avg = score_a < score_c                # [k]
+        x_r = jnp.where(use_avg[:, None], x_avg, x)
+        y_r = jnp.where(use_avg[:, None], y_avg, y)
         pr = jnp.where(use_avg, pr_a, pr_c)
         gap = jnp.where(use_avg, gap_a, gap_c)
         score = jnp.minimum(score_a, score_c)
@@ -233,8 +466,8 @@ def solve(
         restart = (score < 0.4 * state.last_score) | (avg_n >= 16 * check_every)
 
         # ---- primal weight update at restarts (PDLP eq. 10, smoothed) -----
-        dx = jnp.linalg.norm(x_r - state.x_anchor)
-        dy = jnp.linalg.norm(y_r - state.y_anchor)
+        dx = _vnorm(x_r - state.x_anchor)
+        dy = _vnorm(y_r - state.y_anchor)
         safe = (dx > 1e-12) & (dy > 1e-12)
         ratio = jnp.where(safe, dy / jnp.maximum(dx, 1e-12), 1.0)
         omega_new = jnp.exp(
@@ -245,10 +478,12 @@ def solve(
         done = state.done | conv
 
         def pick(on_restart, no_restart):
-            return jnp.where(restart, on_restart, no_restart)
+            return jnp.where(_bcast(restart, on_restart), on_restart, no_restart)
 
-        # freeze finished lanes (matters under vmap: batch peers keep going)
-        keep = lambda new, old: jnp.where(state.done, old, new)
+        # freeze finished lanes: batch peers keep going
+        def keep(new, old):
+            return jnp.where(_bcast(state.done, new), old, new)
+
         return _State(
             x=keep(pick(x_r, x), state.x),
             y=keep(pick(y_r, y), state.y),
@@ -267,42 +502,73 @@ def solve(
     init = _State(
         x=x0, y=y0,
         x_sum=jnp.zeros_like(x0), y_sum=jnp.zeros_like(y0),
-        avg_n=jnp.zeros((), jnp.float32),
+        avg_n=jnp.zeros((k,), jnp.float32),
         x_anchor=x0, y_anchor=y0,
-        omega=jnp.asarray(omega0, jnp.float32),
-        last_score=jnp.asarray(jnp.inf),
-        it=jnp.zeros((), jnp.int32),
-        done=jnp.zeros((), bool),
-        prim_res=jnp.asarray(jnp.inf), gap=jnp.asarray(jnp.inf),
+        omega=jnp.full((k,), omega0, jnp.float32),
+        last_score=jnp.full((k,), jnp.inf),
+        it=jnp.zeros((k,), jnp.int32),
+        done=jnp.zeros((k,), bool),
+        prim_res=jnp.full((k,), jnp.inf), gap=jnp.full((k,), jnp.inf),
     )
 
     state = jax.lax.while_loop(
-        lambda s: (~s.done) & (s.it < max_iters), chunk, init
+        lambda s: jnp.any((~s.done) & (s.it < max_iters)), chunk, init
     )
 
     x_fin, y_fin = state.x, state.y
     if equilibrate:
         # report in ORIGINAL space
-        x_fin = d_c * x_fin
-        y_fin = d_r * y_fin
-        op, K_mv, KT_mv = op_orig, K_mv_orig, KT_mv_orig
-    pr, gap, p_obj, d_obj = _kkt(op, K_mv, KT_mv, x_fin, y_fin)
+        x_fin, y_fin = unscale_solution(x_fin, y_fin, d_r, d_c)
+    pr, gap, p_obj, d_obj = _kkt(op, eng, x_fin, y_fin)
     return SolveResult(
         x=x_fin, y=y_fin, primal_obj=p_obj, dual_obj=d_obj,
         primal_res=pr, gap=gap, iterations=state.it, converged=state.done,
     )
 
 
+def solve(
+    op: OperatorLP,
+    K_mv: Callable = dense_K_mv,
+    KT_mv: Callable = dense_KT_mv,
+    *,
+    max_iters: int = 20_000,
+    check_every: int = 40,
+    tol_primal: float = 1e-4,
+    tol_gap: float = 1e-4,
+    eta: float = 0.9,
+    omega0: float = 1.0,
+    equilibrate: bool = False,
+    warm_x: Optional[jnp.ndarray] = None,
+    warm_y: Optional[jnp.ndarray] = None,
+    engine: Union[None, str, StepEngine] = "matvec",
+) -> SolveResult:
+    """Solve one LP: a k=1 stack through :func:`solve_stacked`.  Fully
+    traceable; vmap over a batched ``op`` for POP (or better, hand the
+    whole stack to ``solve_stacked`` / ``backends.solve_map``)."""
+    opb = jax.tree.map(lambda a: jnp.asarray(a)[None], op)
+    wx = None if warm_x is None else jnp.asarray(warm_x)[None]
+    wy = None if warm_y is None else jnp.asarray(warm_y)[None]
+    res = solve_stacked(
+        opb, engine=engine, K_mv=K_mv, KT_mv=KT_mv,
+        max_iters=max_iters, check_every=check_every,
+        tol_primal=tol_primal, tol_gap=tol_gap, eta=eta, omega0=omega0,
+        equilibrate=equilibrate, warm_x=wx, warm_y=wy)
+    return jax.tree.map(lambda a: a[0], res)
+
+
 # --------------------------------------------------------------------------
 # Ruiz equilibration (dense path) — first-order methods live or die by
 # conditioning; diagonal rescaling cuts PDHG iteration counts by 10-100x.
+# Bounds/rhs handling is shared with the probe path via scale_operator.
 # --------------------------------------------------------------------------
 
 def ruiz_equilibrate(op: OperatorLP, iters: int = 8):
     """Return (scaled_op, d_row, d_col) with K~ = D_r K D_c equilibrated.
 
-    Recover original-space solutions as  x = d_col * x~,  y = d_row * y~.
-    Dense-data only (needs explicit row/col norms).
+    Recover original-space solutions as  x = d_col * x~,  y = d_row * y~
+    (:func:`unscale_solution`).  Dense-data only (needs explicit row/col
+    norms); the probe-based path inside ``solve(equilibrate=True)`` covers
+    structured operators.
     """
     (K,) = op.data
     d_r = jnp.ones(K.shape[0])
@@ -319,15 +585,7 @@ def ruiz_equilibrate(op: OperatorLP, iters: int = 8):
 
     d_r, d_c = jax.lax.fori_loop(0, iters, body, (d_r, d_c))
     Ks = K * d_r[:, None] * d_c[None, :]
-    scaled = OperatorLP(
-        c=op.c * d_c,
-        q=op.q * d_r,
-        l=jnp.where(jnp.abs(op.l) >= 0.5 * BIG, op.l, op.l / d_c),
-        u=jnp.where(jnp.abs(op.u) >= 0.5 * BIG, op.u, op.u / d_c),
-        ineq_mask=op.ineq_mask,
-        data=(Ks,),
-    )
-    return scaled, d_r, d_c
+    return scale_operator(op, d_r, d_c, data=(Ks,)), d_r, d_c
 
 
 # --------------------------------------------------------------------------
@@ -342,16 +600,19 @@ def solve_dense(lp: LinearProgram, max_iters: int = 20_000,
     res = solve(sop, dense_K_mv, dense_KT_mv,
                 max_iters=max_iters, tol_primal=tol_primal, tol_gap=tol_gap)
     # report objective/residuals in ORIGINAL space
-    x = res.x * d_c
-    y = res.y * d_r
-    pr, gap, p_obj, d_obj = _kkt(op, dense_K_mv, dense_KT_mv, x, y)
-    return SolveResult(x=x, y=y, primal_obj=p_obj, dual_obj=d_obj,
-                       primal_res=pr, gap=gap,
+    x, y = unscale_solution(res.x, res.y, d_r, d_c)
+    pr, gap, p_obj, d_obj = _kkt(jax.tree.map(lambda a: a[None], op),
+                                 matvec_engine(), x[None], y[None])
+    squeeze = lambda a: a[0]
+    return SolveResult(x=x, y=y, primal_obj=squeeze(p_obj),
+                       dual_obj=squeeze(d_obj), primal_res=squeeze(pr),
+                       gap=squeeze(gap),
                        iterations=res.iterations, converged=res.converged)
 
 
 def solve_batched(op_batched: OperatorLP, K_mv=dense_K_mv, KT_mv=dense_KT_mv,
                   **kw) -> SolveResult:
     """vmap over the leading (sub-problem) axis — POP's map step on one
-    device.  ``core/pop.py`` wraps this in shard_map for the mesh path."""
+    device.  ``core/backends.py`` wraps this in shard_map for the mesh path
+    and swaps in the fused engine for dense problems."""
     return jax.vmap(lambda o: solve(o, K_mv, KT_mv, **kw))(op_batched)

@@ -20,6 +20,7 @@ comparison — the paper's "original problem formulation".
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Optional
 
@@ -92,6 +93,10 @@ class POPResult:
     similarity: dict
     sub_objectives: np.ndarray
     replication: Optional[ReplicationPlan] = None
+    # raw stacked solver iterates [k, n_var]/[k, n_con] — the warm-start
+    # state for online re-solves (``pop_solve(..., warm=prev_result)``)
+    x: Optional[np.ndarray] = None
+    y: Optional[np.ndarray] = None
 
 
 # --------------------------------------------------------------------------
@@ -112,19 +117,28 @@ def pop_solve(
     *,
     strategy: str = "random",
     backend: str = "auto",
+    engine: str = "auto",
     seed: int = 0,
     replicate_threshold: Optional[float] = None,
     partition_idx: Optional[np.ndarray] = None,
     solver_kw: Optional[dict] = None,
     backend_opts: Optional[dict] = None,
+    warm: Optional[POPResult] = None,
 ) -> POPResult:
     """Run POP-k on ``problem``.  ``strategy`` ∈ {random, stratified, skewed-*}
     (domain problems may pass an explicit ``partition_idx`` for custom or
     adversarial splits).  ``replicate_threshold`` enables §4.3 hot-entity
     replication.  ``backend`` names a map-step backend from
     ``core/backends.py`` (``"auto"`` picks by k, device count and problem
-    size); ``backend_opts`` are forwarded to it (e.g. ``chunk=``,
-    ``mesh=``)."""
+    size); ``engine`` a PDHG step engine from ``core/pdhg.py`` (``"auto"``:
+    fused kernels for dense data on TPU, operator matvecs otherwise);
+    ``backend_opts`` are forwarded to the backend (e.g. ``chunk=``,
+    ``mesh=``).
+
+    ``warm`` re-solves an UPDATED instance from a previous :class:`POPResult`
+    (online path: perturbed throughputs/loads, same entities): the previous
+    partition is reused so sub-problem shapes line up, and every lane starts
+    from its previous (x, y) iterates instead of cold."""
     solver_kw = dict(solver_kw or {})
     n = problem.n_entities
     scores = np.asarray(problem.entity_scores(), np.float64)
@@ -135,7 +149,14 @@ def pop_solve(
     t0 = time.perf_counter()
     plan = None
     rep_scale = None
-    if partition_idx is not None:
+    if warm is not None:
+        if warm.x is None or warm.idx.shape[0] != k:
+            raise ValueError("warm result lacks solver state or was computed "
+                             f"with k={warm.idx.shape[0]} != {k}")
+        idx = warm.idx
+        plan = warm.replication
+        rep_scale = plan.replica_scale if plan is not None else None
+    elif partition_idx is not None:
         idx = partition_idx
     elif replicate_threshold is not None:
         plan = plan_replication(scores, k, replicate_threshold)
@@ -171,8 +192,10 @@ def pop_solve(
     build_time = time.perf_counter() - t0
 
     t1 = time.perf_counter()
+    warm_xy = None if warm is None else (warm.x, warm.y)
     res = backends_mod.solve_map(ops, problem.K_mv, problem.KT_mv, solver_kw,
-                                 backend=backend, **(backend_opts or {}))
+                                 backend=backend, engine=engine, warm=warm_xy,
+                                 **(backend_opts or {}))
     jax.block_until_ready(res.x)
     solve_time = time.perf_counter() - t1
 
@@ -195,18 +218,23 @@ def pop_solve(
         similarity=sim,
         sub_objectives=np.asarray(res.primal_obj),
         replication=plan,
+        x=np.asarray(res.x), y=np.asarray(res.y),
     )
 
 
-def solve_full(problem: POPProblem, solver_kw: Optional[dict] = None):
-    """Unpartitioned baseline (the paper's 'original problem')."""
+def solve_full(problem: POPProblem, solver_kw: Optional[dict] = None,
+               warm: Optional[SolveResult] = None):
+    """Unpartitioned baseline (the paper's 'original problem').  ``warm``
+    re-solves from a previous full-problem :class:`SolveResult`."""
     solver_kw = dict(solver_kw or {})
     t0 = time.perf_counter()
     op = problem.build_full()
     build_time = time.perf_counter() - t0
     t1 = time.perf_counter()
-    fn = jax.jit(lambda o: pdhg.solve(o, problem.K_mv, problem.KT_mv, **solver_kw))
-    res = fn(op)
+    fn = jax.jit(functools.partial(pdhg.solve, K_mv=problem.K_mv,
+                                   KT_mv=problem.KT_mv, **solver_kw))
+    res = (fn(op) if warm is None
+           else fn(op, warm_x=jnp.asarray(warm.x), warm_y=jnp.asarray(warm.y)))
     jax.block_until_ready(res.x)
     solve_time = time.perf_counter() - t1
     idx = np.arange(problem.n_entities)

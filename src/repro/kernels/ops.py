@@ -1,14 +1,29 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Handles (a) padding arbitrary shapes up to block multiples and slicing
-results back, and (b) backend dispatch: compiled Pallas on TPU, interpret
-mode on CPU (this container), with the pure-jnp reference as an escape
-hatch (``backend="xla"``) for A/B benchmarking.
+results back, and (b) platform dispatch.  Every wrapper takes a
+``backend`` keyword:
+
+``None`` / ``"auto"``
+    The fast path for the platform: compiled Pallas on TPU, the pure-jnp
+    reference (``ref.py`` — algebraically identical, XLA-fused) everywhere
+    else.  Interpret-mode Pallas is ~1000x too slow for a PDHG inner loop,
+    so it is never chosen implicitly.
+``"pallas"``
+    Force compiled Pallas (fails off-TPU — debugging aid).
+``"interpret"``
+    Force the Pallas interpreter (runs anywhere; exercises the real kernel
+    bodies + padding logic on CPU — what ``tests/test_kernels.py`` and the
+    step-engine padding tests use).
+``"xla"``
+    Force the pure-jnp reference (A/B benchmarking escape hatch).
+
+The step-engine in ``core/pdhg.py`` (``fused_dense_engine``) builds on
+these wrappers, so a solver constructed once picks the right kernel per
+platform at trace time.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +32,17 @@ from . import pdhg_matvec as _mv
 from . import fused_pdhg_step as _fused
 from . import ref as _ref
 
+_MODES = (None, "auto", "pallas", "interpret", "xla")
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+
+def _resolve_mode(backend: str | None) -> str:
+    """'pallas' | 'interpret' | 'xla' from a user-facing backend name."""
+    if backend not in _MODES:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"expected one of {_MODES}")
+    if backend in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
 
 
 def _pad_to(a: jnp.ndarray, axis: int, mult: int, value: float = 0.0):
@@ -35,33 +58,40 @@ def _pad_to(a: jnp.ndarray, axis: int, mult: int, value: float = 0.0):
 def bmatvec(A, x, *, backend: str | None = None,
             block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
     """y = A @ x batched over leading axis; any [k, M, N] shape."""
-    if backend == "xla":
+    mode = _resolve_mode(backend)
+    if mode == "xla":
         return _ref.bmatvec(A, x)
     k, M, N = A.shape
     Ap = _pad_to(_pad_to(A, 1, block_m), 2, block_n)
     xp = _pad_to(x, 1, block_n)
     y = _mv.bmatvec(Ap, xp, block_m=block_m, block_n=block_n,
-                    interpret=_interpret_default() if backend is None else backend == "interpret")
+                    interpret=mode == "interpret")
     return y[:, :M]
 
 
 def bmatvec_t(A, y, *, backend: str | None = None,
               block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
     """x = A^T @ y batched over leading axis."""
-    if backend == "xla":
+    mode = _resolve_mode(backend)
+    if mode == "xla":
         return _ref.bmatvec_t(A, y)
     k, M, N = A.shape
     Ap = _pad_to(_pad_to(A, 1, block_m), 2, block_n)
     yp = _pad_to(y, 1, block_m)
     x = _mv.bmatvec_t(Ap, yp, block_m=block_m, block_n=block_n,
-                      interpret=_interpret_default() if backend is None else backend == "interpret")
+                      interpret=mode == "interpret")
     return x[:, :N]
 
 
 def fused_primal_step(A, y, x, c, l, u, tau, *, backend: str | None = None,
                       block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
-    """(x_new, x_bar) — fused clip(x - tau(c + A^T y)) + extrapolation."""
-    if backend == "xla":
+    """(x_new, x_bar) — fused clip(x - tau(c + A^T y)) + extrapolation.
+
+    Padded variables get l = u = 0 blocks (pinned to zero, matching the
+    LinearProgram padding contract), so the sliced-back result equals the
+    unpadded math exactly."""
+    mode = _resolve_mode(backend)
+    if mode == "xla":
         return _ref.fused_primal_step(A, y, x, c, l, u, tau[:, None])
     k, M, N = A.shape
     Ap = _pad_to(_pad_to(A, 1, block_m), 2, block_n)
@@ -69,8 +99,7 @@ def fused_primal_step(A, y, x, c, l, u, tau, *, backend: str | None = None,
     pad_vec = lambda v: _pad_to(v, 1, block_n)
     xn, xb = _fused.fused_primal_step(
         Ap, yp, pad_vec(x), pad_vec(c), pad_vec(l), pad_vec(u), tau,
-        block_m=block_m, block_n=block_n,
-        interpret=_interpret_default() if backend is None else backend == "interpret")
+        block_m=block_m, block_n=block_n, interpret=mode == "interpret")
     return xn[:, :N], xb[:, :N]
 
 
@@ -78,13 +107,13 @@ def fused_dual_step(A, x_bar, y, q, sigma, ineq_mask, *,
                     backend: str | None = None,
                     block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
     """y_new — fused proj(y + sigma(A x_bar - q))."""
-    if backend == "xla":
+    mode = _resolve_mode(backend)
+    if mode == "xla":
         return _ref.fused_dual_step(A, x_bar, y, q, sigma[:, None], ineq_mask)
     k, M, N = A.shape
     Ap = _pad_to(_pad_to(A, 1, block_m), 2, block_n)
     yn = _fused.fused_dual_step(
         Ap, _pad_to(x_bar, 1, block_n), _pad_to(y, 1, block_m),
         _pad_to(q, 1, block_m), sigma, _pad_to(ineq_mask, 1, block_m),
-        block_m=block_m, block_n=block_n,
-        interpret=_interpret_default() if backend is None else backend == "interpret")
+        block_m=block_m, block_n=block_n, interpret=mode == "interpret")
     return yn[:, :M]

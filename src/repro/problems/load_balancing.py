@@ -301,7 +301,8 @@ class LoadBalanceProblem:
         }
 
     # ---------------------------------------------------------------- full --
-    def solve_full(self, solver_kw: Optional[dict] = None) -> LBResult:
+    def solve_full(self, solver_kw: Optional[dict] = None,
+                   warm: Optional["LBResult"] = None) -> LBResult:
         solver_kw = dict(solver_kw or {})
         wl = self.wl
         shards = np.arange(wl.n_shards)
@@ -310,14 +311,24 @@ class LoadBalanceProblem:
         op = self._relax_op(shards, servers, wl.n_shards, wl.n_servers,
                             L_target=wl.target, eps_eff=eps_eff)
         t0 = time.perf_counter()
-        fn = jax.jit(lambda o: pdhg.solve(o, _k_mv, _kt_mv, **solver_kw))
-        res = fn(op)
+        fn = jax.jit(lambda o, wx, wy: pdhg.solve(o, _k_mv, _kt_mv,
+                                                  warm_x=wx, warm_y=wy,
+                                                  **solver_kw))
+        state = warm.extra.get("full_state") if warm is not None else None
+        if state is not None and state["x"].shape == op.c.shape:
+            wx, wy = jnp.asarray(state["x"]), jnp.asarray(state["y"])
+        else:
+            wx = jnp.clip(jnp.zeros_like(op.c), op.l, op.u)
+            wy = jnp.zeros_like(op.q)
+        res = fn(op, wx, wy)
         jax.block_until_ready(res.x)
         r = np.asarray(res.x).reshape(wl.n_shards, wl.n_servers)
         placement = self._round_repair(r, shards, servers,
                                        L_target=wl.target, eps_eff=eps_eff)
         dt = time.perf_counter() - t0
         ev = self.evaluate(placement)
+        ev["iterations"] = int(res.iterations)
+        ev["full_state"] = dict(x=np.asarray(res.x), y=np.asarray(res.y))
         return LBResult(placement=placement, movement=ev["movement"],
                         max_load_dev=ev["max_load_dev"],
                         feasible=ev["load_feasible"] and ev["mem_feasible"],
@@ -326,47 +337,66 @@ class LoadBalanceProblem:
     # ----------------------------------------------------------------- POP --
     def pop_solve(self, k: int, seed: int = 0,
                   solver_kw: Optional[dict] = None,
-                  backend: str = "auto") -> LBResult:
+                  backend: str = "auto", engine: str = "auto",
+                  warm: Optional["LBResult"] = None,
+                  warm_start: bool = True) -> LBResult:
         """Domain-aware POP: server groups (round-robin by load), shards
         follow their current server; batched PDHG map step through the
-        ``core/backends.py`` registry; per-sub round+repair reduce."""
+        ``core/backends.py`` registry; per-sub round+repair reduce.
+
+        ``warm`` re-solves an updated workload from a previous POP
+        ``LBResult`` (online path): the previous server grouping and shard
+        subsets are reused so the stacked sub-LPs keep their shapes, and
+        every lane starts from its previous PDHG iterates.
+        ``warm_start=False`` reuses only the grouping (the cold control in
+        ``benchmarks/bench_online_resolve.py``)."""
         solver_kw = dict(solver_kw or {})
         wl = self.wl
-        # deal servers into k groups by descending current load (stratified)
-        cur_load = np.zeros(wl.n_servers)
-        np.add.at(cur_load, wl.placement, wl.load)
-        order = np.argsort(-cur_load)
-        groups = [order[i::k] for i in range(k)]
-        s_pad = max(len(g) for g in groups)
-        shard_sets = [list(np.flatnonzero(np.isin(wl.placement, g)))
-                      for g in groups]
+        state = warm.extra.get("pop_state") if warm is not None else None
+        if state is not None and (state["k"] != k
+                                  or state["n_shards"] != wl.n_shards):
+            state = None
+        if state is not None:
+            groups = state["groups"]
+            shard_sets = state["shard_sets"]
+            s_pad = state["s_pad"]
+        else:
+            # deal servers into k groups by descending current load
+            # (stratified)
+            cur_load = np.zeros(wl.n_servers)
+            np.add.at(cur_load, wl.placement, wl.load)
+            order = np.argsort(-cur_load)
+            groups = [order[i::k] for i in range(k)]
+            s_pad = max(len(g) for g in groups)
+            shard_sets = [list(np.flatnonzero(np.isin(wl.placement, g)))
+                          for g in groups]
 
-        # §3.3 pre-pass: equalise shard-subset TOTAL loads across groups
-        # (these cross-group shards must move anyway — load has to leave
-        # overloaded server groups no matter how the sub-LPs come out).
-        totals = np.array([wl.load[s].sum() for s in shard_sets])
-        targets = np.array([wl.target * len(g) for g in groups])
-        tol = 0.005 * wl.target * max(min(len(g) for g in groups), 1)
-        for _ in range(wl.n_shards):
-            dev = totals - targets
-            hi, lo = int(np.argmax(dev)), int(np.argmin(dev))
-            if (dev[hi] <= tol and -dev[lo] <= tol) or not shard_sets[hi]:
-                break
-            cands = shard_sets[hi]
-            loads = wl.load[cands]
-            # any move that shrinks the (hi, lo) pair's worst deviation
-            cur = max(dev[hi], -dev[lo])
-            new_pair = np.maximum(np.abs(dev[hi] - loads),
-                                  np.abs(dev[lo] + loads))
-            pick = int(np.argmin(new_pair))
-            if new_pair[pick] >= cur - 1e-12:
-                break                      # no improving transfer exists
-            shard = cands.pop(pick)
-            shard_sets[lo].append(shard)
-            totals[hi] -= wl.load[shard]
-            totals[lo] += wl.load[shard]
+            # §3.3 pre-pass: equalise shard-subset TOTAL loads across groups
+            # (these cross-group shards must move anyway — load has to leave
+            # overloaded server groups no matter how the sub-LPs come out).
+            totals = np.array([wl.load[s].sum() for s in shard_sets])
+            targets = np.array([wl.target * len(g) for g in groups])
+            tol = 0.005 * wl.target * max(min(len(g) for g in groups), 1)
+            for _ in range(wl.n_shards):
+                dev = totals - targets
+                hi, lo = int(np.argmax(dev)), int(np.argmin(dev))
+                if (dev[hi] <= tol and -dev[lo] <= tol) or not shard_sets[hi]:
+                    break
+                cands = shard_sets[hi]
+                loads = wl.load[cands]
+                # any move that shrinks the (hi, lo) pair's worst deviation
+                cur = max(dev[hi], -dev[lo])
+                new_pair = np.maximum(np.abs(dev[hi] - loads),
+                                      np.abs(dev[lo] + loads))
+                pick = int(np.argmin(new_pair))
+                if new_pair[pick] >= cur - 1e-12:
+                    break                  # no improving transfer exists
+                shard = cands.pop(pick)
+                shard_sets[lo].append(shard)
+                totals[hi] -= wl.load[shard]
+                totals[lo] += wl.load[shard]
 
-        shard_sets = [np.asarray(s, np.int64) for s in shard_sets]
+            shard_sets = [np.asarray(s, np.int64) for s in shard_sets]
         n_pad = max(len(s) for s in shard_sets)
 
         t0 = time.perf_counter()
@@ -381,8 +411,13 @@ class LoadBalanceProblem:
         ops = [self._relax_op(s, g, n_pad, s_pad, L_target=L, eps_eff=e)
                for s, g, e in zip(shard_sets, groups, sub_eps)]
         batched = jax.tree.map(lambda *xs: jnp.stack(xs), *ops)
+        warm_xy = None
+        if (warm_start and state is not None
+                and state["x"].shape == batched.c.shape):
+            warm_xy = (state["x"], state["y"])
         res = backends_mod.solve_map(batched, _k_mv, _kt_mv, solver_kw,
-                                     backend=backend)
+                                     backend=backend, engine=engine,
+                                     warm=warm_xy)
         jax.block_until_ready(res.x)
         placement = wl.placement.copy()
         for i, (s, g) in enumerate(zip(shard_sets, groups)):
@@ -391,6 +426,10 @@ class LoadBalanceProblem:
                                               eps_eff=sub_eps[i])
         dt = time.perf_counter() - t0
         ev = self.evaluate(placement)
+        ev["iterations"] = int(np.asarray(res.iterations).sum())
+        ev["pop_state"] = dict(
+            k=k, n_shards=wl.n_shards, groups=groups, shard_sets=shard_sets,
+            s_pad=s_pad, x=np.asarray(res.x), y=np.asarray(res.y))
         return LBResult(placement=placement, movement=ev["movement"],
                         max_load_dev=ev["max_load_dev"],
                         feasible=ev["load_feasible"] and ev["mem_feasible"],
@@ -405,15 +444,19 @@ def balance_placement(load: np.ndarray, n_targets: int,
                       current: Optional[np.ndarray] = None, *,
                       cap: Optional[np.ndarray] = None,
                       eps_frac: float = 0.2, pop_k: int = 4, seed: int = 0,
-                      backend: str = "auto",
-                      solver_kw: Optional[dict] = None) -> LBResult:
+                      backend: str = "auto", engine: str = "auto",
+                      solver_kw: Optional[dict] = None,
+                      warm: Optional[LBResult] = None) -> LBResult:
     """Place ``load``-weighted shards onto ``n_targets`` via the §3.3 MILP.
 
     The one entry point for every "shards onto servers" reuse of the paper
     (MoE expert placement in ``models/moe.py``, request balancing in
     ``serve/engine.py``): default sticky placement, uniform memory, the
     shared k_eff heuristic, and the POP-vs-full branch live here once.
-    ``backend`` names a map-step backend from ``core/backends.py``.
+    ``backend`` names a map-step backend, ``engine`` a PDHG step engine
+    (``core/backends.py`` / ``core/pdhg.py``).  ``warm`` chains repeated
+    balancing calls: pass the previous ``LBResult`` to warm-start the
+    re-solve when loads drift (the serving tick path).
     """
     load = np.asarray(load, np.float64)
     n = load.shape[0]
@@ -428,8 +471,8 @@ def balance_placement(load: np.ndarray, n_targets: int,
     k_eff = max(1, min(pop_k, n_targets // 2))
     if k_eff > 1:
         return prob.pop_solve(k_eff, seed=seed, solver_kw=solver_kw,
-                              backend=backend)
-    return prob.solve_full(solver_kw=solver_kw)
+                              backend=backend, engine=engine, warm=warm)
+    return prob.solve_full(solver_kw=solver_kw, warm=warm)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,12 @@ class GavelScheduler:
         self.jobs: Dict[str, JobSpec] = {}
         self.last_alloc: Optional[np.ndarray] = None
         self.last_round_time: float = 0.0
+        # warm-start state: POPResult / SolveResult of the previous round +
+        # the job-id tuple it was computed for.  Successive rounds see the
+        # SAME jobs with EMA-drifted throughputs — the textbook online
+        # re-solve, so each round continues from the previous iterates.
+        self._warm = None
+        self._warm_jobs: tuple = ()
 
     # ------------------------------------------------------------- job API --
     def submit(self, job: JobSpec):
@@ -88,20 +94,31 @@ class GavelScheduler:
         )
 
     def allocate(self) -> Dict[str, np.ndarray]:
-        """One scheduling round: POP-k Gavel solve -> {job: X_row}."""
+        """One scheduling round: POP-k Gavel solve -> {job: X_row},
+        warm-started from the previous round while the job set is stable
+        (any submit/remove invalidates the warm state — shapes change)."""
         if not self.jobs:
             return {}
         t0 = time.perf_counter()
         wl = self._workload()
         prob = GavelProblem(wl, space_sharing=self.cfg.space_sharing)
         k = max(1, min(self.cfg.pop_k, len(self.jobs) // 8))
+        job_key = (k, tuple(self.jobs))
+        warm = self._warm if job_key == self._warm_jobs else None
         if k > 1:
             res = pop.pop_solve(prob, k, strategy="stratified",
                                 backend=self.cfg.map_backend,
-                                solver_kw=self.cfg.solver_kw)
+                                solver_kw=self.cfg.solver_kw,
+                                warm=warm if isinstance(warm, pop.POPResult)
+                                else None)
             rho = res.alloc
+            self._warm = res
         else:
-            rho, _, _, _ = pop.solve_full(prob, solver_kw=self.cfg.solver_kw)
+            full_warm = warm if not isinstance(warm, pop.POPResult) else None
+            rho, res, _, _ = pop.solve_full(prob, solver_kw=self.cfg.solver_kw,
+                                            warm=full_warm)
+            self._warm = res
+        self._warm_jobs = job_key
         self.last_round_time = time.perf_counter() - t0
         self.last_alloc = rho
         return {j.job_id: rho[i] for i, j in enumerate(self.jobs.values())}

@@ -86,17 +86,24 @@ class BalanceResult:
     moved: int                   # sticky groups that changed replica
     max_load_dev: float
     solve_time_s: float
+    # full LBResult (carries the PDHG warm-start state) — pass back as
+    # ``warm=`` on the next balancing tick for a warm-started re-solve
+    lb: Optional[object] = None
 
 
 def balance_requests(load: np.ndarray, n_replicas: int,
                      current: Optional[np.ndarray] = None,
                      *, pop_k: int = 2, eps_frac: float = 0.25,
-                     backend: str = "auto",
-                     solver_kw: Optional[dict] = None) -> BalanceResult:
+                     backend: str = "auto", engine: str = "auto",
+                     solver_kw: Optional[dict] = None,
+                     warm: Optional[BalanceResult] = None) -> BalanceResult:
     """Place request groups onto decode replicas balancing generation load
     while keeping sticky sessions where they are — the paper's §3.3 MILP
     with request groups as shards.  ``backend`` selects the POP map-step
-    execution backend (``core/backends.py`` registry)."""
+    execution backend, ``engine`` the PDHG step engine (``core/backends.py``
+    / ``core/pdhg.py``).  Serving loads drift tick to tick, so pass the
+    previous tick's :class:`BalanceResult` as ``warm`` — the re-solve then
+    starts from the previous iterates instead of cold."""
     from ..problems.load_balancing import balance_placement
 
     load = np.asarray(load, np.float64)
@@ -106,12 +113,14 @@ def balance_requests(load: np.ndarray, n_replicas: int,
         solver_kw = dict(max_iters=6_000)
     res = balance_placement(
         load, n_replicas, current, eps_frac=eps_frac, pop_k=pop_k,
-        backend=backend, solver_kw=dict(solver_kw))
+        backend=backend, engine=engine, solver_kw=dict(solver_kw),
+        warm=None if warm is None else warm.lb)
     return BalanceResult(
         placement=res.placement,
         moved=int((res.placement != current).sum()),
         max_load_dev=float(res.max_load_dev),
         solve_time_s=float(res.solve_time_s),
+        lb=res,
     )
 
 

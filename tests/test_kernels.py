@@ -1,5 +1,9 @@
 """Per-kernel allclose sweeps: Pallas (interpret mode on CPU) vs ref.py
-pure-jnp oracles, across shapes and dtypes, plus hypothesis property tests."""
+pure-jnp oracles, across shapes and dtypes, plus hypothesis property tests.
+
+``ops`` dispatch defaults to the XLA reference off-TPU (the fast path), so
+these tests force the Pallas kernel bodies explicitly: interpret mode on
+CPU, compiled on TPU."""
 
 import numpy as np
 import jax
@@ -8,6 +12,9 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
+
+# force the real kernels: compiled Pallas on TPU, interpreter elsewhere
+PALLAS = "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
 SHAPES = [
@@ -39,7 +46,7 @@ def _tol(dtype):
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_bmatvec_matches_ref(shape, dtype):
     A, x, _ = _mk(shape, dtype)
-    got = ops.bmatvec(A, x)
+    got = ops.bmatvec(A, x, backend=PALLAS)
     want = ref.bmatvec(A, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32), **_tol(dtype))
 
@@ -48,7 +55,7 @@ def test_bmatvec_matches_ref(shape, dtype):
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_bmatvec_t_matches_ref(shape, dtype):
     A, _, y = _mk(shape, dtype)
-    got = ops.bmatvec_t(A, y)
+    got = ops.bmatvec_t(A, y, backend=PALLAS)
     want = ref.bmatvec_t(A, y)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32), **_tol(dtype))
 
@@ -63,7 +70,7 @@ def test_fused_primal_step_matches_ref(shape):
     l = jnp.asarray(rng.normal(size=(k, N)) - 2.0, jnp.float32)
     u = l + jnp.asarray(rng.uniform(0.5, 3.0, (k, N)), jnp.float32)
     tau = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
-    xn, xb = ops.fused_primal_step(A, y, x, c, l, u, tau)
+    xn, xb = ops.fused_primal_step(A, y, x, c, l, u, tau, backend=PALLAS)
     rn, rb = ref.fused_primal_step(A, y, x, c, l, u, tau[:, None])
     np.testing.assert_allclose(np.asarray(xn), np.asarray(rn), rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(xb), np.asarray(rb), rtol=1e-5, atol=1e-5)
@@ -77,7 +84,7 @@ def test_fused_dual_step_matches_ref(shape):
     q = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
     sigma = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
     mask = jnp.asarray(rng.random((k, M)) < 0.6)
-    yn = ops.fused_dual_step(A, x, y, q, sigma, mask)
+    yn = ops.fused_dual_step(A, x, y, q, sigma, mask, backend=PALLAS)
     rn = ref.fused_dual_step(A, x, y, q, sigma[:, None], mask)
     np.testing.assert_allclose(np.asarray(yn), np.asarray(rn), rtol=1e-5, atol=1e-5)
 
@@ -99,7 +106,7 @@ def test_bmatvec_arbitrary_shapes(k, m, n, seed):
     A = jnp.asarray(rng.normal(size=(k, m, n)), jnp.float32)
     x = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
     np.testing.assert_allclose(
-        np.asarray(ops.bmatvec(A, x, block_m=128, block_n=128)),
+        np.asarray(ops.bmatvec(A, x, backend=PALLAS, block_m=128, block_n=128)),
         np.asarray(ref.bmatvec(A, x)), rtol=1e-4, atol=1e-4)
 
 
@@ -116,7 +123,7 @@ def test_fused_primal_respects_box(seed):
     l = jnp.asarray(rng.normal(size=(k, N)) - 1, jnp.float32)
     u = l + jnp.asarray(rng.uniform(0.0, 2.0, (k, N)), jnp.float32)
     tau = jnp.asarray(rng.uniform(0.001, 1.0, k), jnp.float32)
-    xn, _ = ops.fused_primal_step(A, y, x, c, l, u, tau)
+    xn, _ = ops.fused_primal_step(A, y, x, c, l, u, tau, backend=PALLAS)
     assert bool(jnp.all(xn >= l - 1e-6) & jnp.all(xn <= u + 1e-6))
 
 
@@ -127,5 +134,5 @@ def test_block_size_sweep():
     x = jnp.asarray(rng.normal(size=(2, 320)), jnp.float32)
     base = np.asarray(ref.bmatvec(A, x))
     for bm, bn in [(128, 128), (256, 128), (128, 256), (384, 320)]:
-        got = np.asarray(ops.bmatvec(A, x, block_m=bm, block_n=bn))
+        got = np.asarray(ops.bmatvec(A, x, backend=PALLAS, block_m=bm, block_n=bn))
         np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,249 @@
+"""Step-engine contract tests (``core/pdhg.py`` + ``core/backends.py``).
+
+The fused dense engine must be numerically interchangeable with the
+generic matvec engine — same algorithm, different execution.  Equivalence
+is pinned on FIXED iteration budgets (tolerances set to 0 so no lane
+terminates early), which compares trajectories rather than "two different
+converged points", plus warm-start behaviour for the online re-solve path.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backends as backends_mod
+from repro.core import pdhg, pop
+from repro.core.pdhg import BIG, OperatorLP
+from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
+
+# fixed-budget solver settings: tol 0 => every lane runs max_iters exactly
+FIXED_KW = dict(max_iters=400, check_every=40, tol_primal=0.0, tol_gap=0.0)
+
+
+def _dense_stack(k=3, n=33, mi=17, seed=0):
+    """k raw (UNPADDED) dense LPs stacked: 17x33 is deliberately not a
+    multiple of any kernel block size, so the fused path exercises the
+    pad-and-slice logic of ``kernels/ops.py`` end to end."""
+    subs = []
+    for i in range(k):
+        rng = np.random.default_rng(seed + i)
+        c = rng.normal(size=n)
+        G = rng.normal(size=(mi, n))
+        h = G @ rng.uniform(0.2, 0.8, n) + rng.uniform(0.1, 1.0, mi)
+        subs.append(OperatorLP(
+            c=jnp.asarray(c, jnp.float32), q=jnp.asarray(h, jnp.float32),
+            l=jnp.zeros(n, jnp.float32), u=jnp.ones(n, jnp.float32),
+            ineq_mask=jnp.ones(mi, bool),
+            data=(jnp.asarray(G, jnp.float32),)))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+
+
+@pytest.fixture(scope="module")
+def dense_ops6():
+    return _dense_stack(k=6)
+
+
+@pytest.fixture(scope="module")
+def matvec_ref(dense_ops6):
+    return backends_mod.solve_map(dense_ops6, pdhg.dense_K_mv, pdhg.dense_KT_mv,
+                                  FIXED_KW, backend="vmap", engine="matvec")
+
+
+@pytest.mark.parametrize("backend", sorted(backends_mod.MAP_BACKENDS))
+def test_fused_matches_matvec_every_backend(backend, dense_ops6, matvec_ref):
+    """Acceptance: fused == matvec to 1e-5 on batched dense solves through
+    ALL five map backends (same fixed budget => same trajectory)."""
+    opts = {"chunk": 4} if backend == "chunked_vmap" else {}
+    r = backends_mod.solve_map(dense_ops6, pdhg.dense_K_mv, pdhg.dense_KT_mv,
+                               FIXED_KW, backend=backend, engine="fused",
+                               **opts)
+    np.testing.assert_allclose(np.asarray(r.x), np.asarray(matvec_ref.x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r.y), np.asarray(matvec_ref.y),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r.iterations),
+                                  np.asarray(matvec_ref.iterations))
+
+
+def test_fused_interpret_mode_padding(matvec_ref):
+    """The REAL Pallas kernel bodies (interpreter on CPU, compiled on TPU)
+    through a full solve on non-block-multiple shapes: exercises M/N
+    padding inside every inner-loop step.  Short budget — interpret mode
+    is slow by design."""
+    ops = _dense_stack(k=3)
+    kw = dict(FIXED_KW, max_iters=80)
+    kernel = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    eng = pdhg.fused_dense_engine(kernel_backend=kernel,
+                                  block_m=64, block_n=64)
+    ri = pdhg.solve_stacked(ops, engine=eng, **kw)
+    rx = pdhg.solve_stacked(ops, engine="matvec", **kw)
+    np.testing.assert_allclose(np.asarray(ri.x), np.asarray(rx.x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ri.y), np.asarray(rx.y),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_with_equilibrate(dense_ops6, matvec_ref):
+    """Equilibration composes with the fused engine by scaling the dense K
+    (scale_data), matching the matvec engine's functional wrapping."""
+    rf = pdhg.solve_stacked(dense_ops6, engine="fused", equilibrate=True,
+                            **FIXED_KW)
+    rm = pdhg.solve_stacked(dense_ops6, engine="matvec", equilibrate=True,
+                            **FIXED_KW)
+    np.testing.assert_allclose(np.asarray(rf.x), np.asarray(rm.x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_selection():
+    ops = _dense_stack(k=2)
+    assert pdhg.is_dense_ops(ops)
+    # structured data => matvec, everywhere
+    structured = ops._replace(data=(ops.data[0], jnp.zeros(3)))
+    assert not pdhg.is_dense_ops(structured)
+    assert pdhg.select_engine(structured) == "matvec"
+    # dense data: fused only on TPU
+    expected = "fused" if jax.default_backend() == "tpu" else "matvec"
+    assert pdhg.select_engine(ops) == expected
+    # custom (non-dense) matvecs disqualify fused even with dense-shaped data
+    assert pdhg.select_engine(ops, K_mv=lambda d, x: d[0] @ x) == "matvec"
+    with pytest.raises(ValueError, match="fused"):
+        backends_mod.solve_map(structured, pdhg.dense_K_mv, pdhg.dense_KT_mv,
+                               FIXED_KW, backend="vmap", engine="fused")
+    with pytest.raises(ValueError, match="unknown engine"):
+        backends_mod.solve_map(ops, pdhg.dense_K_mv, pdhg.dense_KT_mv,
+                               FIXED_KW, backend="vmap", engine="warp")
+
+
+def test_kernel_backend_dispatch():
+    from repro.kernels import ops as kops
+    mode = kops._resolve_mode(None)
+    assert mode == ("pallas" if jax.default_backend() == "tpu" else "xla")
+    assert kops._resolve_mode("interpret") == "interpret"
+    with pytest.raises(ValueError, match="kernel backend"):
+        kops._resolve_mode("vulkan")
+
+
+# ---------------------------------------------------------------------------
+# warm starts (the online re-solve path)
+# ---------------------------------------------------------------------------
+
+def test_warm_start_at_optimum_converges_immediately():
+    """Re-solving the SAME problem from its own solution must terminate at
+    the first KKT check — with and without equilibration (the warm iterates
+    are rescaled into the equilibrated space)."""
+    ops = _dense_stack(k=1)
+    op = jax.tree.map(lambda a: a[0], ops)
+    for eq in (False, True):
+        r1 = pdhg.solve(op, equilibrate=eq, max_iters=40_000)
+        assert bool(r1.converged)
+        r2 = pdhg.solve(op, equilibrate=eq, max_iters=40_000,
+                        warm_x=r1.x, warm_y=r1.y)
+        # a handful of KKT-check chunks at most, and far below the cold run
+        assert int(r2.iterations) <= 5 * 40, (eq, int(r2.iterations))
+        assert int(r2.iterations) <= int(r1.iterations) / 2
+
+
+def test_pop_warm_resolve_halves_iterations():
+    """ISSUE acceptance: a perturbed online re-solve warm-started from the
+    previous round converges in <= half the cold-start iterations (same
+    partition for a like-for-like comparison) at equal quality."""
+    kw = dict(max_iters=8_000, tol_primal=1e-4, tol_gap=1e-4)
+    wl = make_cluster_workload(32, num_workers=(8, 8, 8), seed=3)
+    prob = GavelProblem(wl, space_sharing=False)
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=kw)
+    assert prev.x is not None and prev.y is not None
+
+    rng = np.random.default_rng(7)
+    wl2 = dataclasses.replace(wl, T=wl.T * rng.uniform(0.99, 1.01, wl.T.shape))
+    prob2 = GavelProblem(wl2, space_sharing=False)
+    cold = pop.pop_solve(prob2, 4, partition_idx=prev.idx, solver_kw=kw)
+    warm = pop.pop_solve(prob2, 4, warm=prev, solver_kw=kw)
+    assert bool(warm.converged.all())
+    assert warm.iterations.sum() <= cold.iterations.sum() / 2, (
+        warm.iterations, cold.iterations)
+    # same partition, near-identical allocation quality
+    np.testing.assert_array_equal(warm.idx, prev.idx)
+    assert abs(warm.alloc.mean() - cold.alloc.mean()) < 5e-3
+
+
+def test_warm_shape_mismatch_rejected():
+    ops = _dense_stack(k=3)
+    with pytest.raises(ValueError, match="warm-start shapes"):
+        backends_mod.solve_map(ops, pdhg.dense_K_mv, pdhg.dense_KT_mv,
+                               FIXED_KW, backend="vmap",
+                               warm=(jnp.zeros((2, 5)), jnp.zeros((2, 4))))
+
+
+def test_pop_warm_requires_matching_k():
+    kw = dict(max_iters=400, tol_primal=1e-4, tol_gap=1e-4)
+    wl = make_cluster_workload(16, num_workers=(8, 8, 8), seed=1)
+    prob = GavelProblem(wl, space_sharing=False)
+    prev = pop.pop_solve(prob, 2, solver_kw=kw)
+    with pytest.raises(ValueError, match="k="):
+        pop.pop_solve(prob, 4, warm=prev, solver_kw=kw)
+
+
+# ---------------------------------------------------------------------------
+# shared Ruiz scaling helpers (BIG-sentinel handling cannot diverge)
+# ---------------------------------------------------------------------------
+
+def test_scale_operator_preserves_big_sentinels():
+    n, m = 4, 3
+    op = OperatorLP(
+        c=jnp.ones(n), q=jnp.asarray([1.0, BIG, 2.0]),
+        l=jnp.asarray([0.0, -BIG, 0.5, -BIG]),
+        u=jnp.asarray([1.0, BIG, BIG, 2.0]),
+        ineq_mask=jnp.ones(m, bool), data=(jnp.ones((m, n)),))
+    d_r = jnp.full(m, 2.0)
+    d_c = jnp.full(n, 4.0)
+    s = pdhg.scale_operator(op, d_r, d_c)
+    # finite bounds scale by 1/d_c, BIG sentinels pass through untouched
+    np.testing.assert_allclose(np.asarray(s.l), [0.0, -BIG, 0.125, -BIG])
+    np.testing.assert_allclose(np.asarray(s.u), [0.25, BIG, BIG, 0.5])
+    np.testing.assert_allclose(np.asarray(s.c), 4.0 * np.ones(n))
+    # q scales unconditionally (BIG rows have zero K rows => d_r stays 1
+    # in the real equilibration paths)
+    np.testing.assert_allclose(np.asarray(s.q), [2.0, 2.0 * BIG, 4.0])
+    # round trip: unscale(scale(x)) == x
+    x = jnp.arange(1.0, n + 1)
+    y = jnp.arange(1.0, m + 1)
+    xs, ys = pdhg.scale_warm_start(x, y, d_r, d_c)
+    xr, yr = pdhg.unscale_solution(xs, ys, d_r, d_c)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x))
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(y))
+
+
+def test_ruiz_dense_uses_shared_helper():
+    """ruiz_equilibrate and the probe path must agree on bounds masking:
+    equilibrated dense solve still matches the unscaled solution."""
+    ops = _dense_stack(k=1, n=20, mi=12, seed=9)
+    op = jax.tree.map(lambda a: a[0], ops)
+    sop, d_r, d_c = pdhg.ruiz_equilibrate(op)
+    r_scaled = pdhg.solve(sop, max_iters=40_000)
+    x, y = pdhg.unscale_solution(r_scaled.x, r_scaled.y, d_r, d_c)
+    r_plain = pdhg.solve(op, max_iters=40_000)
+    assert abs(float(jnp.dot(op.c, x)) - float(r_plain.primal_obj)) < 2e-3
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: warm-started load balancing + serving balancer ticks
+# ---------------------------------------------------------------------------
+
+def test_lb_warm_resolve():
+    from repro.problems.load_balancing import (LoadBalanceProblem,
+                                               make_shard_workload)
+    kw = dict(max_iters=6_000, tol_primal=1e-4, tol_gap=1e-4)
+    wl = make_shard_workload(48, 8, seed=2)
+    prev = LoadBalanceProblem(wl).pop_solve(4, solver_kw=kw)
+    rng = np.random.default_rng(5)
+    wl2 = dataclasses.replace(
+        wl, load=wl.load * rng.uniform(0.98, 1.02, wl.load.shape),
+        placement=prev.placement)
+    prob2 = LoadBalanceProblem(wl2)
+    cold = prob2.pop_solve(4, solver_kw=kw, warm=prev, warm_start=False)
+    warm = prob2.pop_solve(4, solver_kw=kw, warm=prev)
+    assert warm.extra["iterations"] <= cold.extra["iterations"]
+    assert warm.feasible == cold.feasible
