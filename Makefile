@@ -10,10 +10,15 @@
 #                        full suite
 #   make bench-snapshot  full --fast suite -> BENCH_pop.json (the committed
 #                        PR-over-PR perf baseline)
+#   make bench-check     full --fast suite compared against the committed
+#                        BENCH_pop.json; nonzero exit on regression
+#   make bench-churn     churn-aware warm starts: warm-vs-cold iterations
+#                        under 5/20/50% entity churn, all three domains
 
 PY = PYTHONPATH=src python
 
-.PHONY: test check-imports bench-backends bench-smoke bench-snapshot
+.PHONY: test check-imports bench-backends bench-smoke bench-snapshot \
+        bench-check bench-churn
 
 check-imports:
 	$(PY) scripts/check_imports.py
@@ -30,3 +35,9 @@ bench-smoke:
 
 bench-snapshot:
 	$(PY) -m benchmarks.run --fast --emit BENCH_pop.json
+
+bench-check:
+	$(PY) -m benchmarks.run --fast --check BENCH_pop.json
+
+bench-churn:
+	$(PY) -m benchmarks.bench_churn --fast

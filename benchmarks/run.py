@@ -14,6 +14,17 @@ metadata) so the perf trajectory is tracked PR-over-PR:
 The committed ``BENCH_pop.json`` at the repo root is the ``--fast``
 snapshot — regenerate it with exactly that command when solver or backend
 changes move the numbers.
+
+``--check BASELINE`` compares the CURRENT run against a committed snapshot
+and exits nonzero on regression (``make bench-check``):
+
+    PYTHONPATH=src python -m benchmarks.run --fast --check BENCH_pop.json
+
+A scenario regresses when it errors while the baseline succeeded, or when
+its wall-clock exceeds ``--check-tol`` (default 2.5x) times the baseline
+AND is more than 5s slower in absolute terms (small scenarios are all
+jit-compile noise).  Scenarios absent from the baseline are reported as
+NEW, not failed, so adding a benchmark does not break the gate.
 """
 
 from __future__ import annotations
@@ -44,11 +55,16 @@ def main() -> None:
     ap.add_argument("--emit", default=None, metavar="PATH",
                     help="write a machine-readable perf snapshot JSON "
                          "(scenario wall-clock + payloads + platform)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="compare this run against a committed snapshot "
+                         "(e.g. BENCH_pop.json); exit nonzero on regression")
+    ap.add_argument("--check-tol", type=float, default=2.5,
+                    help="wall-clock regression tolerance ratio for --check")
     args = ap.parse_args()
 
-    from . import (bench_cluster_scheduling, bench_load_balancing,
-                   bench_online_resolve, bench_pop_scaling,
-                   bench_replication, bench_skewed_splits,
+    from . import (bench_churn, bench_cluster_scheduling,
+                   bench_load_balancing, bench_online_resolve,
+                   bench_pop_scaling, bench_replication, bench_skewed_splits,
                    bench_traffic_engineering)
 
     suite = {
@@ -72,6 +88,8 @@ def main() -> None:
             n_jobs=128 if args.fast else 512),
         # online setting: warm-started re-solves on perturbed instances
         "online_resolve": lambda: bench_online_resolve.run(fast=args.fast),
+        # churn-aware warm starts across partition changes (PopPlan layer)
+        "churn": lambda: bench_churn.run(fast=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -106,8 +124,63 @@ def main() -> None:
         with open(args.emit, "w") as f:
             json.dump(clean, f, indent=1)
         print(f"# snapshot -> {args.emit}", file=sys.stderr, flush=True)
+    if args.check:
+        failures += _check_against_baseline(snapshot, args.check,
+                                            args.check_tol,
+                                            subset=bool(args.only))
     if failures:
         raise SystemExit(1)
+
+
+def _check_against_baseline(snapshot: dict, baseline_path: str,
+                            tol: float, subset: bool = False) -> int:
+    """Compare the fresh ``snapshot`` against a committed baseline.  A
+    scenario regresses when it now errors (baseline succeeded) or when it
+    is both ``tol``x and >5s slower than the baseline; returns the
+    regression count and prints a verdict line per scenario."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base_sc = baseline.get("scenarios", {})
+    meta = baseline.get("meta", {})
+    cur_meta = snapshot["meta"]
+    if (meta.get("platform") != cur_meta["platform"]
+            or meta.get("fast") != cur_meta["fast"]):
+        print(f"# check: baseline meta {meta} != current "
+              f"{{'platform': {cur_meta['platform']!r}, "
+              f"'fast': {cur_meta['fast']!r}}} — wall-clock comparison "
+              "may be meaningless", file=sys.stderr, flush=True)
+    regressions = 0
+    for name, cur in snapshot["scenarios"].items():
+        base = base_sc.get(name)
+        if base is None:
+            print(f"# check {name}: NEW (not in baseline)",
+                  file=sys.stderr, flush=True)
+            continue
+        if "error" in cur and "error" not in base:
+            print(f"# check {name}: REGRESSION (now fails, baseline passed)",
+                  file=sys.stderr, flush=True)
+            regressions += 1
+            continue
+        if "error" in base:
+            # equally broken (or newly fixed) — wall-clock is meaningless
+            verdict = "ok (fixed)" if "error" not in cur \
+                else "ok (still failing in baseline too)"
+            print(f"# check {name}: {verdict}", file=sys.stderr, flush=True)
+            continue
+        ratio = cur["wall_s"] / max(base["wall_s"], 1e-9)
+        slow = (ratio > tol and cur["wall_s"] - base["wall_s"] > 5.0)
+        verdict = "REGRESSION" if slow else "ok"
+        print(f"# check {name}: {verdict} "
+              f"({base['wall_s']:.1f}s -> {cur['wall_s']:.1f}s, "
+              f"{ratio:.2f}x)", file=sys.stderr, flush=True)
+        regressions += int(slow)
+    if not subset:                   # --only deliberately runs a subset
+        for name in base_sc:
+            if name not in snapshot["scenarios"]:
+                print(f"# check {name}: MISSING from current run — "
+                      "REGRESSION", file=sys.stderr, flush=True)
+                regressions += 1
+    return regressions
 
 
 if __name__ == "__main__":

@@ -23,25 +23,54 @@ def main():
     n_replicas = 4
     rng = np.random.default_rng(0)
 
-    # 64 request groups with heavy-tailed load (tokens to generate)
+    # 64 request groups with heavy-tailed load (tokens to generate).
+    # Stable session ids per group: what lets the balancer's warm state
+    # survive group churn (sessions finishing, sessions arriving).
     n_groups = 64
     load = np.minimum(rng.zipf(1.9, n_groups), 60).astype(np.float64)
     current = rng.integers(0, n_replicas, n_groups)   # sticky sessions
+    group_ids = np.arange(n_groups)
+    next_id = n_groups
 
     # POP load balancer: request groups = shards, replicas = servers
     res = balance_requests(load, n_replicas, current, pop_k=2,
-                           solver_kw=dict(max_iters=6_000))
+                           solver_kw=dict(max_iters=6_000),
+                           group_ids=group_ids)
     print(f"balancer: {n_groups} request groups -> {n_replicas} replicas "
           f"in {res.solve_time_s:.2f}s; moved {res.moved} sticky groups; "
           f"max load dev {res.max_load_dev:.2f}")
 
-    # next tick: loads drift a few percent -> warm-started re-solve picks
+    # tick 2: loads drift a few percent -> warm-started re-solve picks
     # up from the previous PDHG iterates instead of cold
     load2 = load * rng.uniform(0.95, 1.05, n_groups)
     res2 = balance_requests(load2, n_replicas, res.placement, pop_k=2,
-                            solver_kw=dict(max_iters=6_000), warm=res)
+                            solver_kw=dict(max_iters=6_000), warm=res,
+                            group_ids=group_ids)
     print(f"warm tick: re-balanced in {res2.solve_time_s:.2f}s; "
-          f"moved {res2.moved} groups; max load dev {res2.max_load_dev:.2f}")
+          f"moved {res2.moved} groups; max load dev {res2.max_load_dev:.2f}; "
+          f"warm_fraction {res2.warm_fraction:.2f}")
+
+    # tick 3: CHURN — 8 sessions finish, 8 new ones arrive.  The warm
+    # state still chains: surviving groups are matched by id and their
+    # iterates remapped onto the new tick's sub-problems (PR-2 would have
+    # silently fallen back to a cold solve here).
+    done = rng.choice(n_groups, 8, replace=False)
+    keep = np.setdiff1d(np.arange(n_groups), done)
+    arrivals = np.minimum(rng.zipf(1.9, 8), 60).astype(np.float64)
+    load3 = np.concatenate([load2[keep], arrivals])
+    cur3 = np.concatenate([res2.placement[keep],
+                           rng.integers(0, n_replicas, 8)])
+    group_ids = np.concatenate([group_ids[keep],
+                                next_id + np.arange(8)])
+    next_id += 8
+    res3 = balance_requests(load3, n_replicas, cur3, pop_k=2,
+                            solver_kw=dict(max_iters=6_000), warm=res2,
+                            group_ids=group_ids)
+    print(f"churn tick: 8 done / 8 arrived; re-balanced in "
+          f"{res3.solve_time_s:.2f}s; moved {res3.moved} groups; "
+          f"warm_fraction {res3.warm_fraction:.2f} "
+          f"(survivors warm, arrivals start from priors)")
+    res, load = res3, load3
 
     # serve: each replica decodes its assigned groups as one batch
     scfg = ServeConfig(batch=1, max_seq=128)

@@ -15,8 +15,9 @@ from .replicate import ReplicationPlan, plan_replication, replicated_partition
 from .reduce import coalesce_concat, coalesce_replicated
 from .backends import (
     MAP_BACKENDS, available_backends, get_backend, register_backend,
-    select_backend, solve_map, make_map_solver,
+    select_backend, solve_map, solve_one, make_map_solver,
 )
+from .plan import PopPlan, SubLayout, WarmStart, remap_warm
 from .pop import POPProblem, POPResult, pop_solve, solve_full
 from .maxmin import epigraph_rows, maxmin_objective
 from .rounding import round_relaxation
@@ -33,7 +34,8 @@ __all__ = [
     "ReplicationPlan", "plan_replication", "replicated_partition",
     "coalesce_concat", "coalesce_replicated",
     "MAP_BACKENDS", "available_backends", "get_backend", "register_backend",
-    "select_backend", "solve_map", "make_map_solver",
+    "select_backend", "solve_map", "solve_one", "make_map_solver",
+    "PopPlan", "SubLayout", "WarmStart", "remap_warm",
     "POPProblem", "POPResult", "pop_solve", "solve_full",
     "epigraph_rows", "maxmin_objective",
     "round_relaxation",

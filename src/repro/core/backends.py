@@ -319,9 +319,16 @@ def _n_elems_per_sub(ops: OperatorLP) -> int:
 
 def _resolve_warm(ops: OperatorLP, warm) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Starting iterates from ``warm``: None (cold), a SolveResult-like
-    object with .x/.y, or an (x, y) pair — each stacked [k, ...]."""
+    object with .x/.y, an (x, y) pair, or a masked
+    :class:`~repro.core.plan.WarmStart` — each stacked [k, ...].
+
+    A WarmStart's per-lane ``mask`` is applied HERE, as data: masked-out
+    lanes get the cold iterates via ``jnp.where``, so remapped warm starts
+    with cold lanes flow through the same jitted solve as everything else
+    (no Python-level branch, no retrace)."""
     if warm is None:
         return cold_start(ops)
+    mask = getattr(warm, "mask", None)
     if hasattr(warm, "x") and hasattr(warm, "y"):
         wx, wy = warm.x, warm.y
     else:
@@ -331,9 +338,34 @@ def _resolve_warm(ops: OperatorLP, warm) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if wx.shape != ops.c.shape or wy.shape != ops.q.shape:
         raise ValueError(
             f"warm-start shapes {wx.shape}/{wy.shape} do not match the "
-            f"stacked problem {ops.c.shape}/{ops.q.shape} — warm re-solves "
-            "need the SAME partition (pass the previous result's idx)")
+            f"stacked problem {ops.c.shape}/{ops.q.shape} — for warm "
+            "re-solves across partition changes go through pop_solve(warm=) "
+            "or core.plan.remap_warm, which rebuild matching iterates")
+    if mask is not None:
+        m = jnp.asarray(mask, bool)[:, None]
+        cx, cy = cold_start(ops)
+        wx = jnp.where(m, wx, cx)
+        wy = jnp.where(m, wy, cy)
     return wx, wy
+
+
+def solve_one(op: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
+              backend: str = "auto", engine: EngineSpec = "auto",
+              warm=None, **opts: Any) -> SolveResult:
+    """Solve ONE unbatched LP through the same substrate as the map step
+    (a k=1 stack): full-problem baselines get the engine selection, the
+    backend registry and the jit-cached map solver without hand-rolling
+    the batch/unbatch dance.  ``warm`` is an unbatched (x, y) pair or
+    SolveResult-like object; the result is unbatched again."""
+    opb = jax.tree.map(lambda a: jnp.asarray(a)[None], op)
+    if warm is not None:
+        if hasattr(warm, "x") and hasattr(warm, "y"):
+            warm = (warm.x, warm.y)
+        warm = tuple(jnp.asarray(w)[None] for w in warm)
+    res = solve_map(opb, K_mv, KT_mv, solver_kw, backend=backend,
+                    engine=engine, warm=warm, **opts)
+    jax.block_until_ready(res.x)
+    return jax.tree.map(lambda a: a[0], res)
 
 
 def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,

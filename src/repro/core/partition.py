@@ -121,3 +121,22 @@ PARTITIONERS = {
     "random": lambda attrs, k, seed=0: random_partition(attrs.shape[0], k, seed),
     "stratified": lambda attrs, k, seed=0: stratified_partition_multidim(attrs, k, seed),
 }
+
+
+def make_partition(strategy: str, attrs: np.ndarray, scores: np.ndarray,
+                   n: int, k: int, seed: int = 0) -> np.ndarray:
+    """Strategy-name dispatch for the planning stage (``core/plan.py``).
+
+    The returned idx rows ARE the partition's entity provenance: slot
+    ``(i, s)`` holds the original entity id placed there (-1 = padding),
+    which is what churn-aware warm-start remapping matches on.
+    """
+    if strategy == "random":
+        return random_partition(n, k, seed)
+    if strategy == "stratified":
+        return stratified_partition(scores, k)
+    if strategy == "stratified_multidim":
+        return stratified_partition_multidim(attrs, k, seed)
+    raise ValueError(f"unknown strategy {strategy!r}; expected one of "
+                     "'random', 'stratified', 'stratified_multidim' "
+                     "(or pass an explicit partition_idx)")

@@ -393,12 +393,19 @@ def solve_stacked(
     equilibrate: bool = False,
     warm_x: Optional[jnp.ndarray] = None,
     warm_y: Optional[jnp.ndarray] = None,
+    warm_mask: Optional[jnp.ndarray] = None,
 ) -> SolveResult:
     """Solve a STACK of k LPs at once (every ``op`` leaf has a leading [k]
     axis; the result carries the same axis).  This is the map-step core:
     one fori/while loop drives all k sub-problems with per-lane step sizes,
     restarts and termination, so the fused engine can hand the whole batch
     to single kernel launches.  Fully traceable.
+
+    ``warm_mask`` ([k] bool) gates the warm start per lane: False lanes
+    start cold even when ``warm_x``/``warm_y`` are given.  This is how
+    churn-aware remapped warm starts (``core/plan.py``) cold-start lanes
+    that matched no previous entity — a ``jnp.where`` on data, not a
+    Python-level branch, so all lanes share one jitted solve.
     """
     eng = resolve_engine(engine, op, K_mv, KT_mv)
     k = op.c.shape[0]
@@ -424,10 +431,14 @@ def solve_stacked(
 
     knorm = _power_iteration(eng_run, op_run.data, k, n_var)   # [k]
 
-    x0 = (jnp.clip(jnp.zeros_like(op_run.c), op_run.l, op_run.u)
-          if warm_x is None else jnp.asarray(warm_x, op_run.c.dtype))
-    y0 = (jnp.zeros_like(op_run.q)
-          if warm_y is None else jnp.asarray(warm_y, op_run.q.dtype))
+    cold_x = jnp.clip(jnp.zeros_like(op_run.c), op_run.l, op_run.u)
+    cold_y = jnp.zeros_like(op_run.q)
+    x0 = cold_x if warm_x is None else jnp.asarray(warm_x, op_run.c.dtype)
+    y0 = cold_y if warm_y is None else jnp.asarray(warm_y, op_run.q.dtype)
+    if warm_mask is not None and (warm_x is not None or warm_y is not None):
+        m = jnp.asarray(warm_mask, bool)[:, None]
+        x0 = jnp.where(m, x0, cold_x)
+        y0 = jnp.where(m, y0, cold_y)
 
     def chunk(state: _State) -> _State:
         tau = eta / (state.omega * knorm)          # [k]
@@ -540,6 +551,7 @@ def solve(
     equilibrate: bool = False,
     warm_x: Optional[jnp.ndarray] = None,
     warm_y: Optional[jnp.ndarray] = None,
+    warm_mask: Optional[jnp.ndarray] = None,
     engine: Union[None, str, StepEngine] = "matvec",
 ) -> SolveResult:
     """Solve one LP: a k=1 stack through :func:`solve_stacked`.  Fully
@@ -548,11 +560,12 @@ def solve(
     opb = jax.tree.map(lambda a: jnp.asarray(a)[None], op)
     wx = None if warm_x is None else jnp.asarray(warm_x)[None]
     wy = None if warm_y is None else jnp.asarray(warm_y)[None]
+    wm = None if warm_mask is None else jnp.asarray(warm_mask).reshape((1,))
     res = solve_stacked(
         opb, engine=engine, K_mv=K_mv, KT_mv=KT_mv,
         max_iters=max_iters, check_every=check_every,
         tol_primal=tol_primal, tol_gap=tol_gap, eta=eta, omega0=omega0,
-        equilibrate=equilibrate, warm_x=wx, warm_y=wy)
+        equilibrate=equilibrate, warm_x=wx, warm_y=wy, warm_mask=wm)
     return jax.tree.map(lambda a: a[0], res)
 
 

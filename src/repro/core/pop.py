@@ -1,28 +1,63 @@
-"""POP orchestrator: split -> map (batched solve) -> reduce.
+"""POP orchestrator: a staged pipeline around the :class:`PopPlan` artifact.
 
-This is the paper's technique as a composable module.  A domain problem
-(cluster scheduling, traffic engineering, load balancing, MoE expert
-placement, ...) subclasses :class:`POPProblem`; ``pop_solve`` then
+The paper's technique as a composable module.  A domain problem (cluster
+scheduling, traffic engineering, load balancing, MoE expert placement, ...)
+subclasses :class:`POPProblem`; the pipeline then runs in four separable
+stages:
 
-  1. partitions entities into k self-similar subsets (``core/partition.py``),
-     optionally replicating hot entities (``core/replicate.py``),
-  2. builds k identically-shaped sub-LPs and STACKS them on a leading axis,
-  3. solves them as ONE batched PDHG solve through a pluggable execution
-     backend (``core/backends.py``: serial / vmap / chunked_vmap /
-     shard_map / pmap — sub-problems are independent, so the map step
-     needs ZERO collectives; this is the whole point of POP), and
-  4. coalesces sub-allocations (``core/reduce.py``).
+  ``plan()``    partition entities into k self-similar subsets
+                (``core/partition.py``), optionally replicating hot entities
+                (``core/replicate.py``), and record the per-entity ->
+                (lane, slot) provenance plus the problem's sub-LP layout in
+                a reusable :class:`~repro.core.plan.PopPlan`.
+  ``build()``   materialise k identically-shaped sub-LPs from the plan and
+                STACK them on a leading axis (fills ``plan.shapes``).
+  ``solve()``   one batched PDHG solve through a pluggable execution
+                backend (``core/backends.py``: serial / vmap / chunked_vmap
+                / shard_map / pmap — sub-problems are independent, so the
+                map step needs ZERO collectives; this is the whole point of
+                POP).
+  ``reduce()``  coalesce sub-allocations back to global entity order
+                (``core/reduce.py``).
+
+:func:`pop_solve` is the one-call wrapper chaining all four.  Online
+callers hold onto the :class:`PopPlan` (every :class:`POPResult` carries
+its plan) and re-plan only when they must — planning is pure numpy and
+cheap, but *re-using* a plan is what keeps warm starts exact and the jit
+caches hot.
+
+Warm starts across churn
+------------------------
+
+``pop_solve(warm=prev)`` re-solves an updated instance from a previous
+:class:`POPResult`:
+
+* **identity churn** (same entities, same k): the previous plan is reused
+  verbatim and every lane continues from its previous (x, y) iterates —
+  bit-for-bit the PR-2 warm path.
+* **anything else** (entity arrivals/departures, k changes,
+  re-stratification via ``replan=True`` or an explicit ``plan=``):
+  :func:`~repro.core.plan.remap_warm` scatters the old per-entity iterates
+  onto the new plan's lanes, gives freshly arrived entities a dual-only
+  warm start, and marks lanes with no matched entity to start cold via a
+  per-lane mask (``backends._resolve_warm`` applies it with a ``jnp.where``
+  — no Python-level branch).  Pass ``entity_ids=`` stable external ids when
+  positional indexing churns (a scheduler's job ids, a balancer's group
+  ids); without them entities are matched by position.
+
+``benchmarks/bench_churn.py`` measures the warm/cold iteration ratio under
+5/20/50% entity churn for all three paper domains.
 
 ``solve_full`` runs the unpartitioned baseline (k=1 path) for quality
-comparison — the paper's "original problem formulation".
+comparison — the paper's "original problem formulation" — through the same
+backend/engine substrate as the POP path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +67,7 @@ from . import backends as backends_mod
 from . import partition as part_mod
 from . import pdhg
 from .pdhg import OperatorLP, SolveResult
+from .plan import PopPlan, SubLayout, WarmStart, remap_warm, repair_plan
 from .replicate import ReplicationPlan, plan_replication, replicated_partition
 from .reduce import coalesce_concat, coalesce_replicated
 
@@ -68,6 +104,13 @@ class POPProblem:
     def build_full(self) -> OperatorLP:
         return self.build_sub(np.arange(self.n_entities), 1.0)
 
+    def sub_layout(self, n_slots: int) -> Optional[SubLayout]:
+        """Describe the sub-LP variable/row layout for warm-start remapping
+        (see ``core/plan.py``).  ``None`` (the default) disables cross-plan
+        warm starts — ``pop_solve(warm=)`` then degrades to cold instead of
+        raising when the partition changed."""
+        return None
+
     # operator matvecs — override for structured (non-dense) constraints
     K_mv = staticmethod(pdhg.dense_K_mv)
     KT_mv = staticmethod(pdhg.dense_KT_mv)
@@ -97,6 +140,10 @@ class POPResult:
     # state for online re-solves (``pop_solve(..., warm=prev_result)``)
     x: Optional[np.ndarray] = None
     y: Optional[np.ndarray] = None
+    # the plan this result was computed under (reused/remapped by warm
+    # re-solves) and, for warm solves, the remap statistics
+    plan: Optional[PopPlan] = None
+    warm_stats: Optional[dict] = None
 
 
 # --------------------------------------------------------------------------
@@ -108,8 +155,152 @@ MAP_BACKENDS = backends_mod.MAP_BACKENDS
 
 
 # --------------------------------------------------------------------------
-# the POP pipeline
+# stage 1: plan
 # --------------------------------------------------------------------------
+
+def plan(
+    problem: POPProblem,
+    k: int,
+    *,
+    strategy: str = "random",
+    seed: int = 0,
+    replicate_threshold: Optional[float] = None,
+    partition_idx: Optional[np.ndarray] = None,
+    entity_ids: Optional[np.ndarray] = None,
+) -> PopPlan:
+    """Partition (+ optionally replicate) ``problem`` into k subsets and
+    return the reusable :class:`PopPlan`.  ``strategy`` ∈ {random,
+    stratified, stratified_multidim}; an explicit ``partition_idx``
+    overrides it (custom or adversarial splits).  ``replicate_threshold``
+    enables §4.3 hot-entity replication.  ``entity_ids`` attaches stable
+    external ids used to match entities across instances when warm-starting
+    through churn."""
+    n = problem.n_entities
+    scores = np.asarray(problem.entity_scores(), np.float64)
+    attrs = np.asarray(problem.entity_attrs(), np.float64)
+    if attrs.ndim == 1:
+        attrs = attrs[:, None]
+
+    rep = None
+    if partition_idx is not None:
+        idx = np.asarray(partition_idx)
+    elif replicate_threshold is not None:
+        rep = plan_replication(scores, k, replicate_threshold)
+        idx = replicated_partition(rep, scores, k, seed)
+    else:
+        idx = part_mod.make_partition(strategy, attrs, scores, n, k, seed)
+
+    entity_of_slot = idx if rep is None else rep.entity_of(idx)
+    # similarity diagnostics run on ORIGINAL entity ids
+    sim = part_mod.similarity_report(attrs, entity_of_slot)
+    layout = problem.sub_layout(idx.shape[1])
+    if entity_ids is not None:
+        entity_ids = np.asarray(entity_ids)
+        if entity_ids.shape[0] != n:
+            raise ValueError(f"entity_ids has {entity_ids.shape[0]} entries "
+                             f"for {n} entities")
+    return PopPlan(k=k, n_entities=n, idx=idx,
+                   entity_of_slot=entity_of_slot, strategy=strategy,
+                   seed=seed, replication=rep, entity_ids=entity_ids,
+                   similarity=sim, layout=layout)
+
+
+make_plan = plan     # alias: lets ``pop_solve(plan=...)`` shadow the name
+
+
+# --------------------------------------------------------------------------
+# stage 2: build
+# --------------------------------------------------------------------------
+
+def build(problem: POPProblem, pop_plan: PopPlan) -> OperatorLP:
+    """Materialise the plan's k identically-shaped sub-LPs and stack them.
+    Records the stacked shapes on the plan (what sizes warm remaps)."""
+    subs = []
+    for i in range(pop_plan.k):
+        subs.append(problem.build_sub(pop_plan.entity_of_slot[i],
+                                      1.0 / pop_plan.k,
+                                      scale=pop_plan.row_scale(i)))
+    ops = jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+    pop_plan.shapes = {"x": tuple(ops.c.shape), "y": tuple(ops.q.shape)}
+    return ops
+
+
+# --------------------------------------------------------------------------
+# stage 3: solve (the map step)
+# --------------------------------------------------------------------------
+
+def solve(
+    problem: POPProblem,
+    pop_plan: PopPlan,
+    ops: OperatorLP,
+    *,
+    backend: str = "auto",
+    engine: str = "auto",
+    solver_kw: Optional[dict] = None,
+    backend_opts: Optional[dict] = None,
+    warm=None,
+) -> SolveResult:
+    """Batched solve of the stacked sub-LPs through ``backends.solve_map``.
+    ``warm`` is a :class:`~repro.core.plan.WarmStart` (masked, from
+    ``remap_warm``), an (x, y) pair, or a SolveResult-like object."""
+    res = backends_mod.solve_map(ops, problem.K_mv, problem.KT_mv,
+                                 dict(solver_kw or {}), backend=backend,
+                                 engine=engine, warm=warm,
+                                 **(backend_opts or {}))
+    jax.block_until_ready(res.x)
+    return res
+
+
+# --------------------------------------------------------------------------
+# stage 4: reduce
+# --------------------------------------------------------------------------
+
+def reduce(problem: POPProblem, pop_plan: PopPlan, ops: OperatorLP,
+           res: SolveResult) -> np.ndarray:
+    """Coalesce per-lane allocations into the global one (scatter by entity
+    id; replicated entities SUM their replica sub-allocations)."""
+    allocs = np.stack([
+        np.asarray(problem.extract(jax.tree.map(lambda a: a[i], ops),
+                                   np.asarray(res.x[i]), pop_plan.idx[i]))
+        for i in range(pop_plan.k)
+    ])
+    if pop_plan.replication is None:
+        return coalesce_concat(allocs, pop_plan.idx, pop_plan.n_entities)
+    return coalesce_replicated(allocs, pop_plan.idx, pop_plan.replication)
+
+
+# --------------------------------------------------------------------------
+# the one-call wrapper
+# --------------------------------------------------------------------------
+
+def _ids_or_positional(ids, n: int) -> np.ndarray:
+    return np.arange(n) if ids is None else np.asarray(ids)
+
+
+def _plan_fits(prev: PopPlan, problem: POPProblem, k: int,
+               entity_ids: Optional[np.ndarray]) -> bool:
+    """Can ``prev`` be reused verbatim for this instance?"""
+    return (prev.k == k and prev.n_entities == problem.n_entities
+            and np.array_equal(_ids_or_positional(entity_ids,
+                                                  problem.n_entities),
+                               prev.external_ids()))
+
+
+def _plan_of(warm) -> Optional[PopPlan]:
+    """The plan a warm result was computed under; reconstructed from the
+    pre-plan (idx, replication) fields for results that predate PopPlan."""
+    p = getattr(warm, "plan", None)
+    if p is not None:
+        return p
+    idx = getattr(warm, "idx", None)
+    if idx is None:
+        return None
+    rep = getattr(warm, "replication", None)
+    ent = idx if rep is None else rep.entity_of(idx)
+    n = int(ent.max()) + 1 if ent.size else 0
+    return PopPlan(k=idx.shape[0], n_entities=n, idx=idx,
+                   entity_of_slot=ent, replication=rep)
+
 
 def pop_solve(
     problem: POPProblem,
@@ -124,118 +315,115 @@ def pop_solve(
     solver_kw: Optional[dict] = None,
     backend_opts: Optional[dict] = None,
     warm: Optional[POPResult] = None,
+    plan: Optional[PopPlan] = None,
+    replan: bool = False,
+    entity_ids: Optional[np.ndarray] = None,
 ) -> POPResult:
-    """Run POP-k on ``problem``.  ``strategy`` ∈ {random, stratified, skewed-*}
-    (domain problems may pass an explicit ``partition_idx`` for custom or
-    adversarial splits).  ``replicate_threshold`` enables §4.3 hot-entity
-    replication.  ``backend`` names a map-step backend from
-    ``core/backends.py`` (``"auto"`` picks by k, device count and problem
-    size); ``engine`` a PDHG step engine from ``core/pdhg.py`` (``"auto"``:
-    fused kernels for dense data on TPU, operator matvecs otherwise);
-    ``backend_opts`` are forwarded to the backend (e.g. ``chunk=``,
-    ``mesh=``).
+    """Run POP-k on ``problem``: :func:`plan` -> :func:`build` ->
+    :func:`solve` -> :func:`reduce` in one call.
 
-    ``warm`` re-solves an UPDATED instance from a previous :class:`POPResult`
-    (online path: perturbed throughputs/loads, same entities): the previous
-    partition is reused so sub-problem shapes line up, and every lane starts
-    from its previous (x, y) iterates instead of cold."""
+    ``backend`` names a map-step backend from ``core/backends.py``
+    (``"auto"`` picks by k, device count and problem size); ``engine`` a
+    PDHG step engine from ``core/pdhg.py`` (``"auto"``: fused kernels for
+    dense data on TPU, operator matvecs otherwise); ``backend_opts`` are
+    forwarded to the backend (e.g. ``chunk=``, ``mesh=``).
+
+    ``warm`` re-solves an UPDATED instance from a previous
+    :class:`POPResult`.  While the instance shape is unchanged the previous
+    plan is reused and every lane continues from its previous (x, y)
+    iterates; across entity arrivals/departures, k changes or forced
+    re-planning (``replan=True`` / explicit ``plan=``) the old iterates
+    are remapped onto the new plan (see module docstring).  ``entity_ids``
+    names entities stably across instances for that matching."""
     solver_kw = dict(solver_kw or {})
-    n = problem.n_entities
-    scores = np.asarray(problem.entity_scores(), np.float64)
-    attrs = np.asarray(problem.entity_attrs(), np.float64)
-    if attrs.ndim == 1:
-        attrs = attrs[:, None]
+    if warm is not None and getattr(warm, "x", None) is None:
+        raise ValueError("warm result lacks solver state (x/y)")
 
     t0 = time.perf_counter()
-    plan = None
-    rep_scale = None
-    if warm is not None:
-        if warm.x is None or warm.idx.shape[0] != k:
-            raise ValueError("warm result lacks solver state or was computed "
-                             f"with k={warm.idx.shape[0]} != {k}")
-        idx = warm.idx
-        plan = warm.replication
-        rep_scale = plan.replica_scale if plan is not None else None
-    elif partition_idx is not None:
-        idx = partition_idx
-    elif replicate_threshold is not None:
-        plan = plan_replication(scores, k, replicate_threshold)
-        idx = replicated_partition(plan, scores, k, seed)
-        rep_scale = plan.replica_scale
-    elif strategy == "random":
-        idx = part_mod.random_partition(n, k, seed)
-    elif strategy == "stratified":
-        idx = part_mod.stratified_partition(scores, k)
-    elif strategy == "stratified_multidim":
-        idx = part_mod.stratified_partition_multidim(attrs, k, seed)
+    prev_plan = _plan_of(warm) if warm is not None else None
+    # one side naming entities externally while the other matches by
+    # position would pair arbitrary entities — refuse to match, start cold
+    ids_agree = (prev_plan is None
+                 or (prev_plan.entity_ids is None) == (entity_ids is None))
+    reused = False
+    if plan is not None:
+        p = plan
+    elif (warm is not None and prev_plan is not None and not replan
+          and partition_idx is None and replicate_threshold is None
+          and ids_agree):
+        if _plan_fits(prev_plan, problem, k, entity_ids):
+            p = prev_plan
+            reused = True
+        elif prev_plan.k == k and prev_plan.replication is None:
+            # entity churn at the same k: repair the old plan in place —
+            # survivors keep their (lane, slot), so the remapped warm start
+            # lands in an unchanged lane context (see plan.repair_plan)
+            p = repair_plan(prev_plan, problem, entity_ids=entity_ids)
+        else:
+            p = make_plan(problem, k, strategy=strategy, seed=seed,
+                          entity_ids=entity_ids)
     else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-
-    # similarity diagnostics run on ORIGINAL entity ids
-    if plan is None:
-        sim = part_mod.similarity_report(attrs, idx)
-    else:
-        orig_idx = np.where(idx >= 0, plan.replica_entity[np.maximum(idx, 0)], -1)
-        sim = part_mod.similarity_report(attrs, orig_idx)
-
-    # build k identically-shaped sub-LPs and stack them
-    subs = []
-    for i in range(k):
-        row = idx[i]
-        row_scale = None
-        if rep_scale is not None:
-            row_scale = np.where(row >= 0, rep_scale[np.maximum(row, 0)], 0.0)
-        if plan is not None:
-            row = np.where(row >= 0, plan.replica_entity[np.maximum(row, 0)], -1)
-        subs.append(problem.build_sub(row, 1.0 / k, scale=row_scale))
-    ops = jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+        p = make_plan(problem, k, strategy=strategy, seed=seed,
+                      replicate_threshold=replicate_threshold,
+                      partition_idx=partition_idx, entity_ids=entity_ids)
+    ops = build(problem, p)
     build_time = time.perf_counter() - t0
 
+    warm_in = None
+    warm_stats = None
+    if warm is not None:
+        if reused:
+            # identity churn: the PR-2 path, previous iterates verbatim
+            warm_in = (warm.x, warm.y)
+            n_live = int((p.entity_of_slot >= 0).sum())
+            warm_stats = dict(warm_fraction=1.0, matched=n_live, fresh=0,
+                              dropped=0, lanes_cold=0, identity=True)
+        elif not ids_agree:
+            warm_stats = dict(warm_fraction=0.0, matched=0, fresh=0,
+                              dropped=0, lanes_cold=k, identity=False,
+                              reason="entity id spaces differ (one side has "
+                                     "entity_ids, the other is positional)")
+        elif prev_plan is not None:
+            ws = remap_warm(prev_plan, p, warm, ops=ops)
+            warm_in = ws
+            warm_stats = ws.stats
+
     t1 = time.perf_counter()
-    warm_xy = None if warm is None else (warm.x, warm.y)
-    res = backends_mod.solve_map(ops, problem.K_mv, problem.KT_mv, solver_kw,
-                                 backend=backend, engine=engine, warm=warm_xy,
-                                 **(backend_opts or {}))
-    jax.block_until_ready(res.x)
+    res = solve(problem, p, ops, backend=backend, engine=engine,
+                solver_kw=solver_kw, backend_opts=backend_opts, warm=warm_in)
     solve_time = time.perf_counter() - t1
 
-    # reduce
-    allocs = np.stack([
-        np.asarray(problem.extract(jax.tree.map(lambda a: a[i], ops),
-                                   np.asarray(res.x[i]), idx[i]))
-        for i in range(k)
-    ])
-    if plan is None:
-        alloc = coalesce_concat(allocs, idx, n)
-    else:
-        alloc = coalesce_replicated(allocs, idx, plan)
-
+    alloc = reduce(problem, p, ops, res)
     return POPResult(
-        alloc=alloc, idx=idx,
+        alloc=alloc, idx=p.idx,
         solve_time_s=solve_time, build_time_s=build_time,
         iterations=np.asarray(res.iterations),
         converged=np.asarray(res.converged),
-        similarity=sim,
+        similarity=p.similarity or {},
         sub_objectives=np.asarray(res.primal_obj),
-        replication=plan,
+        replication=p.replication,
         x=np.asarray(res.x), y=np.asarray(res.y),
+        plan=p, warm_stats=warm_stats,
     )
 
 
 def solve_full(problem: POPProblem, solver_kw: Optional[dict] = None,
-               warm: Optional[SolveResult] = None):
-    """Unpartitioned baseline (the paper's 'original problem').  ``warm``
-    re-solves from a previous full-problem :class:`SolveResult`."""
+               warm: Optional[SolveResult] = None, *,
+               backend: str = "auto", engine: str = "auto",
+               backend_opts: Optional[dict] = None):
+    """Unpartitioned baseline (the paper's 'original problem') as a k=1
+    stack through the SAME execution substrate as the POP path — so
+    full-problem baselines get the fused step engine, explicit backend
+    selection and the jit-cached map solver too.  ``warm`` re-solves from a
+    previous full-problem :class:`SolveResult`."""
     solver_kw = dict(solver_kw or {})
     t0 = time.perf_counter()
     op = problem.build_full()
     build_time = time.perf_counter() - t0
     t1 = time.perf_counter()
-    fn = jax.jit(functools.partial(pdhg.solve, K_mv=problem.K_mv,
-                                   KT_mv=problem.KT_mv, **solver_kw))
-    res = (fn(op) if warm is None
-           else fn(op, warm_x=jnp.asarray(warm.x), warm_y=jnp.asarray(warm.y)))
-    jax.block_until_ready(res.x)
+    res = backends_mod.solve_one(op, problem.K_mv, problem.KT_mv, solver_kw,
+                                 backend=backend, engine=engine, warm=warm,
+                                 **(backend_opts or {}))
     solve_time = time.perf_counter() - t1
     idx = np.arange(problem.n_entities)
     alloc = np.asarray(problem.extract(op, np.asarray(res.x), idx))

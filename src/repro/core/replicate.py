@@ -28,6 +28,14 @@ class ReplicationPlan:
     def n_expanded(self) -> int:
         return self.replica_entity.shape[0]
 
+    def entity_of(self, replica_ids: np.ndarray) -> np.ndarray:
+        """Original entity id per replica id, preserving -1 padding — the
+        provenance map plans carry so warm-start remapping can follow an
+        entity across partition changes."""
+        replica_ids = np.asarray(replica_ids)
+        return np.where(replica_ids >= 0,
+                        self.replica_entity[np.maximum(replica_ids, 0)], -1)
+
 
 def plan_replication(demands: np.ndarray, k: int,
                      threshold: float = 0.5) -> ReplicationPlan:

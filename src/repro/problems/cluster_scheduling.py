@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pdhg import OperatorLP
+from ..core.plan import SubLayout
 from ..core.pop import POPProblem
 
 
@@ -156,6 +157,26 @@ class GavelProblem(POPProblem):
 
     def entity_scores(self):
         return self.wl.w * self.wl.z
+
+    def sub_layout(self, n_slots: int) -> SubLayout:
+        """Warm-start remap layout (``core/plan.py``).
+
+        x = [X_flat (C*R), t] with singleton combos FIRST (``_combos``), so
+        slot ``s`` owns X[s, :] — the job's own allocation row.  Pair-combo
+        variables (space sharing) have no single owner and restart cold on
+        a remap.  Rows: [epigraph (n), time (n), workers (R)] — the first
+        two move with their job, the worker-cap rows are lane-global.
+        """
+        R = self.n_types
+        C = n_slots
+        if self.space_sharing:
+            C += n_slots * (n_slots - 1) // 2
+        x_slot = np.arange(n_slots)[:, None] * R + np.arange(R)[None, :]
+        y_slot = np.stack([np.arange(n_slots), n_slots + np.arange(n_slots)],
+                          axis=1)
+        return SubLayout(x_slot=x_slot, y_slot=y_slot,
+                         x_global=np.array([C * R]),
+                         y_global=2 * n_slots + np.arange(R))
 
     # --- combo construction -------------------------------------------------
     def _combos(self, ids: np.ndarray):

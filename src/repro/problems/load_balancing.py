@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core import backends as backends_mod
 from ..core import pdhg
+from ..core import plan as plan_mod
 from ..core.pdhg import OperatorLP
 
 
@@ -49,10 +50,17 @@ class ShardWorkload:
     placement: np.ndarray  # [n] current server of each shard
     cap: np.ndarray        # [S] server memory capacity
     eps_frac: float        # tolerance as a fraction of mean server load
+    # stable external shard ids (None = positional): what warm-start
+    # remapping matches on when the shard population churns between ticks
+    ids: Optional[np.ndarray] = None
 
     @property
     def n_shards(self):
         return self.load.shape[0]
+
+    def shard_ids(self) -> np.ndarray:
+        return (np.arange(self.n_shards) if self.ids is None
+                else np.asarray(self.ids))
 
     @property
     def n_servers(self):
@@ -302,7 +310,12 @@ class LoadBalanceProblem:
 
     # ---------------------------------------------------------------- full --
     def solve_full(self, solver_kw: Optional[dict] = None,
-                   warm: Optional["LBResult"] = None) -> LBResult:
+                   warm: Optional["LBResult"] = None,
+                   backend: str = "auto", engine: str = "auto") -> LBResult:
+        """Unpartitioned §3.3 baseline, routed through the same
+        backend/engine substrate as the POP path (k=1 stack — so the
+        full-problem baseline benefits from the fused step engine and the
+        jit-cached map solver too)."""
         solver_kw = dict(solver_kw or {})
         wl = self.wl
         shards = np.arange(wl.n_shards)
@@ -311,17 +324,13 @@ class LoadBalanceProblem:
         op = self._relax_op(shards, servers, wl.n_shards, wl.n_servers,
                             L_target=wl.target, eps_eff=eps_eff)
         t0 = time.perf_counter()
-        fn = jax.jit(lambda o, wx, wy: pdhg.solve(o, _k_mv, _kt_mv,
-                                                  warm_x=wx, warm_y=wy,
-                                                  **solver_kw))
         state = warm.extra.get("full_state") if warm is not None else None
+        warm_b = None
         if state is not None and state["x"].shape == op.c.shape:
-            wx, wy = jnp.asarray(state["x"]), jnp.asarray(state["y"])
-        else:
-            wx = jnp.clip(jnp.zeros_like(op.c), op.l, op.u)
-            wy = jnp.zeros_like(op.q)
-        res = fn(op, wx, wy)
-        jax.block_until_ready(res.x)
+            warm_b = (state["x"], state["y"])
+        res = backends_mod.solve_one(op, _k_mv, _kt_mv, solver_kw,
+                                     backend=backend, engine=engine,
+                                     warm=warm_b)
         r = np.asarray(res.x).reshape(wl.n_shards, wl.n_servers)
         placement = self._round_repair(r, shards, servers,
                                        L_target=wl.target, eps_eff=eps_eff)
@@ -345,29 +354,52 @@ class LoadBalanceProblem:
         ``core/backends.py`` registry; per-sub round+repair reduce.
 
         ``warm`` re-solves an updated workload from a previous POP
-        ``LBResult`` (online path): the previous server grouping and shard
-        subsets are reused so the stacked sub-LPs keep their shapes, and
-        every lane starts from its previous PDHG iterates.
+        ``LBResult`` (online path).  While the shard population is stable
+        the previous server grouping and shard subsets are reused so the
+        stacked sub-LPs keep their shapes, and every lane starts from its
+        previous PDHG iterates.  Across churn (shards arrived/departed —
+        matched via ``ShardWorkload.ids`` — or a k change) the grouping is
+        recomputed and the old iterates are REMAPPED: each surviving
+        shard's distribution row follows it to its new (lane, row),
+        restricted to the server columns its old and new lanes share;
+        per-server dual rows move with their server, per-shard assign rows
+        with their shard; lanes that matched nothing start cold
+        (``extra["warm_fraction"]`` reports the matched share).
         ``warm_start=False`` reuses only the grouping (the cold control in
         ``benchmarks/bench_online_resolve.py``)."""
         solver_kw = dict(solver_kw or {})
         wl = self.wl
+        ids = wl.shard_ids()
         state = warm.extra.get("pop_state") if warm is not None else None
-        if state is not None and (state["k"] != k
-                                  or state["n_shards"] != wl.n_shards):
-            state = None
-        if state is not None:
+        reuse = (state is not None and state["k"] == k
+                 and state["n_shards"] == wl.n_shards
+                 and np.array_equal(
+                     state.get("ids", np.arange(state["n_shards"])), ids))
+        if reuse:
             groups = state["groups"]
             shard_sets = state["shard_sets"]
             s_pad = state["s_pad"]
         else:
-            # deal servers into k groups by descending current load
-            # (stratified)
-            cur_load = np.zeros(wl.n_servers)
-            np.add.at(cur_load, wl.placement, wl.load)
-            order = np.argsort(-cur_load)
-            groups = [order[i::k] for i in range(k)]
-            s_pad = max(len(g) for g in groups)
+            if (state is not None and len(state["groups"]) == k
+                    and np.array_equal(
+                        np.sort(np.concatenate(state["groups"])),
+                        np.arange(wl.n_servers))):
+                # shard churn over the same server fleet: KEEP the previous
+                # server grouping (shards follow their current server, so a
+                # stable grouping keeps most surviving shards in their old
+                # lane — the analogue of core/plan.py's repair_plan, and
+                # what makes the remapped warm start land in an unchanged
+                # lane context)
+                groups = state["groups"]
+                s_pad = state["s_pad"]
+            else:
+                # deal servers into k groups by descending current load
+                # (stratified)
+                cur_load = np.zeros(wl.n_servers)
+                np.add.at(cur_load, wl.placement, wl.load)
+                order = np.argsort(-cur_load)
+                groups = [order[i::k] for i in range(k)]
+                s_pad = max(len(g) for g in groups)
             shard_sets = [list(np.flatnonzero(np.isin(wl.placement, g)))
                           for g in groups]
 
@@ -412,9 +444,14 @@ class LoadBalanceProblem:
                for s, g, e in zip(shard_sets, groups, sub_eps)]
         batched = jax.tree.map(lambda *xs: jnp.stack(xs), *ops)
         warm_xy = None
-        if (warm_start and state is not None
-                and state["x"].shape == batched.c.shape):
-            warm_xy = (state["x"], state["y"])
+        warm_fraction = None
+        if warm_start and state is not None:
+            if reuse and state["x"].shape == batched.c.shape:
+                warm_xy = (state["x"], state["y"])
+                warm_fraction = 1.0
+            else:
+                warm_xy, warm_fraction = _remap_lb_state(
+                    state, ids, groups, shard_sets, n_pad, s_pad)
         res = backends_mod.solve_map(batched, _k_mv, _kt_mv, solver_kw,
                                      backend=backend, engine=engine,
                                      warm=warm_xy)
@@ -427,13 +464,99 @@ class LoadBalanceProblem:
         dt = time.perf_counter() - t0
         ev = self.evaluate(placement)
         ev["iterations"] = int(np.asarray(res.iterations).sum())
+        ev["warm_fraction"] = warm_fraction
         ev["pop_state"] = dict(
-            k=k, n_shards=wl.n_shards, groups=groups, shard_sets=shard_sets,
-            s_pad=s_pad, x=np.asarray(res.x), y=np.asarray(res.y))
+            k=k, n_shards=wl.n_shards, ids=ids, groups=groups,
+            shard_sets=shard_sets, s_pad=s_pad, n_pad=n_pad,
+            x=np.asarray(res.x), y=np.asarray(res.y))
         return LBResult(placement=placement, movement=ev["movement"],
                         max_load_dev=ev["max_load_dev"],
                         feasible=ev["load_feasible"] and ev["mem_feasible"],
                         solve_time_s=dt, extra=ev)
+
+
+# ---------------------------------------------------------------------------
+# churn-aware warm-start remap (domain-specific analogue of core/plan.py's
+# remap_warm: the LB split is over SERVER GROUPS, so both axes of the
+# distribution matrix have identity that must be followed across plans)
+# ---------------------------------------------------------------------------
+
+def _remap_lb_state(state: dict, ids: np.ndarray, groups, shard_sets,
+                    n_pad: int, s_pad: int):
+    """Scatter a previous pop_state's iterates onto a new grouping.
+
+    x[i] is a [n_pad, s_pad] distribution of lane i's shards over lane i's
+    servers: a surviving shard's row follows it to its new (lane, row) and
+    each entry follows its server's column — copied only for servers the
+    shard's old and new lanes share (the shard followed its current server,
+    so in the common case that is most of the row).  y rows:
+    [load<= (s_pad), -load<= (s_pad), mem<= (s_pad), assign== (n_pad)] —
+    the three per-server blocks move with their server, assign rows with
+    their shard.  ARRIVED shards have no previous row: their distribution
+    starts at zero with the population-mean assign dual (a dual-only warm
+    start; seeding their primal — e.g. one-hot on the current server — was
+    measured WORSE at low churn, where the injected mass forces large dual
+    corrections in an otherwise converged lane).  Lanes that matched no
+    shard start cold via the mask.  Returns (WarmStart, warm_fraction).
+    """
+    k_o = state["k"]
+    s_pad_o = state["s_pad"]
+    x_o = np.asarray(state["x"], np.float32)
+    n_pad_o = x_o.shape[1] // s_pad_o
+    x_o = x_o.reshape(k_o, n_pad_o, s_pad_o)
+    y_o = np.asarray(state["y"], np.float32)
+    old_ids = state.get("ids", np.arange(state["n_shards"]))
+
+    shard_pos = {}
+    for o, ss in enumerate(state["shard_sets"]):
+        for r, g in enumerate(np.asarray(ss)):
+            shard_pos[old_ids[g]] = (o, r)
+    srv_pos = {}
+    for o, gg in enumerate(state["groups"]):
+        for j, srv in enumerate(np.asarray(gg)):
+            srv_pos[int(srv)] = (o, j)
+
+    # population-mean assign dual: the dual-only prior for arrived shards
+    assign_duals = [y_o[o, 3 * s_pad_o + r]
+                    for o, ss in enumerate(state["shard_sets"])
+                    for r in range(len(np.asarray(ss)))]
+    avg_assign = float(np.mean(assign_duals)) if assign_duals else 0.0
+
+    k = len(groups)
+    x_w = np.zeros((k, n_pad, s_pad), np.float32)
+    y_w = np.zeros((k, 3 * s_pad + n_pad), np.float32)
+    mask = np.zeros(k, bool)
+    matched = 0
+    live = 0
+    for i, (ss, gg) in enumerate(zip(shard_sets, groups)):
+        gg = np.asarray(gg)
+        for j, srv in enumerate(gg):
+            hit = srv_pos.get(int(srv))
+            if hit is not None:
+                o, j_old = hit
+                for blk in range(3):
+                    y_w[i, blk * s_pad + j] = y_o[o, blk * s_pad_o + j_old]
+        for r, g in enumerate(np.asarray(ss)):
+            live += 1
+            hit = shard_pos.get(ids[g])
+            if hit is None:
+                y_w[i, 3 * s_pad + r] = avg_assign   # arrived: dual-only
+                continue
+            o, r_old = hit
+            matched += 1
+            mask[i] = True
+            y_w[i, 3 * s_pad + r] = y_o[o, 3 * s_pad_o + r_old]
+            for j, srv in enumerate(gg):
+                sh = srv_pos.get(int(srv))
+                if sh is not None and sh[0] == o:
+                    x_w[i, r, j] = x_o[o, r_old, sh[1]]
+    warm_fraction = matched / max(live, 1)
+    ws = plan_mod.WarmStart(
+        x_w.reshape(k, -1), y_w, mask,
+        dict(warm_fraction=warm_fraction, matched=matched,
+             fresh=live - matched, lanes_cold=int((~mask).sum()),
+             identity=False))
+    return ws, warm_fraction
 
 
 # ---------------------------------------------------------------------------
@@ -446,7 +569,8 @@ def balance_placement(load: np.ndarray, n_targets: int,
                       eps_frac: float = 0.2, pop_k: int = 4, seed: int = 0,
                       backend: str = "auto", engine: str = "auto",
                       solver_kw: Optional[dict] = None,
-                      warm: Optional[LBResult] = None) -> LBResult:
+                      warm: Optional[LBResult] = None,
+                      shard_ids: Optional[np.ndarray] = None) -> LBResult:
     """Place ``load``-weighted shards onto ``n_targets`` via the §3.3 MILP.
 
     The one entry point for every "shards onto servers" reuse of the paper
@@ -456,7 +580,10 @@ def balance_placement(load: np.ndarray, n_targets: int,
     ``backend`` names a map-step backend, ``engine`` a PDHG step engine
     (``core/backends.py`` / ``core/pdhg.py``).  ``warm`` chains repeated
     balancing calls: pass the previous ``LBResult`` to warm-start the
-    re-solve when loads drift (the serving tick path).
+    re-solve when loads drift (the serving tick path); with ``shard_ids``
+    (stable external ids) the warm start survives shard arrivals and
+    departures too — surviving shards are matched by id and their iterates
+    remapped onto the new grouping.
     """
     load = np.asarray(load, np.float64)
     n = load.shape[0]
@@ -466,7 +593,7 @@ def balance_placement(load: np.ndarray, n_targets: int,
         cap = np.full(n_targets, float(n))
     wl = ShardWorkload(load=load, mem=np.ones(n),
                        placement=np.asarray(current, np.int64),
-                       cap=cap, eps_frac=eps_frac)
+                       cap=cap, eps_frac=eps_frac, ids=shard_ids)
     prob = LoadBalanceProblem(wl)
     k_eff = max(1, min(pop_k, n_targets // 2))
     if k_eff > 1:

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pdhg import OperatorLP
+from ..core.plan import SubLayout
 from ..core.pop import POPProblem
 
 
@@ -189,6 +190,20 @@ class TrafficProblem(POPProblem):
     def source_groups(self):
         """Group key for the paper's Fig. 6 skewed split (same-source)."""
         return self.pairs[:, 0]
+
+    def sub_layout(self, n_slots: int) -> SubLayout:
+        """Warm-start remap layout (``core/plan.py``): x = f [n_slots * P]
+        (slot ``s`` owns its P per-path flows — each demand's path set is a
+        property of the demand, so the flows travel with it); rows =
+        [demand caps (n_slots), edge caps (E)] with the edge-capacity block
+        lane-global."""
+        P = self.path_edges.shape[1]
+        E = self.topo.edges.shape[0]
+        return SubLayout(
+            x_slot=np.arange(n_slots)[:, None] * P + np.arange(P)[None, :],
+            y_slot=np.arange(n_slots)[:, None],
+            x_global=np.empty(0, np.int64),
+            y_global=n_slots + np.arange(E))
 
     # --- LP construction --------------------------------------------------------
     def build_sub(self, idx_row: np.ndarray, frac: float,

@@ -57,12 +57,18 @@ class GavelScheduler:
         self.jobs: Dict[str, JobSpec] = {}
         self.last_alloc: Optional[np.ndarray] = None
         self.last_round_time: float = 0.0
-        # warm-start state: POPResult / SolveResult of the previous round +
-        # the job-id tuple it was computed for.  Successive rounds see the
-        # SAME jobs with EMA-drifted throughputs — the textbook online
-        # re-solve, so each round continues from the previous iterates.
+        # warm-start state: POPResult / SolveResult of the previous round.
+        # Successive rounds see EMA-drifted throughputs — the textbook
+        # online re-solve — AND job churn (submits/removes).  Each job gets
+        # a stable numeric id at submit; pop_solve(warm=, entity_ids=)
+        # matches surviving jobs across rounds and remaps their iterates
+        # onto the new round's plan, so the warm start survives churn
+        # instead of falling back to cold whenever the job set changes.
         self._warm = None
-        self._warm_jobs: tuple = ()
+        self._eids: Dict[str, int] = {}
+        self._next_eid: int = 0
+        self._warm_full_eids: tuple = ()   # k=1 path: jobs the warm is FOR
+        self.last_warm_fraction: Optional[float] = None
 
     # ------------------------------------------------------------- job API --
     def submit(self, job: JobSpec):
@@ -70,10 +76,14 @@ class GavelScheduler:
             # cold-start prior: arch-family default speedup profile
             job.throughputs = np.array([1.0, 0.6, 0.8]) * (
                 0.5 + abs(hash(job.arch)) % 1000 / 1000.0)
+        if job.job_id not in self._eids:
+            self._eids[job.job_id] = self._next_eid
+            self._next_eid += 1
         self.jobs[job.job_id] = job
 
     def remove(self, job_id: str):
         self.jobs.pop(job_id, None)
+        self._eids.pop(job_id, None)
 
     def report_throughput(self, job_id: str, measured: np.ndarray):
         """Heartbeat path: refine T with live measurements (EMA)."""
@@ -94,31 +104,43 @@ class GavelScheduler:
         )
 
     def allocate(self) -> Dict[str, np.ndarray]:
-        """One scheduling round: POP-k Gavel solve -> {job: X_row},
-        warm-started from the previous round while the job set is stable
-        (any submit/remove invalidates the warm state — shapes change)."""
+        """One scheduling round: POP-k Gavel solve -> {job: X_row}.  Warm
+        state chains through job churn: surviving jobs are matched by their
+        stable id and continue from their previous iterates (new arrivals
+        start from population priors, see ``core/plan.py``); only a POP <->
+        full-problem mode flip drops the warm state.  ``warm_fraction``
+        (matched share, via :meth:`fairness_report`) is logged per round."""
         if not self.jobs:
             return {}
         t0 = time.perf_counter()
         wl = self._workload()
         prob = GavelProblem(wl, space_sharing=self.cfg.space_sharing)
+        eids = np.array([self._eids[j] for j in self.jobs], np.int64)
         k = max(1, min(self.cfg.pop_k, len(self.jobs) // 8))
-        job_key = (k, tuple(self.jobs))
-        warm = self._warm if job_key == self._warm_jobs else None
         if k > 1:
+            warm = self._warm if isinstance(self._warm, pop.POPResult) else None
             res = pop.pop_solve(prob, k, strategy="stratified",
                                 backend=self.cfg.map_backend,
                                 solver_kw=self.cfg.solver_kw,
-                                warm=warm if isinstance(warm, pop.POPResult)
-                                else None)
+                                warm=warm, entity_ids=eids)
             rho = res.alloc
             self._warm = res
+            self.last_warm_fraction = (res.warm_stats["warm_fraction"]
+                                       if res.warm_stats else None)
         else:
-            full_warm = warm if not isinstance(warm, pop.POPResult) else None
+            # full-problem path (tiny fleets): the flat LP has no per-entity
+            # remap, so warm only while the job IDENTITY sequence is
+            # unchanged (a same-size swap would silently misalign rows) —
+            # below the POP threshold a cold solve is cheap anyway
+            full_warm = self._warm if not isinstance(self._warm,
+                                                     pop.POPResult) else None
+            if full_warm is not None and tuple(eids) != self._warm_full_eids:
+                full_warm = None
             rho, res, _, _ = pop.solve_full(prob, solver_kw=self.cfg.solver_kw,
                                             warm=full_warm)
             self._warm = res
-        self._warm_jobs = job_key
+            self._warm_full_eids = tuple(eids)
+            self.last_warm_fraction = None if full_warm is None else 1.0
         self.last_round_time = time.perf_counter() - t0
         self.last_alloc = rho
         return {j.job_id: rho[i] for i, j in enumerate(self.jobs.values())}
@@ -132,4 +154,5 @@ class GavelScheduler:
             "mean_norm_throughput": float(rho.mean()),
             "round_time_s": self.last_round_time,
             "n_jobs": len(self.jobs),
+            "warm_fraction": self.last_warm_fraction,
         }

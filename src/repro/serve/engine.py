@@ -89,6 +89,9 @@ class BalanceResult:
     # full LBResult (carries the PDHG warm-start state) — pass back as
     # ``warm=`` on the next balancing tick for a warm-started re-solve
     lb: Optional[object] = None
+    # share of request groups whose previous iterates seeded this solve
+    # (1.0 = stable population, None = cold solve)
+    warm_fraction: Optional[float] = None
 
 
 def balance_requests(load: np.ndarray, n_replicas: int,
@@ -96,14 +99,22 @@ def balance_requests(load: np.ndarray, n_replicas: int,
                      *, pop_k: int = 2, eps_frac: float = 0.25,
                      backend: str = "auto", engine: str = "auto",
                      solver_kw: Optional[dict] = None,
-                     warm: Optional[BalanceResult] = None) -> BalanceResult:
+                     warm: Optional[BalanceResult] = None,
+                     group_ids: Optional[np.ndarray] = None) -> BalanceResult:
     """Place request groups onto decode replicas balancing generation load
     while keeping sticky sessions where they are — the paper's §3.3 MILP
     with request groups as shards.  ``backend`` selects the POP map-step
     execution backend, ``engine`` the PDHG step engine (``core/backends.py``
-    / ``core/pdhg.py``).  Serving loads drift tick to tick, so pass the
-    previous tick's :class:`BalanceResult` as ``warm`` — the re-solve then
-    starts from the previous iterates instead of cold."""
+    / ``core/pdhg.py``).
+
+    Serving loads drift tick to tick, so pass the previous tick's
+    :class:`BalanceResult` as ``warm`` — the re-solve then starts from the
+    previous iterates instead of cold.  Request groups also ARRIVE and
+    FINISH between ticks: pass stable ``group_ids`` (session ids) and the
+    warm state survives the churn — surviving groups are matched by id and
+    their iterates remapped onto the new tick's sub-problems, arrivals
+    start from population priors (``warm_fraction`` reports the matched
+    share)."""
     from ..problems.load_balancing import balance_placement
 
     load = np.asarray(load, np.float64)
@@ -114,13 +125,14 @@ def balance_requests(load: np.ndarray, n_replicas: int,
     res = balance_placement(
         load, n_replicas, current, eps_frac=eps_frac, pop_k=pop_k,
         backend=backend, engine=engine, solver_kw=dict(solver_kw),
-        warm=None if warm is None else warm.lb)
+        warm=None if warm is None else warm.lb, shard_ids=group_ids)
     return BalanceResult(
         placement=res.placement,
         moved=int((res.placement != current).sum()),
         max_load_dev=float(res.max_load_dev),
         solve_time_s=float(res.solve_time_s),
         lb=res,
+        warm_fraction=res.extra.get("warm_fraction"),
     )
 
 

@@ -1,0 +1,326 @@
+"""PopPlan pipeline + churn-aware warm starts (ISSUE 3).
+
+Covers the staged plan/build/solve/reduce pipeline, plan reuse and repair,
+and remap_warm across identity churn (must be bit-for-bit the PR-2 warm
+path), entity arrivals/departures, k changes, and re-stratification — plus
+the acceptance bar: a 20%-churn warm re-solve takes no more iterations
+than the cold control on all three paper domains.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import pop
+from repro.core.plan import PopPlan, WarmStart, remap_warm, repair_plan
+from repro.problems.cluster_scheduling import (GavelProblem,
+                                               make_cluster_workload)
+from repro.problems.load_balancing import (LoadBalanceProblem, ShardWorkload,
+                                           make_shard_workload)
+from repro.problems.traffic_engineering import (TrafficProblem, k_shortest_paths,
+                                                make_demands, make_topology)
+
+KW = dict(max_iters=8_000, tol_primal=1e-4, tol_gap=1e-4)
+
+
+def _gavel(n=48, seed=0):
+    wl = make_cluster_workload(n, num_workers=(24, 24, 24), seed=seed)
+    return GavelProblem(wl, space_sharing=False)
+
+
+def _churn_gavel(wl, frac, seed):
+    """Replace ``frac`` of the jobs and jitter survivors' throughputs."""
+    rng = np.random.default_rng(seed)
+    n = wl.T.shape[0]
+    n_out = int(frac * n)
+    keep = np.arange(n)[n_out:]
+    fresh = make_cluster_workload(n_out, num_workers=(24, 24, 24),
+                                  seed=seed + 50)
+    cat = lambda a, b: np.concatenate([a[keep], b])
+    wl2 = dataclasses.replace(
+        wl, T=cat(wl.T, fresh.T) * rng.uniform(0.98, 1.02, (n, 3)),
+        w=cat(wl.w, fresh.w), z=cat(wl.z, fresh.z),
+        interference=cat(wl.interference, fresh.interference),
+        job_type=cat(wl.job_type, fresh.job_type))
+    ids2 = np.concatenate([keep, 1_000 + np.arange(n_out)])
+    return wl2, ids2
+
+
+# ---------------------------------------------------------------------------
+# pipeline staging
+# ---------------------------------------------------------------------------
+
+def test_pipeline_stages_match_pop_solve():
+    """plan -> build -> solve -> reduce == pop_solve (same partition)."""
+    prob = _gavel()
+    p = pop.make_plan(prob, 4, strategy="stratified")
+    ops = pop.build(prob, p)
+    res = pop.solve(prob, p, ops, solver_kw=KW)
+    alloc = pop.reduce(prob, p, ops, res)
+    one_call = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW)
+    np.testing.assert_allclose(alloc, one_call.alloc, rtol=1e-6)
+    assert p.shapes is not None and p.shapes["x"][0] == 4
+    # pop_solve(plan=) runs the given plan verbatim
+    pinned = pop.pop_solve(prob, 4, plan=p, solver_kw=KW)
+    np.testing.assert_array_equal(pinned.idx, p.idx)
+
+
+def test_plan_reuse_on_stable_instance():
+    """warm with an unchanged instance reuses the plan object itself."""
+    prob = _gavel()
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW)
+    rng = np.random.default_rng(0)
+    wl2 = dataclasses.replace(prob.wl,
+                              T=prob.wl.T * rng.uniform(0.98, 1.02,
+                                                        prob.wl.T.shape))
+    nxt = pop.pop_solve(GavelProblem(wl2), 4, warm=prev, solver_kw=KW)
+    assert nxt.plan is prev.plan
+    assert nxt.warm_stats["identity"] and nxt.warm_stats["warm_fraction"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# remap_warm: identity churn must be the PR-2 path bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_identity_remap_is_bit_for_bit():
+    prob = _gavel()
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW)
+    ops = pop.build(prob, prev.plan)
+    ws = remap_warm(prev.plan, prev.plan, prev, ops=ops)
+    assert ws.stats["identity"]
+    np.testing.assert_array_equal(np.asarray(ws.x), prev.x)
+    np.testing.assert_array_equal(np.asarray(ws.y), prev.y)
+    assert bool(np.all(ws.mask))
+
+
+def test_identity_churn_solve_matches_direct_warm():
+    """pop_solve(warm=) on a stable instance == handing the raw (x, y) to
+    the solve stage — the remap layer adds nothing on the identity path."""
+    prob = _gavel()
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW)
+    rng = np.random.default_rng(1)
+    wl2 = dataclasses.replace(prob.wl,
+                              T=prob.wl.T * rng.uniform(0.98, 1.02,
+                                                        prob.wl.T.shape))
+    prob2 = GavelProblem(wl2)
+    via_pop = pop.pop_solve(prob2, 4, warm=prev, solver_kw=KW)
+    ops = pop.build(prob2, prev.plan)
+    direct = pop.solve(prob2, prev.plan, ops, solver_kw=KW,
+                       warm=(prev.x, prev.y))
+    np.testing.assert_array_equal(via_pop.iterations,
+                                  np.asarray(direct.iterations))
+    np.testing.assert_allclose(via_pop.x, np.asarray(direct.x), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# churn: arrivals, departures, k changes, re-stratification
+# ---------------------------------------------------------------------------
+
+def test_warm_across_arrival_and_departure():
+    prob = _gavel()
+    ids = np.arange(prob.n_entities)
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW,
+                         entity_ids=ids)
+    wl2, ids2 = _churn_gavel(prob.wl, 0.25, seed=3)
+    res = pop.pop_solve(GavelProblem(wl2), 4, warm=prev, solver_kw=KW,
+                        entity_ids=ids2)
+    assert bool(res.converged.all())
+    st = res.warm_stats
+    assert not st["identity"]
+    assert st["fresh"] == int(0.25 * prob.n_entities)
+    assert st["dropped"] == int(0.25 * prob.n_entities)
+    assert 0.7 < st["warm_fraction"] < 0.8
+    # repaired plan: every surviving job kept its (lane, slot)
+    old_pos = {int(e): (l, s) for l in range(4)
+               for s, e in enumerate(prev.plan.entity_of_slot[l]) if e >= 0}
+    new_plan = res.plan
+    new_ids = new_plan.external_ids()
+    kept = 0
+    for l in range(4):
+        for s, e in enumerate(new_plan.entity_of_slot[l]):
+            if e >= 0 and new_ids[e] in old_pos:
+                assert old_pos[new_ids[e]] == (l, s)
+                kept += 1
+    assert kept == st["matched"]
+
+
+def test_warm_across_k_change_converges():
+    prob = _gavel(n=64)
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW)
+    res = pop.pop_solve(prob, 8, warm=prev, solver_kw=KW)
+    assert res.idx.shape[0] == 8
+    assert bool(res.converged.all())
+    assert res.warm_stats["warm_fraction"] == 1.0
+    # and back down
+    res2 = pop.pop_solve(prob, 2, warm=res, solver_kw=KW)
+    assert res2.idx.shape[0] == 2
+    assert bool(res2.converged.all())
+
+
+def test_warm_with_replan_restratifies():
+    prob = _gavel()
+    prev = pop.pop_solve(prob, 4, strategy="random", seed=0, solver_kw=KW)
+    res = pop.pop_solve(prob, 4, strategy="random", seed=9, warm=prev,
+                        replan=True, solver_kw=KW)
+    assert not np.array_equal(res.idx, prev.idx)       # genuinely re-planned
+    assert bool(res.converged.all())                   # warm still total
+
+
+def test_warm_with_mismatched_id_spaces_degrades_to_cold():
+    """warm built WITH entity_ids + re-solve WITHOUT them (or vice versa)
+    must not pair entities by numeric coincidence — it starts cold."""
+    prob = _gavel()
+    ids = 100 + np.arange(prob.n_entities)
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW,
+                         entity_ids=ids)
+    res = pop.pop_solve(prob, 4, warm=prev, solver_kw=KW)   # no entity_ids
+    assert bool(res.converged.all())
+    assert res.warm_stats["warm_fraction"] == 0.0
+    assert "id spaces differ" in res.warm_stats["reason"]
+
+
+def test_warm_without_layout_degrades_to_cold():
+    """Problems without sub_layout must not raise across churn."""
+    prob = _gavel()
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW)
+    prev.plan = dataclasses.replace(prev.plan, layout=None)
+    res = pop.pop_solve(prob, 8, warm=prev, solver_kw=KW)   # k change + no layout
+    assert bool(res.converged.all())
+    assert res.warm_stats["warm_fraction"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 20% churn warm <= cold on all three domains
+# ---------------------------------------------------------------------------
+
+def test_churn20_warm_le_cold_cluster():
+    prob = _gavel(n=64, seed=0)
+    ids = np.arange(64)
+    prev = pop.pop_solve(prob, 4, strategy="stratified", solver_kw=KW,
+                         entity_ids=ids)
+    wl2, ids2 = _churn_gavel(prob.wl, 0.2, seed=11)
+    prob2 = GavelProblem(wl2)
+    warm = pop.pop_solve(prob2, 4, warm=prev, solver_kw=KW, entity_ids=ids2)
+    cold = pop.pop_solve(prob2, 4, plan=warm.plan, solver_kw=KW)  # same plan
+    assert bool(warm.converged.all())
+    assert warm.iterations.sum() <= cold.iterations.sum()
+
+
+def test_churn20_warm_le_cold_traffic():
+    topo = make_topology(n_nodes=40, target_edges=90, seed=0)
+    pairs, size = make_demands(topo, 200, seed=0)
+    paths = k_shortest_paths(topo, pairs, n_paths=3, max_len=20, seed=0)
+    sel = np.arange(128)
+    prob = TrafficProblem(topo, pairs[sel], size[sel], paths[sel])
+    prev = pop.pop_solve(prob, 4, strategy="random", solver_kw=KW,
+                         entity_ids=sel)
+    rng = np.random.default_rng(2)
+    keep = sel[26:]
+    newcomers = 128 + np.arange(26)
+    sel2 = np.concatenate([keep, newcomers])
+    prob2 = TrafficProblem(topo, pairs[sel2],
+                           size[sel2] * rng.uniform(0.97, 1.03, 128),
+                           paths[sel2])
+    warm = pop.pop_solve(prob2, 4, warm=prev, solver_kw=KW, entity_ids=sel2)
+    cold = pop.pop_solve(prob2, 4, plan=warm.plan, solver_kw=KW)
+    assert bool(warm.converged.all())
+    assert warm.iterations.sum() <= cold.iterations.sum()
+
+
+def test_churn20_warm_le_cold_load_balancing():
+    wl = make_shard_workload(128, 16, seed=0)
+    wl = dataclasses.replace(wl, ids=np.arange(128))
+    kw = dict(max_iters=12_000, tol_primal=1e-4, tol_gap=1e-4)
+    prev = LoadBalanceProblem(wl).pop_solve(4, solver_kw=kw)
+    rng = np.random.default_rng(4)
+    pool = make_shard_workload(256, 16, seed=9)
+    keep = np.sort(rng.choice(128, 102, replace=False))
+    new = rng.choice(256, 26, replace=False)
+    wl2 = ShardWorkload(
+        load=np.concatenate([wl.load[keep], pool.load[new]])
+             * rng.uniform(0.97, 1.03, 128),
+        mem=np.concatenate([wl.mem[keep], pool.mem[new]]),
+        placement=np.concatenate([prev.placement[keep],
+                                  rng.integers(0, 16, 26)]),
+        cap=wl.cap, eps_frac=wl.eps_frac,
+        ids=np.concatenate([keep, 1_000 + new]))
+    prob2 = LoadBalanceProblem(wl2)
+    # cold control shares the grouping (warm minus the warm start)
+    cold = prob2.pop_solve(4, solver_kw=kw, warm=prev, warm_start=False)
+    warm = prob2.pop_solve(4, solver_kw=kw, warm=prev)
+    assert warm.extra["warm_fraction"] == pytest.approx(102 / 128)
+    assert warm.extra["iterations"] <= cold.extra["iterations"]
+
+
+# ---------------------------------------------------------------------------
+# repair_plan invariants + warm_mask semantics
+# ---------------------------------------------------------------------------
+
+def test_repair_plan_departure_only_shrinks_slots():
+    prob = _gavel(n=40)
+    ids = np.arange(40)
+    p = pop.make_plan(prob, 4, strategy="stratified", entity_ids=ids)
+    wl2 = dataclasses.replace(prob.wl, T=prob.wl.T[:24], w=prob.wl.w[:24],
+                              z=prob.wl.z[:24],
+                              interference=prob.wl.interference[:24],
+                              job_type=prob.wl.job_type[:24])
+    p2 = repair_plan(p, GavelProblem(wl2), entity_ids=ids[:24])
+    assert p2.k == 4
+    assert p2.n_per <= p.n_per
+    live = p2.entity_of_slot[p2.entity_of_slot >= 0]
+    assert sorted(live.tolist()) == list(range(24))
+
+
+def test_warm_mask_lane_starts_cold():
+    """A masked-out lane must solve exactly like a cold lane."""
+    prob = _gavel(n=32)
+    p = pop.make_plan(prob, 2, strategy="stratified")
+    ops = pop.build(prob, p)
+    cold = pop.solve(prob, p, ops, solver_kw=KW)
+    # garbage warm iterates, all lanes masked out -> identical to cold
+    rng = np.random.default_rng(0)
+    junk_x = rng.uniform(0, 1, np.asarray(ops.c).shape).astype(np.float32)
+    junk_y = rng.uniform(0, 1, np.asarray(ops.q).shape).astype(np.float32)
+    masked = pop.solve(prob, p, ops, solver_kw=KW,
+                       warm=WarmStart(junk_x, junk_y,
+                                      np.zeros(2, bool), {}))
+    np.testing.assert_array_equal(np.asarray(cold.x), np.asarray(masked.x))
+    np.testing.assert_array_equal(np.asarray(cold.iterations),
+                                  np.asarray(masked.iterations))
+
+
+def test_solve_stacked_warm_mask_matches_backend_blend():
+    """pdhg.solve_stacked(warm_mask=) is the same per-lane cold blend that
+    backends._resolve_warm applies to a WarmStart — pin the two
+    implementations to each other (and to the cold solve)."""
+    from repro.core import pdhg
+    prob = _gavel(n=16)
+    p = pop.make_plan(prob, 2, strategy="stratified")
+    ops = pop.build(prob, p)
+    kw = dict(max_iters=400, tol_primal=1e-4, tol_gap=1e-4)
+    rng = np.random.default_rng(3)
+    junk_x = rng.uniform(0, 1, np.asarray(ops.c).shape).astype(np.float32)
+    junk_y = rng.uniform(0, 1, np.asarray(ops.q).shape).astype(np.float32)
+    mask = np.array([False, False])
+    cold = pdhg.solve_stacked(ops, engine="matvec", K_mv=prob.K_mv,
+                              KT_mv=prob.KT_mv, **kw)
+    via_solver = pdhg.solve_stacked(ops, engine="matvec", K_mv=prob.K_mv,
+                                    KT_mv=prob.KT_mv, warm_x=junk_x,
+                                    warm_y=junk_y, warm_mask=mask, **kw)
+    via_backend = pop.solve(prob, p, ops, solver_kw=kw,
+                            warm=WarmStart(junk_x, junk_y, mask, {}))
+    np.testing.assert_array_equal(np.asarray(cold.x),
+                                  np.asarray(via_solver.x))
+    np.testing.assert_array_equal(np.asarray(via_solver.x),
+                                  np.asarray(via_backend.x))
+
+
+def test_solve_full_engine_plumbing():
+    """solve_full accepts engine=/backend= and matches the default path."""
+    prob = _gavel(n=24)
+    a1, r1, _, _ = pop.solve_full(prob, solver_kw=KW)
+    a2, r2, _, _ = pop.solve_full(prob, solver_kw=KW, engine="matvec",
+                                  backend="vmap")
+    np.testing.assert_allclose(a1, a2, atol=1e-6)
+    assert int(r1.iterations) == int(r2.iterations)

@@ -177,13 +177,17 @@ def test_warm_shape_mismatch_rejected():
                                warm=(jnp.zeros((2, 5)), jnp.zeros((2, 4))))
 
 
-def test_pop_warm_requires_matching_k():
-    kw = dict(max_iters=400, tol_primal=1e-4, tol_gap=1e-4)
+def test_pop_warm_across_k_change_remaps():
+    """PR-2 raised on a k mismatch; the PopPlan layer remaps instead —
+    ``pop_solve(warm=)`` is total across k changes (ISSUE 3 acceptance)."""
+    kw = dict(max_iters=2_000, tol_primal=1e-4, tol_gap=1e-4)
     wl = make_cluster_workload(16, num_workers=(8, 8, 8), seed=1)
     prob = GavelProblem(wl, space_sharing=False)
     prev = pop.pop_solve(prob, 2, solver_kw=kw)
-    with pytest.raises(ValueError, match="k="):
-        pop.pop_solve(prob, 4, warm=prev, solver_kw=kw)
+    res = pop.pop_solve(prob, 4, warm=prev, solver_kw=kw)
+    assert res.idx.shape[0] == 4
+    assert res.warm_stats is not None
+    assert res.warm_stats["warm_fraction"] == 1.0   # every job matched
 
 
 # ---------------------------------------------------------------------------
