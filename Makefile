@@ -14,17 +14,24 @@
 #                        BENCH_pop.json; nonzero exit on regression
 #   make bench-churn     churn-aware warm starts: warm-vs-cold iterations
 #                        under 5/20/50% entity churn, all three domains
+#   make test-conformance  ONLY the cross-engine conformance matrix
+#                        (engines x map backends x domains at 1e-5, plus
+#                        the in-loop-KKT bit-level gate) — the fast check
+#                        after touching kernels/ or the step engines
 
 PY = PYTHONPATH=src python
 
-.PHONY: test check-imports bench-backends bench-smoke bench-snapshot \
-        bench-check bench-churn
+.PHONY: test check-imports test-conformance bench-backends bench-smoke \
+        bench-snapshot bench-check bench-churn
 
 check-imports:
 	$(PY) scripts/check_imports.py
 
 test:
 	sh scripts/test.sh
+
+test-conformance:
+	$(PY) -m pytest -q tests/test_engine_conformance.py
 
 bench-backends:
 	$(PY) -m benchmarks.bench_pop_scaling --backend vmap --backend chunked_vmap --backend shard_map

@@ -12,12 +12,14 @@ recorded per backend — the data that justifies ``backend="auto"``'s
 selection thresholds on each platform.
 
 ``--engine-sweep`` (also part of the default run) A/Bs the PDHG *step
-engines* on batched dense LPs at each k: the generic operator-matvec
-engine vs the fused dense engine that hands the whole stack to one fused
-kernel launch per half-step (``core/pdhg.py``; compiled Pallas on TPU,
-XLA-fused reference elsewhere).  Timings are min-of-N after a compile
-warmup, so they measure the steady-state map step — what an online solver
-with a jit-cached engine actually pays.
+engines*: the generic operator-matvec engine vs the fused dense engine on
+batched dense LPs, AND vs the ``fused_structured`` gather/segment-reduce
+engine on real Gavel sub-problem stacks (singleton combos — the ISSUE
+acceptance signal: structured-fused must never lose to matvec at k >= 2),
+plus an in-loop-KKT vs standalone-KKT A/B (convergence checks from
+carried half-step products cost zero extra operator passes).  Timings are
+min-of-N after a compile warmup, so they measure the steady-state map
+step — what an online solver with a jit-cached engine actually pays.
 
 Also benchmarks the PDHG solver itself against scipy (HiGHS) on random
 dense LPs — the solver-substrate sanity check.
@@ -55,6 +57,26 @@ def _random_dense_stack(k: int, n: int, mi: int, rng) -> pdhg.OperatorLP:
                         *[pdhg.dense_ops(lp) for lp in lps])
 
 
+def _ab_time(fns: dict, batch, repeats: int):
+    """Interleaved min-of-N timing of competing jitted solvers on one
+    batch: compile-warm every contender first, then interleave the timed
+    rounds so machine-load drift hits all contenders equally, keeping the
+    min per contender.  The ONE timing protocol for every A/B sweep in
+    this file.  Returns (best_seconds, results) keyed like ``fns``."""
+    results = {}
+    for fn in fns.values():
+        jax.block_until_ready(fn(batch).x)           # compile warmup
+    best = {name: float("inf") for name in fns}
+    for _ in range(repeats):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            res = fn(batch)
+            jax.block_until_ready(res.x)
+            best[name] = min(best[name], time.perf_counter() - t0)
+            results[name] = res
+    return best, results
+
+
 def engine_sweep(ks=DEFAULT_KS, n: int = 150, mi: int = 90,
                  repeats: int = 9, max_iters: int = 2_000,
                  seed: int = 0) -> list:
@@ -69,23 +91,13 @@ def engine_sweep(ks=DEFAULT_KS, n: int = 150, mi: int = 90,
     for k in ks:
         ops = _random_dense_stack(k, n, mi, rng)
         batch = (ops, *backends_mod.cold_start(ops))
-        fns, results = {}, {}
-        for engine_name in ("matvec", "fused"):
-            engine = (engine_name if engine_name == "matvec"
-                      else pdhg.fused_dense_engine())
-            fns[engine_name] = backends_mod.make_map_solver(
-                pdhg.dense_K_mv, pdhg.dense_KT_mv, kw, engine)
-            jax.block_until_ready(fns[engine_name](batch).x)  # compile warmup
-        # interleave the timed rounds so slow machine-load drift hits both
-        # engines equally; keep the min per engine
-        best = {name: float("inf") for name in fns}
-        for _ in range(repeats):
-            for name, fn in fns.items():
-                t0 = time.perf_counter()
-                res = fn(batch)
-                jax.block_until_ready(res.x)
-                best[name] = min(best[name], time.perf_counter() - t0)
-                results[name] = res
+        fns = {
+            name: backends_mod.make_map_solver(
+                pdhg.dense_K_mv, pdhg.dense_KT_mv, kw,
+                name if name == "matvec" else pdhg.fused_dense_engine())
+            for name in ("matvec", "fused")
+        }
+        best, results = _ab_time(fns, batch, repeats)
         for name in fns:
             iters = int(np.asarray(results[name].iterations).sum())
             rows.append(dict(engine=name, k=k, solve_s=best[name],
@@ -93,6 +105,71 @@ def engine_sweep(ks=DEFAULT_KS, n: int = 150, mi: int = 90,
             emit(f"pop_engine_{name}_k{k}", best[name] * 1e6,
                  f"iters={iters}")
     return rows
+
+
+def structured_engine_sweep(ks=(1, 2, 4, 8, 16), n_jobs: int = 256,
+                            repeats: int = 7, max_iters: int = 2_000,
+                            seed: int = 0) -> list:
+    """fused_structured vs matvec on REAL Gavel sub-problem stacks
+    (singleton combos — the per-job segment-sum operator), per k.
+
+    ISSUE acceptance: fused_structured must beat matvec at every k >= 2
+    (never slower) — its gather-ELL form has no scatters and one launch
+    per half-step for the whole stack, where the matvec engine pays k
+    vmapped ``segment_sum`` scatter-adds.  Interleaved min-of-N timing.
+    Returns rows [{engine, k, solve_s, iters}, ...]."""
+    wl = make_cluster_workload(n_jobs, num_workers=(64, 64, 64), seed=seed)
+    prob = GavelProblem(wl, space_sharing=False)
+    kw = dict(max_iters=max_iters, tol_primal=1e-6, tol_gap=1e-6)
+    rows = []
+    for k in ks:
+        p = pop.plan(prob, k, strategy="stratified")
+        ops = pop.build(prob, p)
+        batch = (ops, *backends_mod.cold_start(ops))
+        fns = {
+            name: backends_mod.make_map_solver(
+                prob.K_mv, prob.KT_mv, kw,
+                name if name == "matvec" else pdhg.fused_structured_engine())
+            for name in ("matvec", "fused_structured")
+        }
+        best, results = _ab_time(fns, batch, repeats)
+        for name in fns:
+            iters = int(np.asarray(results[name].iterations).sum())
+            rows.append(dict(engine=name, k=k, solve_s=best[name],
+                             iters=iters))
+            emit(f"pop_structured_{name}_k{k}", best[name] * 1e6,
+                 f"iters={iters}")
+        emit(f"pop_structured_speedup_k{k}", 0.0,
+             f"fused_structured_{best['matvec'] / best['fused_structured']:.2f}"
+             "x_vs_matvec")
+    return rows
+
+
+def kkt_sweep(k: int = 8, n: int = 150, mi: int = 90, check_every: int = 10,
+              budget: int = 1_000, repeats: int = 7, seed: int = 0) -> list:
+    """In-loop vs standalone KKT at a fixed iteration budget: the cost of
+    convergence checks.  The in-loop path reads the carried half-step
+    products (zero extra operator passes); the standalone reference pays 2
+    fresh passes per check — at check_every=10 that is ~10% more operator
+    applications, all pure overhead.  Same trajectory either way
+    (tests/test_engine_conformance.py pins them bit-level)."""
+    rng = np.random.default_rng(seed)
+    ops = _random_dense_stack(k, n, mi, rng)
+    batch = (ops, *backends_mod.cold_start(ops))
+    fns = {
+        mode: backends_mod.make_map_solver(
+            pdhg.dense_K_mv, pdhg.dense_KT_mv,
+            dict(max_iters=budget, check_every=check_every,
+                 tol_primal=0.0, tol_gap=0.0, kkt=mode), "matvec")
+        for mode in ("inloop", "standalone")
+    }
+    best, _ = _ab_time(fns, batch, repeats)
+    saving = 1.0 - best["inloop"] / best["standalone"]
+    emit("pop_kkt_inloop", best["inloop"] * 1e6,
+         f"standalone_us={best['standalone'] * 1e6:.0f};"
+         f"saving={saving * 100:.1f}%;check_every={check_every}")
+    return [dict(mode=m, k=k, check_every=check_every, solve_s=t,
+                 iters=budget * k) for m, t in best.items()]
 
 
 def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
@@ -145,6 +222,14 @@ def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
     # PR-over-PR tracked signal in BENCH_pop.json, so it keeps full k
     # coverage and repeat count (~3 min of the scenario's wall time).
     engine_rows = engine_sweep(ks=ks, seed=seed) if engines else []
+    # ... and on REAL structured (Gavel) stacks: fused_structured vs matvec
+    # (the ISSUE acceptance signal), plus the in-loop-KKT A/B
+    structured_rows = (structured_engine_sweep(ks=tuple(k for k in ks
+                                                        if k <= 16),
+                                               n_jobs=min(n_jobs, 256),
+                                               seed=seed)
+                       if engines else [])
+    kkt_rows = kkt_sweep(seed=seed) if engines else []
 
     # solver substrate vs scipy
     rng = np.random.default_rng(0)
@@ -166,7 +251,8 @@ def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
          f"iters={int(res.iterations)}")
 
     out = {"rows": rows, "exponent": expo, "exponents": expos,
-           "engine_rows": engine_rows}
+           "engine_rows": engine_rows, "structured_rows": structured_rows,
+           "kkt_rows": kkt_rows}
     save_json("pop_scaling", out)
     return out
 
@@ -189,8 +275,13 @@ def main(argv=None):
         if args.smoke:
             engine_sweep(ks=(1, 2, 4), n=60, mi=40, repeats=2,
                          max_iters=400)
+            structured_engine_sweep(ks=(1, 2, 4), n_jobs=48, repeats=2,
+                                    max_iters=400)
+            kkt_sweep(k=4, n=120, mi=80, budget=600, repeats=3)
         else:
             engine_sweep(ks=tuple(args.ks))
+            structured_engine_sweep(ks=tuple(k for k in args.ks if k <= 16))
+            kkt_sweep()
         return
     run(n_jobs=args.n_jobs, ks=tuple(args.ks),
         backends=tuple(args.backend or DEFAULT_BACKENDS))

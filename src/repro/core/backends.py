@@ -15,12 +15,16 @@ the same code path as cold ones).  The result carries the same leading
 axis.  Backends differ only in scheduling, never in math — every backend
 must match ``vmap`` to float tolerance (``tests/test_backends.py``).
 
-Two *step engines* (see ``core/pdhg.py``) plug into every backend:
+Three *step engines* (see ``core/pdhg.py``) plug into every backend:
 ``engine="matvec"`` vmaps the per-problem operator matvecs (any structured
 LP), ``engine="fused"`` hands the whole stacked batch to the fused Pallas
-primal/dual kernels in one launch per half-step (dense LPs; compiled on
-TPU, XLA-fused reference elsewhere).  ``engine="auto"`` picks per
-:func:`repro.core.pdhg.select_engine`.
+matmul kernels in one launch per half-step (dense LPs; compiled on TPU,
+XLA-fused reference elsewhere), and ``engine="fused_structured"`` does the
+same through batched gather/segment-reduce kernels for operators carrying
+:class:`~repro.core.pdhg.StructuredOperator` index metadata (the
+segment-sum matvecs of the structured paper domains).  ``engine="auto"``
+picks per :func:`repro.core.pdhg.select_engine` — structured-fused
+whenever index metadata is present.
 
 Registered backends:
 

@@ -109,6 +109,11 @@ def similarity_report(attrs: np.ndarray, idx: np.ndarray) -> dict:
                    else np.ones((1, 1)))
         cov_d.append(np.linalg.norm(sub_cov - cov) /
                      (np.linalg.norm(cov) + 1e-12))
+    if not mean_d:
+        # every lane holds < 2 entities (tiny or departure-gutted plans):
+        # no within-lane statistics exist, report a trivially-similar split
+        return {"max_mean_dist": 0.0, "avg_mean_dist": 0.0,
+                "max_cov_dist": 0.0, "avg_cov_dist": 0.0}
     return {
         "max_mean_dist": float(np.max(mean_d)),
         "avg_mean_dist": float(np.mean(mean_d)),

@@ -18,41 +18,80 @@ supplied as a pair of callables ``K_mv(data, x)`` / ``KT_mv(data, y)`` plus a
 data pytree.  Dense problems use plain matmuls (and, on TPU, the Pallas
 kernels in ``repro.kernels``); the big domain problems (traffic engineering
 with >10^6 variables) supply structured matvecs so the full unpartitioned
-baseline never materialises a dense K.
+baseline never materialises a dense K.  Structured problems can ALSO attach
+a :class:`StructuredOperator` — explicit index arrays + coefficients — which
+unlocks the ``fused_structured`` engine (below).
 
 Step-engine contract
 --------------------
 
-The inner-loop math (primal/dual half-steps, matvecs for KKT checks and the
-power iteration) is factored behind a :class:`StepEngine`.  An engine works
-on a whole STACKED batch of k sub-problems at once — every array carries a
-leading ``[k]`` axis and per-sub-problem scalars (step sizes) are ``[k]``
-vectors, because POP sub-problems restart independently and their step
-sizes diverge across the batch.  Two engines ship:
+The inner-loop math is factored behind a :class:`StepEngine`.  An engine
+works on a whole STACKED batch of k sub-problems at once — every array
+carries a leading ``[k]`` axis and per-sub-problem scalars (step sizes) are
+``[k]`` vectors, because POP sub-problems restart independently and their
+step sizes diverge across the batch.  An engine provides two *half-steps*
+that each emit the matvec product they materialise:
+
+    forward(data, x, c, l, u, tau[k], kty)          -> (x_new, K x_new)
+    backward(data, y, q, sigma[k], ineq, kx, kx_-)  -> (y_new, K^T y_new)
+
+``forward`` is the primal update ``x+ = clip(x - tau (c + K^T y), l, u)``
+(consuming the CARRIED ``K^T y`` from the previous backward) followed by the
+forward product ``K x+``; ``backward`` is the dual update using the
+extrapolated product ``K x_bar = 2 K x+ - K x`` (linearity of K — no second
+matvec for the extrapolated point) followed by the adjoint product
+``K^T y+``.  Per iteration that is exactly one K and one K^T application —
+the same operator work as classic PDHG — but the products now flow OUT of
+the half-steps, which is what makes the in-loop KKT check free (below).
+Three engines ship:
 
 ``matvec`` (:func:`matvec_engine`)
     Wraps the user's ``K_mv``/``KT_mv`` callables with ``jax.vmap`` and
     applies the element-wise tails in plain jnp.  Works for ANY structured
-    operator; this is the only engine usable for non-dense problems.
+    operator; the fallback engine for problems without metadata.
 
 ``fused`` (:func:`fused_dense_engine`)
-    Dense-data-only.  Routes the primal and dual half-steps through the
-    batched fused kernels in ``repro.kernels.ops`` (``fused_primal_step`` /
-    ``fused_dual_step``), so on TPU the matvec partials stay in VMEM and
-    the axpy+projection tail runs in the SAME kernel launch — one launch
-    per half-step for the whole k-stack instead of k vmapped solves.
-    ``kernels/ops.py`` dispatches per platform: compiled Pallas on TPU,
-    the pure-jnp reference (still algebraically fused) elsewhere, with
-    ``interpret`` available for kernel debugging on CPU.
+    Dense-data-only.  Routes each half-step through the batched fused
+    kernels in ``repro.kernels.ops`` (``fused_forward_step`` /
+    ``fused_backward_step``), so on TPU the matvec partials stay in VMEM
+    and the axpy+projection tail runs in the SAME kernel launch — one
+    launch per half-step for the whole k-stack.
+
+``fused_structured`` (:func:`fused_structured_engine`)
+    For operators with a :class:`StructuredOperator` attached (segment-sum
+    /gather matvecs: Gavel per-job rows, traffic per-commodity path sums,
+    LB server groups).  Each half-step is one batched Pallas
+    gather/segment-reduce launch over the whole k-stack
+    (``kernels/structured_pdhg_step.py``); off-TPU the dispatch in
+    ``kernels/ops.py`` takes an XLA reference built on
+    ``take_along_axis`` gathers — no scatters anywhere, unlike the
+    ``segment_sum`` scatter-adds inside typical domain matvecs.
 
 ``engine="auto"`` (:func:`select_engine`) picks ``fused`` for dense
-operator data on TPU and ``matvec`` otherwise.  Engines differ only in
-scheduling/fusion, never in math — ``tests/test_step_engine.py`` pins them
-to each other at 1e-5 on fixed iteration budgets.
+operator data on TPU, ``fused_structured`` when index metadata is present,
+and ``matvec`` otherwise.  Engines differ only in scheduling/fusion, never
+in math — ``tests/test_engine_conformance.py`` pins all engines x all map
+backends x the three paper domains to 1e-5 on fixed iteration budgets.
+
+In-loop KKT (free convergence checks)
+-------------------------------------
+
+Because the half-steps emit ``K x`` / ``K^T y``, and the running averages
+of those products equal the products of the running averages (K is
+linear), the per-chunk KKT check — primal residual and duality gap for
+BOTH restart candidates (current iterate and running average) — is
+computed entirely from carried products: **zero extra operator passes**.
+The previous scheme paid two full K + two K^T applications per check.
+``solve_stacked(kkt="standalone")`` keeps a verification mode that
+re-derives the current candidate's products with fresh operator passes;
+it must be bit-identical to the in-loop path on the CPU/XLA path
+(``tests/test_engine_conformance.py`` pins this), which proves the carried
+products never drift from ground truth through restarts, freezing, or
+warm starts.
 
 :func:`solve_stacked` is the batched entry point (what the map-step
-backends in ``core/backends.py`` call for the fused path);
-:func:`solve` is the single-problem wrapper (a k=1 stack).
+backends in ``core/backends.py`` call); :func:`solve` is the
+single-problem wrapper (a k=1 stack).
 
 Warm starts
 -----------
@@ -76,19 +115,164 @@ Algorithm: Chambolle–Pock primal–dual with
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .problem import BIG, LinearProgram
 
 
+class StructuredOperator(NamedTuple):
+    """Index-array form of a sparse constraint matrix K ([M, N]): each
+    matvec direction gets its own gather layout — for every row, the
+    column ids + coefficients that feed it (``K x``), and for every
+    column, the row ids + values (``K^T y``) — so BOTH directions are pure
+    gather + reduce, no scatter.
+
+    Per side the layout is a **skew-aware two-bucket ELL**: structured LPs
+    concentrate a few very wide segments (Gavel worker-cap rows and the
+    epigraph ``t`` column touch every job; LB per-server load rows touch
+    every shard; hot traffic edges carry many paths) among many narrow
+    ones, and a uniform-width ELL would pad every narrow segment to the
+    widest.  Segments wider than ~4x the median go to a separate *wide
+    bucket* — an ELL over just those ``D`` segments (``w*_idx/w*_val
+    [Ww, D]`` + ``w*_ids [D]`` naming which segment each bucket column
+    feeds) — whose reduced results are added back with a tiny one-hot
+    accumulation.  Total padded work stays ~nnz instead of
+    ~n_segments * max_width.
+
+    Arrays are nnz-major (``[..., W, M]``: padded per-segment entry count
+    W on the sublane axis, segments on the lane axis) so the reduce runs
+    over the leading axis while M/N stay on the 128-wide axis — what the
+    Pallas kernels in ``kernels/structured_pdhg_step.py`` want.  Padding
+    entries carry ``idx 0, val 0.0`` (a zero coefficient is harmless in a
+    gather-multiply-add), so no validity mask is needed, duplicate
+    (row, col) entries simply sum — segment-sum semantics — and empty wide
+    buckets are a single zero column feeding segment 0 with 0.0.
+
+    All leaves batch over a leading ``[k]`` sub-problem axis like every
+    other ``OperatorLP`` field; :func:`stack_ops` pads per-lane
+    widths/bucket sizes to the stack maximum before stacking.
+    """
+
+    row_idx: jnp.ndarray    # [..., Wr, M] int32 column ids feeding each row
+    row_val: jnp.ndarray    # [..., Wr, M] f32 coefficients
+    wrow_idx: jnp.ndarray   # [..., Ww, Dr] wide-row bucket column ids
+    wrow_val: jnp.ndarray   # [..., Ww, Dr]
+    wrow_ids: jnp.ndarray   # [..., Dr] int32 row fed by each bucket column
+    col_idx: jnp.ndarray    # [..., Wc, N] int32 row ids feeding each column
+    col_val: jnp.ndarray    # [..., Wc, N] f32 coefficients
+    wcol_idx: jnp.ndarray   # [..., Wv, Dc] wide-column bucket row ids
+    wcol_val: jnp.ndarray   # [..., Wv, Dc]
+    wcol_ids: jnp.ndarray   # [..., Dc] int32 column fed by each bucket column
+
+
+def _pack_ell(seg: np.ndarray, other: np.ndarray, vals: np.ndarray,
+              n_seg: int, width_mult: int = 8):
+    """Pack COO entries grouped by ``seg`` into nnz-major ELL
+    ``(idx [W, n_seg], val [W, n_seg])``; W rounds up to ``width_mult``
+    (stable widths across re-builds keep jit caches warm)."""
+    order = np.argsort(seg, kind="stable")
+    s = seg[order].astype(np.int64)
+    o = other[order]
+    v = vals[order]
+    starts = np.searchsorted(s, np.arange(n_seg))
+    pos = np.arange(s.size) - starts[s] if s.size else np.zeros(0, np.int64)
+    w = int(pos.max()) + 1 if s.size else 1
+    w = max(1, -(-w // width_mult) * width_mult)
+    idx = np.zeros((w, n_seg), np.int32)
+    val = np.zeros((w, n_seg), np.float32)
+    idx[pos, s] = o
+    val[pos, s] = v
+    return idx, val
+
+
+def _pack_side(seg: np.ndarray, other: np.ndarray, vals: np.ndarray,
+               n_seg: int):
+    """One gather side (rows or columns) as the two-bucket ELL: segments
+    wider than ``max(16, 4 * median nonzero width)`` split into the wide
+    bucket.  Returns (idx, val, widx, wval, wids)."""
+    seg = seg.astype(np.int64)
+    counts = np.bincount(seg, minlength=n_seg) if seg.size \
+        else np.zeros(n_seg, np.int64)
+    nz = counts[counts > 0]
+    med = int(np.median(nz)) if nz.size else 1
+    cap = max(16, 4 * (-(-med // 8) * 8))
+    wide = np.flatnonzero(counts > cap)
+    is_wide = np.isin(seg, wide)
+    idx, val = _pack_ell(seg[~is_wide], other[~is_wide], vals[~is_wide],
+                         n_seg)
+    d = max(int(wide.size), 1)
+    bucket_of = np.zeros(n_seg, np.int64)
+    bucket_of[wide] = np.arange(wide.size)
+    widx, wval = _pack_ell(bucket_of[seg[is_wide]], other[is_wide],
+                           vals[is_wide], d)
+    wids = np.zeros(d, np.int32)
+    wids[: wide.size] = wide
+    return idx, val, widx, wval, wids
+
+
+def structured_from_coo(rows, cols, vals, n_rows: int,
+                        n_cols: int) -> StructuredOperator:
+    """Build a :class:`StructuredOperator` from COO triplets (numpy, at
+    problem build time).  Entries may repeat (they sum) and may carry zero
+    values (kept — structural zeros give shape-stable widths)."""
+    rows = np.asarray(rows).ravel()
+    cols = np.asarray(cols).ravel()
+    vals = np.asarray(vals, np.float32).ravel()
+    ri, rv, wri, wrv, wrids = _pack_side(rows, cols, vals, n_rows)
+    ci, cv, wci, wcv, wcids = _pack_side(cols, rows, vals, n_cols)
+    j = jnp.asarray
+    return StructuredOperator(
+        row_idx=j(ri), row_val=j(rv),
+        wrow_idx=j(wri), wrow_val=j(wrv), wrow_ids=j(wrids),
+        col_idx=j(ci), col_val=j(cv),
+        wcol_idx=j(wci), wcol_val=j(wcv), wcol_ids=j(wcids))
+
+
+def structured_to_dense(s: StructuredOperator) -> jnp.ndarray:
+    """Materialise the dense K ([..., M, N]) a StructuredOperator encodes
+    — from the row-side layout alone, which fully represents K (tests +
+    the conformance matrix; never used on the solve path)."""
+    def one(ri, rv, wri, wrv, wrids, n_cols):
+        m = ri.shape[1]
+        rows = jnp.broadcast_to(jnp.arange(m)[None, :], ri.shape)
+        k0 = jnp.zeros((m, n_cols), rv.dtype)
+        k0 = k0.at[rows.ravel(), ri.ravel()].add(rv.ravel())
+        wrows = jnp.broadcast_to(wrids[None, :], wri.shape)
+        return k0.at[wrows.ravel(), wri.ravel()].add(wrv.ravel())
+    n_cols = s.col_idx.shape[-1]
+    if s.row_idx.ndim == 2:
+        return one(s.row_idx, s.row_val, s.wrow_idx, s.wrow_val,
+                   s.wrow_ids, n_cols)
+    return jax.vmap(lambda ri, rv, wri, wrv, wrids: one(
+        ri, rv, wri, wrv, wrids, n_cols))(
+        s.row_idx, s.row_val, s.wrow_idx, s.wrow_val, s.wrow_ids)
+
+
+def scale_structured(s: StructuredOperator, d_r: jnp.ndarray,
+                     d_c: jnp.ndarray) -> StructuredOperator:
+    """K~ = D_r K D_c applied to the ELL payload (batched: d_r [k, M],
+    d_c [k, N]).  Padded entries stay zero (0 * anything)."""
+    from ..kernels.ref import _bgather as bgather
+    return s._replace(
+        row_val=s.row_val * d_r[:, None, :] * bgather(d_c, s.row_idx),
+        wrow_val=(s.wrow_val * bgather(d_r, s.wrow_ids)[:, None, :]
+                  * bgather(d_c, s.wrow_idx)),
+        col_val=s.col_val * d_c[:, None, :] * bgather(d_r, s.col_idx),
+        wcol_val=(s.wcol_val * bgather(d_c, s.wcol_ids)[:, None, :]
+                  * bgather(d_r, s.wcol_idx)))
+
+
 class OperatorLP(NamedTuple):
     """LP in operator form.  ``data`` is whatever the K_mv/KT_mv callables
-    need (dense K, index arrays, ...).  All leaves are batchable."""
+    need (dense K, index arrays, ...).  ``structured``, when present, is
+    the :class:`StructuredOperator` index metadata that lets the
+    ``fused_structured`` engine run the same operator as batched
+    gather/segment-reduce kernels.  All leaves are batchable."""
 
     c: jnp.ndarray          # [N]
     q: jnp.ndarray          # [M]    rhs for K rows
@@ -96,6 +280,7 @@ class OperatorLP(NamedTuple):
     u: jnp.ndarray          # [N]
     ineq_mask: jnp.ndarray  # [M] bool: True → dual projected >= 0
     data: Any               # operator payload pytree
+    structured: Optional[StructuredOperator] = None
 
 
 def dense_ops(lp: LinearProgram) -> OperatorLP:
@@ -113,6 +298,32 @@ def dense_KT_mv(data, y):
     return K.T @ y
 
 
+def stack_ops(subs: Sequence[OperatorLP]) -> OperatorLP:
+    """Stack identically-shaped sub-LPs on a leading [k] axis.  ELL widths
+    (data-dependent: how congested the fullest row is in THIS lane) are
+    padded to the stack maximum first, so lanes with different structured
+    widths still stack; if any lane lacks metadata the whole stack drops
+    it (engines must see one consistent payload)."""
+    subs = list(subs)
+    structs = [s.structured for s in subs]
+    bare = [s._replace(structured=None) for s in subs]
+    ops = jax.tree.map(lambda *xs: jnp.stack(xs), *bare)
+    if any(st is None for st in structs):
+        return ops
+    shapes = {f: tuple(max(getattr(st, f).shape[d] for st in structs)
+                       for d in range(getattr(structs[0], f).ndim))
+              for f in StructuredOperator._fields}
+
+    def padto(a, shape):
+        return jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, shape)])
+
+    padded = [StructuredOperator(
+        **{f: padto(getattr(st, f), shapes[f]) for f in st._fields})
+        for st in structs]
+    return ops._replace(
+        structured=jax.tree.map(lambda *xs: jnp.stack(xs), *padded))
+
+
 class SolveResult(NamedTuple):
     x: jnp.ndarray
     y: jnp.ndarray
@@ -122,6 +333,7 @@ class SolveResult(NamedTuple):
     gap: jnp.ndarray          # relative duality gap
     iterations: jnp.ndarray
     converged: jnp.ndarray
+    n_restarts: Optional[jnp.ndarray] = None   # [k] adaptive-restart count
 
 
 # --------------------------------------------------------------------------
@@ -134,35 +346,42 @@ class StepEngine(NamedTuple):
     All callables take STACKED arrays (leading ``[k]`` sub-problem axis):
 
       K(data, x[k,N]) -> [k,M]         KT(data, y[k,M]) -> [k,N]
-      primal(data, y, x, c, l, u, tau[k]) -> (x_new, x_bar)     # [k,N] each
-      dual(data, x_bar, y, q, sigma[k], ineq_mask) -> y_new     # [k,M]
+      forward(data, x, c, l, u, tau[k], kty[k,N]) -> (x_new, kx_new)
+      backward(data, y, q, sigma[k], ineq_mask, kx_new, kx_prev)
+          -> (y_new, kty_new)
 
     ``scale_data``, if set, rescales the operator payload for Ruiz
     equilibration (``data, d_r[k,M], d_c[k,N] -> data``); engines without
-    it (structured operators) get their K/KT wrapped functionally instead.
+    it get their K/KT wrapped functionally instead.  ``prep``, if set,
+    normalises the OperatorLP once before solving (the structured engine
+    moves ``op.structured`` into ``op.data`` so every downstream consumer
+    sees one payload).
     """
 
     name: str
     K: Callable
     KT: Callable
-    primal: Callable
-    dual: Callable
+    forward: Callable
+    backward: Callable
     scale_data: Optional[Callable] = None
+    prep: Optional[Callable] = None
 
 
 def _engine_from_matvecs(name: str, bK: Callable, bKT: Callable,
-                         scale_data: Optional[Callable] = None) -> StepEngine:
-    """Build the element-wise step tails from batched matvecs."""
+                         scale_data: Optional[Callable] = None,
+                         prep: Optional[Callable] = None) -> StepEngine:
+    """Build the element-wise half-step tails from batched matvecs."""
 
-    def primal(data, y, x, c, l, u, tau):
-        x_new = jnp.clip(x - tau[:, None] * (c + bKT(data, y)), l, u)
-        return x_new, 2.0 * x_new - x
+    def forward(data, x, c, l, u, tau, kty):
+        x_new = jnp.clip(x - tau[:, None] * (c + kty), l, u)
+        return x_new, bK(data, x_new)
 
-    def dual(data, x_bar, y, q, sigma, ineq_mask):
-        y_new = y + sigma[:, None] * (bK(data, x_bar) - q)
-        return jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+    def backward(data, y, q, sigma, ineq_mask, kx_new, kx_prev):
+        y_new = y + sigma[:, None] * (2.0 * kx_new - kx_prev - q)
+        y_new = jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+        return y_new, bKT(data, y_new)
 
-    return StepEngine(name, bK, bKT, primal, dual, scale_data)
+    return StepEngine(name, bK, bKT, forward, backward, scale_data, prep)
 
 
 def matvec_engine(K_mv: Callable = dense_K_mv,
@@ -199,17 +418,51 @@ def fused_dense_engine(kernel_backend: Optional[str] = None,
     def KT(data, y):
         return kops.bmatvec_t(data[0], y, **kw)
 
-    def primal(data, y, x, c, l, u, tau):
-        return kops.fused_primal_step(data[0], y, x, c, l, u, tau, **kw)
+    def forward(data, x, c, l, u, tau, kty):
+        return kops.fused_forward_step(data[0], x, c, l, u, tau, kty, **kw)
 
-    def dual(data, x_bar, y, q, sigma, ineq_mask):
-        return kops.fused_dual_step(data[0], x_bar, y, q, sigma, ineq_mask, **kw)
+    def backward(data, y, q, sigma, ineq_mask, kx_new, kx_prev):
+        return kops.fused_backward_step(data[0], y, q, sigma, ineq_mask,
+                                        kx_new, kx_prev, **kw)
 
     def scale_data(data, d_r, d_c):
         (K_,) = data
         return (K_ * d_r[..., :, None] * d_c[..., None, :],)
 
-    return StepEngine("fused", K, KT, primal, dual, scale_data)
+    return StepEngine("fused", K, KT, forward, backward, scale_data)
+
+
+@functools.lru_cache(maxsize=16)
+def fused_structured_engine(
+        kernel_backend: Optional[str] = None) -> StepEngine:
+    """Structured engine over the batched gather/segment-reduce kernels
+    (``kernels/structured_pdhg_step.py`` via ``kernels/ops.py`` dispatch:
+    Pallas on TPU, XLA ``take_along_axis`` reference elsewhere).  One
+    launch per half-step across the whole k-lane stack.  Requires
+    ``op.structured``; ``prep`` moves it into ``op.data`` so the payload
+    flows through backends/jit as ordinary traced arrays."""
+    from ..kernels import ops as kops
+
+    kw: dict = dict(backend=kernel_backend)
+
+    def K(data, x):
+        return kops.smatvec(data, x)
+
+    def KT(data, y):
+        return kops.smatvec_t(data, y)
+
+    def forward(data, x, c, l, u, tau, kty):
+        return kops.structured_forward_step(data, x, c, l, u, tau, kty, **kw)
+
+    def backward(data, y, q, sigma, ineq_mask, kx_new, kx_prev):
+        return kops.structured_backward_step(data, y, q, sigma, ineq_mask,
+                                             kx_new, kx_prev, **kw)
+
+    def prep(op: OperatorLP) -> OperatorLP:
+        return op._replace(data=op.structured, structured=None)
+
+    return StepEngine("fused_structured", K, KT, forward, backward,
+                      scale_structured, prep)
 
 
 def is_dense_ops(op: OperatorLP) -> bool:
@@ -226,19 +479,32 @@ def is_dense_ops(op: OperatorLP) -> bool:
 
 def select_engine(op: OperatorLP, K_mv: Callable = dense_K_mv,
                   KT_mv: Callable = dense_KT_mv) -> str:
-    """``engine="auto"`` rule: fused needs dense data AND the dense matvecs
-    AND a TPU (elsewhere XLA fuses the reference path just as well);
-    structured operators always take the matvec engine."""
+    """``engine="auto"`` rule: a ``preferred_engine`` attribute on the
+    problem's ``K_mv`` wins outright (the domain measured its own best —
+    load balancing pins ``matvec`` because its operator is a dense
+    [n, S] block where the gather-ELL path does ~2x the flops); otherwise
+    fused needs dense data AND the dense matvecs AND a TPU (elsewhere XLA
+    fuses the reference path just as well); operators carrying
+    :class:`StructuredOperator` index metadata take the structured-fused
+    engine (gather/segment-reduce, no scatters, one launch per half-step —
+    measured 2-18x over vmapped segment-sum matvecs on the gather-shaped
+    domains); everything else takes ``matvec``."""
+    pref = getattr(K_mv, "preferred_engine", None)
+    if pref is not None:
+        return pref
     dense = (K_mv is dense_K_mv and KT_mv is dense_KT_mv and is_dense_ops(op))
     if dense and jax.default_backend() == "tpu":
         return "fused"
+    if op.structured is not None:
+        return "fused_structured"
     return "matvec"
 
 
 def resolve_engine(engine: Union[None, str, StepEngine], op: OperatorLP,
                    K_mv: Callable = dense_K_mv,
                    KT_mv: Callable = dense_KT_mv) -> StepEngine:
-    """Normalise an engine spec (None/"auto"/"matvec"/"fused"/StepEngine)."""
+    """Normalise an engine spec (None/"auto"/"matvec"/"fused"/
+    "fused_structured"/StepEngine)."""
     if isinstance(engine, StepEngine):
         return engine
     if engine is None or engine == "auto":
@@ -249,10 +515,19 @@ def resolve_engine(engine: Union[None, str, StepEngine], op: OperatorLP,
         if not is_dense_ops(op):
             raise ValueError(
                 "engine='fused' needs dense operator data (op.data == (K,) "
-                "with K [..., M, N]); structured operators use engine='matvec'")
+                "with K [..., M, N]); structured operators use "
+                "engine='matvec' or 'fused_structured'")
         return fused_dense_engine()
-    raise ValueError(f"unknown engine {engine!r}; "
-                     "expected 'auto', 'matvec', 'fused', or a StepEngine")
+    if engine == "fused_structured":
+        if op.structured is None:
+            raise ValueError(
+                "engine='fused_structured' needs op.structured "
+                "(StructuredOperator index metadata attached by the "
+                "problem's build_sub); operators without it use "
+                "engine='matvec'")
+        return fused_structured_engine()
+    raise ValueError(f"unknown engine {engine!r}; expected 'auto', "
+                     "'matvec', 'fused', 'fused_structured', or a StepEngine")
 
 
 # --------------------------------------------------------------------------
@@ -267,8 +542,11 @@ def scale_operator(op: OperatorLP, d_r: jnp.ndarray, d_c: jnp.ndarray,
     BIG-sentinel bounds (|l| or |u| >= BIG/2 — "effectively free") stay
     untouched so padded/free variables keep their infinite box after
     scaling.  ``data`` replaces the operator payload when the caller has a
-    scaled one (dense K); by default the payload is left alone and the
-    matvecs are expected to be wrapped instead.
+    scaled one (dense K, scaled ELL); by default the payload is left alone
+    and the matvecs are expected to be wrapped instead.  Any
+    ``op.structured`` metadata is DROPPED — it describes the unscaled
+    operator (the structured engine's ``prep`` has already moved its
+    payload into ``data`` by the time scaling runs).
     """
     keep_l = jnp.abs(op.l) >= 0.5 * BIG
     keep_u = jnp.abs(op.u) >= 0.5 * BIG
@@ -277,7 +555,8 @@ def scale_operator(op: OperatorLP, d_r: jnp.ndarray, d_c: jnp.ndarray,
         l=jnp.where(keep_l, op.l, op.l / d_c),
         u=jnp.where(keep_u, op.u, op.u / d_c),
         ineq_mask=op.ineq_mask,
-        data=op.data if data is None else data)
+        data=op.data if data is None else data,
+        structured=None)
 
 
 def scale_warm_start(x: jnp.ndarray, y: jnp.ndarray, d_r, d_c):
@@ -318,16 +597,19 @@ def _power_iteration(engine: StepEngine, data, k: int, n_var: int,
     return jnp.sqrt(_vnorm(engine.KT(data, engine.K(data, v)))) + 1e-12
 
 
-def _kkt(op: OperatorLP, engine: StepEngine, x, y):
-    """(primal_res_rel, gap_rel, primal_obj, dual_obj), each [k]."""
-    Kx = engine.K(op.data, x)
-    resid = Kx - op.q
+def _kkt_from_products(op: OperatorLP, x, y, kx, kty):
+    """(primal_res_rel, gap_rel, primal_obj, dual_obj), each [k], from the
+    already-materialised products ``kx = K x`` / ``kty = K^T y``.  The ONE
+    place the KKT formulas live — the in-loop path feeds carried products,
+    :func:`_kkt` feeds fresh operator passes, and both must agree bit-level
+    when the products do."""
+    resid = kx - op.q
     prim_viol = jnp.where(op.ineq_mask, jnp.maximum(resid, 0.0), resid)
     # padded rows carry q = BIG — exclude them from the relative denominator
     q_eff = jnp.where(jnp.abs(op.q) >= 0.5 * BIG, 0.0, op.q)
     prim_res = _vnorm(prim_viol) / (1.0 + _vnorm(q_eff))
 
-    r = op.c + engine.KT(op.data, y)                  # reduced costs
+    r = op.c + kty                                    # reduced costs
     p_obj = jnp.sum(op.c * x, axis=-1)
     # g(y) = -q.y + sum_i min(l_i r_i, u_i r_i); BIG bounds act as -inf penalty
     d_obj = (-jnp.sum(op.q * y, axis=-1)
@@ -336,11 +618,22 @@ def _kkt(op: OperatorLP, engine: StepEngine, x, y):
     return prim_res, gap, p_obj, d_obj
 
 
+def _kkt(op: OperatorLP, engine: StepEngine, x, y):
+    """KKT scores via fresh operator passes (standalone reference; also the
+    final original-space report)."""
+    return _kkt_from_products(op, x, y, engine.K(op.data, x),
+                              engine.KT(op.data, y))
+
+
 class _State(NamedTuple):
     x: jnp.ndarray
     y: jnp.ndarray
+    kx: jnp.ndarray           # carried K x      (current iterate's product)
+    kty: jnp.ndarray          # carried K^T y
     x_sum: jnp.ndarray
     y_sum: jnp.ndarray
+    kx_sum: jnp.ndarray       # running product sums: K x_avg = kx_sum/avg_n
+    kty_sum: jnp.ndarray      # (linearity of K — averages cost no passes)
     avg_n: jnp.ndarray        # [k] iterations accumulated since restart
     x_anchor: jnp.ndarray     # iterate at last restart (for omega update)
     y_anchor: jnp.ndarray
@@ -348,6 +641,7 @@ class _State(NamedTuple):
     last_score: jnp.ndarray   # [k] KKT score at last restart (decay test)
     it: jnp.ndarray           # [k]
     done: jnp.ndarray         # [k]
+    n_restarts: jnp.ndarray   # [k]
     prim_res: jnp.ndarray
     gap: jnp.ndarray
 
@@ -394,11 +688,12 @@ def solve_stacked(
     warm_x: Optional[jnp.ndarray] = None,
     warm_y: Optional[jnp.ndarray] = None,
     warm_mask: Optional[jnp.ndarray] = None,
+    kkt: str = "inloop",
 ) -> SolveResult:
     """Solve a STACK of k LPs at once (every ``op`` leaf has a leading [k]
     axis; the result carries the same axis).  This is the map-step core:
     one fori/while loop drives all k sub-problems with per-lane step sizes,
-    restarts and termination, so the fused engine can hand the whole batch
+    restarts and termination, so the fused engines can hand the whole batch
     to single kernel launches.  Fully traceable.
 
     ``warm_mask`` ([k] bool) gates the warm start per lane: False lanes
@@ -406,8 +701,20 @@ def solve_stacked(
     churn-aware remapped warm starts (``core/plan.py``) cold-start lanes
     that matched no previous entity — a ``jnp.where`` on data, not a
     Python-level branch, so all lanes share one jitted solve.
+
+    ``kkt="inloop"`` (default) computes convergence checks entirely from
+    the products the half-steps already materialised — zero extra operator
+    passes per check.  ``kkt="standalone"`` re-derives the current
+    candidate's products with fresh K/K^T passes each check (2 extra
+    applications per chunk): the verification reference that must match
+    the in-loop path bit-level on the CPU/XLA path.
     """
+    if kkt not in ("inloop", "standalone"):
+        raise ValueError(f"unknown kkt mode {kkt!r}; "
+                         "expected 'inloop' or 'standalone'")
     eng = resolve_engine(engine, op, K_mv, KT_mv)
+    if eng.prep is not None:
+        op = eng.prep(op)
     k = op.c.shape[0]
     n_var = op.c.shape[-1]
 
@@ -439,35 +746,57 @@ def solve_stacked(
         m = jnp.asarray(warm_mask, bool)[:, None]
         x0 = jnp.where(m, x0, cold_x)
         y0 = jnp.where(m, y0, cold_y)
+    # seed the carried products (once per solve; every later refresh rides
+    # inside a half-step)
+    kx0 = eng_run.K(op_run.data, x0)
+    kty0 = eng_run.KT(op_run.data, y0)
 
     def chunk(state: _State) -> _State:
         tau = eta / (state.omega * knorm)          # [k]
         sigma = eta * state.omega / knorm          # [k]
 
         def one_iter(_, carry):
-            x, y, xs, ys = carry
-            x_new, x_bar = eng_run.primal(op_run.data, y, x, op_run.c,
-                                          op_run.l, op_run.u, tau)
-            y_new = eng_run.dual(op_run.data, x_bar, y, op_run.q, sigma,
-                                 op_run.ineq_mask)
-            return x_new, y_new, xs + x_new, ys + y_new
+            x, y, kx, kty, xs, ys, kxs, ktys = carry
+            x_new, kx_new = eng_run.forward(op_run.data, x, op_run.c,
+                                            op_run.l, op_run.u, tau, kty)
+            y_new, kty_new = eng_run.backward(op_run.data, y, op_run.q,
+                                              sigma, op_run.ineq_mask,
+                                              kx_new, kx)
+            return (x_new, y_new, kx_new, kty_new,
+                    xs + x_new, ys + y_new, kxs + kx_new, ktys + kty_new)
 
-        x, y, xs, ys = jax.lax.fori_loop(
+        x, y, kx, kty, xs, ys, kxs, ktys = jax.lax.fori_loop(
             0, check_every, one_iter,
-            (state.x, state.y, state.x_sum, state.y_sum),
+            (state.x, state.y, state.kx, state.kty,
+             state.x_sum, state.y_sum, state.kx_sum, state.kty_sum),
         )
         avg_n = state.avg_n + check_every
 
         # ---- candidate = better of {current, running average} ------------
-        x_avg = xs / avg_n[:, None]
-        y_avg = ys / avg_n[:, None]
-        pr_c, gap_c, _, _ = _kkt(op_run, eng_run, x, y)
-        pr_a, gap_a, _, _ = _kkt(op_run, eng_run, x_avg, y_avg)
+        # products for the current candidate are carried (in-loop mode) or
+        # recomputed with fresh operator passes (standalone verification
+        # mode); the average candidate's products are ALWAYS the running
+        # sums — K(x_avg) == avg(K x_i) by linearity, so the averages never
+        # cost a pass in either mode.
+        if kkt == "standalone":
+            kx_cur = eng_run.K(op_run.data, x)
+            kty_cur = eng_run.KT(op_run.data, y)
+        else:
+            kx_cur, kty_cur = kx, kty
+        nrm = avg_n[:, None]
+        x_avg, y_avg = xs / nrm, ys / nrm
+        kx_avg, kty_avg = kxs / nrm, ktys / nrm
+        pr_c, gap_c, _, _ = _kkt_from_products(op_run, x, y, kx_cur, kty_cur)
+        pr_a, gap_a, _, _ = _kkt_from_products(op_run, x_avg, y_avg,
+                                               kx_avg, kty_avg)
         score_c = pr_c + gap_c
         score_a = pr_a + gap_a
         use_avg = score_a < score_c                # [k]
-        x_r = jnp.where(use_avg[:, None], x_avg, x)
-        y_r = jnp.where(use_avg[:, None], y_avg, y)
+        sel = use_avg[:, None]
+        x_r = jnp.where(sel, x_avg, x)
+        y_r = jnp.where(sel, y_avg, y)
+        kx_r = jnp.where(sel, kx_avg, kx_cur)
+        kty_r = jnp.where(sel, kty_avg, kty_cur)
         pr = jnp.where(use_avg, pr_a, pr_c)
         gap = jnp.where(use_avg, gap_a, gap_c)
         score = jnp.minimum(score_a, score_c)
@@ -498,8 +827,14 @@ def solve_stacked(
         return _State(
             x=keep(pick(x_r, x), state.x),
             y=keep(pick(y_r, y), state.y),
+            # the restarted point's products restart with it (the averaged
+            # products ARE the average point's products, by linearity)
+            kx=keep(pick(kx_r, kx_cur), state.kx),
+            kty=keep(pick(kty_r, kty_cur), state.kty),
             x_sum=keep(pick(jnp.zeros_like(xs), xs), state.x_sum),
             y_sum=keep(pick(jnp.zeros_like(ys), ys), state.y_sum),
+            kx_sum=keep(pick(jnp.zeros_like(kxs), kxs), state.kx_sum),
+            kty_sum=keep(pick(jnp.zeros_like(ktys), ktys), state.kty_sum),
             avg_n=keep(pick(jnp.zeros_like(avg_n), avg_n), state.avg_n),
             x_anchor=keep(pick(x_r, state.x_anchor), state.x_anchor),
             y_anchor=keep(pick(y_r, state.y_anchor), state.y_anchor),
@@ -507,18 +842,22 @@ def solve_stacked(
             last_score=keep(pick(score, state.last_score), state.last_score),
             it=state.it + jnp.where(state.done, 0, check_every),
             done=done,
+            n_restarts=state.n_restarts + jnp.where(
+                state.done | ~restart, 0, 1).astype(jnp.int32),
             prim_res=keep(pr, state.prim_res), gap=keep(gap, state.gap),
         )
 
     init = _State(
-        x=x0, y=y0,
+        x=x0, y=y0, kx=kx0, kty=kty0,
         x_sum=jnp.zeros_like(x0), y_sum=jnp.zeros_like(y0),
+        kx_sum=jnp.zeros_like(kx0), kty_sum=jnp.zeros_like(kty0),
         avg_n=jnp.zeros((k,), jnp.float32),
         x_anchor=x0, y_anchor=y0,
         omega=jnp.full((k,), omega0, jnp.float32),
         last_score=jnp.full((k,), jnp.inf),
         it=jnp.zeros((k,), jnp.int32),
         done=jnp.zeros((k,), bool),
+        n_restarts=jnp.zeros((k,), jnp.int32),
         prim_res=jnp.full((k,), jnp.inf), gap=jnp.full((k,), jnp.inf),
     )
 
@@ -534,6 +873,7 @@ def solve_stacked(
     return SolveResult(
         x=x_fin, y=y_fin, primal_obj=p_obj, dual_obj=d_obj,
         primal_res=pr, gap=gap, iterations=state.it, converged=state.done,
+        n_restarts=state.n_restarts,
     )
 
 
@@ -553,6 +893,7 @@ def solve(
     warm_y: Optional[jnp.ndarray] = None,
     warm_mask: Optional[jnp.ndarray] = None,
     engine: Union[None, str, StepEngine] = "matvec",
+    kkt: str = "inloop",
 ) -> SolveResult:
     """Solve one LP: a k=1 stack through :func:`solve_stacked`.  Fully
     traceable; vmap over a batched ``op`` for POP (or better, hand the
@@ -565,7 +906,7 @@ def solve(
         opb, engine=engine, K_mv=K_mv, KT_mv=KT_mv,
         max_iters=max_iters, check_every=check_every,
         tol_primal=tol_primal, tol_gap=tol_gap, eta=eta, omega0=omega0,
-        equilibrate=equilibrate, warm_x=wx, warm_y=wy, warm_mask=wm)
+        equilibrate=equilibrate, warm_x=wx, warm_y=wy, warm_mask=wm, kkt=kkt)
     return jax.tree.map(lambda a: a[0], res)
 
 
@@ -620,12 +961,13 @@ def solve_dense(lp: LinearProgram, max_iters: int = 20_000,
     return SolveResult(x=x, y=y, primal_obj=squeeze(p_obj),
                        dual_obj=squeeze(d_obj), primal_res=squeeze(pr),
                        gap=squeeze(gap),
-                       iterations=res.iterations, converged=res.converged)
+                       iterations=res.iterations, converged=res.converged,
+                       n_restarts=res.n_restarts)
 
 
 def solve_batched(op_batched: OperatorLP, K_mv=dense_K_mv, KT_mv=dense_KT_mv,
                   **kw) -> SolveResult:
     """vmap over the leading (sub-problem) axis — POP's map step on one
     device.  ``core/backends.py`` wraps this in shard_map for the mesh path
-    and swaps in the fused engine for dense problems."""
+    and swaps in the fused engines for dense/structured problems."""
     return jax.vmap(lambda o: solve(o, K_mv, KT_mv, **kw))(op_batched)

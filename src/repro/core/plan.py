@@ -90,7 +90,14 @@ class PopPlan:
     entity_ids: Optional[np.ndarray] = None   # [n_entities] stable external ids
     similarity: Optional[dict] = None
     layout: Optional[SubLayout] = None
-    shapes: Optional[dict] = None    # {"x": (k, N), "y": (k, M)} after build
+    # filled by pop.build: {"x": (k, N), "y": (k, M)} stacked iterate shapes
+    # (what remap_warm sizes cold bases from), plus
+    # "ell": (Wr, Ww, Dr, Wc, Wv, Dc) when the problem attaches
+    # StructuredOperator metadata — every data-dependent ELL dim (narrow
+    # widths, wide-bucket widths, wide-bucket counts), so plan consumers
+    # can tell when a rebuild changed the kernel shapes (any of them
+    # moving retraces the jitted solve; iterate shapes do not move)
+    shapes: Optional[dict] = None
 
     @property
     def n_per(self) -> int:

@@ -213,15 +213,28 @@ make_plan = plan     # alias: lets ``pop_solve(plan=...)`` shadow the name
 # --------------------------------------------------------------------------
 
 def build(problem: POPProblem, pop_plan: PopPlan) -> OperatorLP:
-    """Materialise the plan's k identically-shaped sub-LPs and stack them.
-    Records the stacked shapes on the plan (what sizes warm remaps)."""
+    """Materialise the plan's k identically-shaped sub-LPs and stack them
+    (``pdhg.stack_ops`` pads per-lane ELL widths to the stack maximum when
+    the problem attaches :class:`~repro.core.pdhg.StructuredOperator`
+    metadata).  Records the stacked shapes on the plan (what sizes warm
+    remaps; ``"ell"`` carries the structured row/col widths so plan
+    consumers can see when a rebuild changed the stacked kernel shapes)."""
     subs = []
     for i in range(pop_plan.k):
         subs.append(problem.build_sub(pop_plan.entity_of_slot[i],
                                       1.0 / pop_plan.k,
                                       scale=pop_plan.row_scale(i)))
-    ops = jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+    ops = pdhg.stack_ops(subs)
     pop_plan.shapes = {"x": tuple(ops.c.shape), "y": tuple(ops.q.shape)}
+    if ops.structured is not None:
+        s = ops.structured
+        # every data-dependent ELL dim: narrow widths, wide-bucket widths
+        # AND wide-bucket counts — any of them moving retraces the solve
+        pop_plan.shapes["ell"] = (
+            int(s.row_idx.shape[-2]), int(s.wrow_idx.shape[-2]),
+            int(s.wrow_ids.shape[-1]),
+            int(s.col_idx.shape[-2]), int(s.wcol_idx.shape[-2]),
+            int(s.wcol_ids.shape[-1]))
     return ops
 
 

@@ -1,16 +1,22 @@
-"""Pallas TPU kernels: FUSED PDHG primal/dual updates.
+"""Pallas TPU kernels: FUSED PDHG half-steps for DENSE operators.
 
 The unfused PDHG iteration writes two full-length intermediates to HBM per
-step (the gradient ``c + K^T y`` and the pre-projection dual ``y + sigma *
-(K x_bar - q)``).  At PDHG's arithmetic intensity (~2 flop/byte, far below
-the TPU v5e ridge of ~240) every avoided HBM round-trip is pure wall-clock.
+step (the primal gradient and the pre-projection dual).  At PDHG's
+arithmetic intensity (~2 flop/byte, far below the TPU v5e ridge of ~240)
+every avoided HBM round-trip is pure wall-clock.
 
-These kernels keep the matvec partials in VMEM and apply the element-wise
-tail (axpy + projection + extrapolation) in the SAME kernel invocation on
-the final reduction block:
+These kernels fuse each half-step's element-wise tail with the matvec that
+FOLLOWS it, in the same launch, and emit the matvec product as a second
+output — the product the in-loop KKT check in ``core/pdhg.solve_stacked``
+consumes for free:
 
-  fused_primal_step : x_new = clip(x - tau*(c + K^T y), l, u); x_bar = 2*x_new - x
-  fused_dual_step   : y_new = proj_{>=0 on ineq}(y + sigma*(K x_bar - q))
+  fused_forward_step  : x_new = clip(x - tau*(c + kty), l, u);  kx = K x_new
+  fused_backward_step : y_new = proj_{>=0 on ineq}(y + sigma*(2*kx - kx_prev - q))
+                        kty   = K^T y_new
+
+(``kty`` in the forward step is the CARRIED K^T y from the previous
+backward step; the dual extrapolation uses 2*K x_new - K x_prev — linearity
+of K — instead of a second matvec on the extrapolated point.)
 
 Scalars (tau, sigma) ride in SMEM-like (1, 1) blocks so the kernel stays
 shape-polymorphic over the POP batch.
@@ -28,101 +34,107 @@ from jax.experimental.pallas import tpu as pltpu
 from .pdhg_matvec import BLOCK_M, BLOCK_N
 
 
-def _fused_primal_kernel(a_ref, y_ref, x_ref, c_ref, l_ref, u_ref, tau_ref,
-                         xn_ref, xb_ref, acc_ref):
+def _fused_forward_kernel(a_ref, x_ref, c_ref, l_ref, u_ref, kty_ref,
+                          tau_ref, xn_ref, kx_ref, acc_ref):
+    """grid = (k, M/bm, N/bn); contracts over N, finishes on the last block.
+
+    The x_new tail for column block j is (cheaply) recomputed at every row
+    block i — deterministic, so the repeated xn writes all carry the same
+    value — while the fresh x_new block feeds the accumulating matvec
+    without ever leaving VMEM."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tau = tau_ref[0, 0]
+    x_new = jnp.clip(x_ref[0] - tau * (c_ref[0] + kty_ref[0]),
+                     l_ref[0], u_ref[0])
+    xn_ref[0, :] = x_new.astype(xn_ref.dtype)
+    a = a_ref[0]                        # [bm, bn]
+    acc_ref[...] += jax.lax.dot_general(
+        a, x_new[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _finish():
+        kx_ref[0, :] = acc_ref[...].astype(kx_ref.dtype)
+
+
+def _fused_backward_kernel(a_ref, y_ref, q_ref, mask_ref, kxn_ref, kxp_ref,
+                           sig_ref, yn_ref, kty_ref, acc_ref):
     """grid = (k, N/bn, M/bm); contracts over M, finishes on the last block."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    sigma = sig_ref[0, 0]
+    y_new = y_ref[0] + sigma * (2.0 * kxn_ref[0] - kxp_ref[0] - q_ref[0])
+    y_new = jnp.where(mask_ref[0], jnp.maximum(y_new, 0.0), y_new)
+    yn_ref[0, :] = y_new.astype(yn_ref.dtype)
     a = a_ref[0]                        # [bm, bn]
-    y = y_ref[0]                        # [bm]
     acc_ref[...] += jax.lax.dot_general(
-        a, y[:, None], (((0,), (0,)), ((), ())),
+        a, y_new[:, None], (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )[:, 0]
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _finish():
-        tau = tau_ref[0, 0]
-        g = c_ref[0] + acc_ref[...]                     # c + K^T y
-        x = x_ref[0]
-        x_new = jnp.clip(x - tau * g, l_ref[0], u_ref[0])
-        xn_ref[0, :] = x_new.astype(xn_ref.dtype)
-        xb_ref[0, :] = (2.0 * x_new - x).astype(xb_ref.dtype)
-
-
-def _fused_dual_kernel(a_ref, xb_ref, y_ref, q_ref, mask_ref, sig_ref,
-                       yn_ref, acc_ref):
-    """grid = (k, M/bm, N/bn); contracts over N, finishes on the last block."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[0]
-    xb = xb_ref[0]
-    acc_ref[...] += jax.lax.dot_general(
-        a, xb[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[:, 0]
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _finish():
-        sigma = sig_ref[0, 0]
-        y_new = y_ref[0] + sigma * (acc_ref[...] - q_ref[0])
-        y_new = jnp.where(mask_ref[0], jnp.maximum(y_new, 0.0), y_new)
-        yn_ref[0, :] = y_new.astype(yn_ref.dtype)
+        kty_ref[0, :] = acc_ref[...].astype(kty_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
-def fused_primal_step(A, y, x, c, l, u, tau, *,
-                      block_m: int = BLOCK_M, block_n: int = BLOCK_N,
-                      interpret: bool = False):
-    """Returns (x_new, x_bar).  A: [k, M, N]; x/c/l/u: [k, N]; y: [k, M];
-    tau: [k] (per-sub-problem step size — POP sub-problems restart
-    independently, so step sizes diverge across the batch)."""
-    k, M, N = A.shape
-    assert M % block_m == 0 and N % block_n == 0
-    grid = (k, N // block_n, M // block_m)
-    vec_n = pl.BlockSpec((1, block_n), lambda b, j, i: (b, j))
-    out = [jax.ShapeDtypeStruct((k, N), jnp.float32)] * 2
-    return pl.pallas_call(
-        _fused_primal_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_m, block_n), lambda b, j, i: (b, i, j)),
-            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
-            vec_n, vec_n, vec_n, vec_n,
-            pl.BlockSpec((1, 1), lambda b, j, i: (b, 0)),
-        ],
-        out_specs=[vec_n, vec_n],
-        out_shape=out,
-        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
-        interpret=interpret,
-    )(A, y, x, c, l, u, tau[:, None])
-
-
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
-def fused_dual_step(A, x_bar, y, q, sigma, ineq_mask, *,
-                    block_m: int = BLOCK_M, block_n: int = BLOCK_N,
-                    interpret: bool = False):
-    """Returns y_new.  A: [k, M, N]; x_bar: [k, N]; y/q: [k, M];
-    ineq_mask: [k, M] bool; sigma: [k]."""
+def fused_forward_step(A, x, c, l, u, tau, kty, *,
+                       block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                       interpret: bool = False):
+    """Returns (x_new, kx).  A: [k, M, N]; x/c/l/u/kty: [k, N]; tau: [k]
+    (per-sub-problem step size — POP sub-problems restart independently,
+    so step sizes diverge across the batch)."""
     k, M, N = A.shape
     assert M % block_m == 0 and N % block_n == 0
     grid = (k, M // block_m, N // block_n)
+    vec_n = pl.BlockSpec((1, block_n), lambda b, i, j: (b, j))
     vec_m = pl.BlockSpec((1, block_m), lambda b, i, j: (b, i))
+    out = [jax.ShapeDtypeStruct((k, N), jnp.float32),
+           jax.ShapeDtypeStruct((k, M), jnp.float32)]
     return pl.pallas_call(
-        _fused_dual_kernel,
+        _fused_forward_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_m, block_n), lambda b, i, j: (b, i, j)),
-            pl.BlockSpec((1, block_n), lambda b, i, j: (b, j)),
-            vec_m, vec_m, vec_m,
+            vec_n, vec_n, vec_n, vec_n, vec_n,
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
         ],
-        out_specs=vec_m,
-        out_shape=jax.ShapeDtypeStruct((k, M), jnp.float32),
+        out_specs=[vec_n, vec_m],
+        out_shape=out,
         scratch_shapes=[pltpu.VMEM((block_m,), jnp.float32)],
         interpret=interpret,
-    )(A, x_bar, y, q, ineq_mask, sigma[:, None])
+    )(A, x, c, l, u, kty, tau[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def fused_backward_step(A, y, q, sigma, ineq_mask, kx_new, kx_prev, *,
+                        block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                        interpret: bool = False):
+    """Returns (y_new, kty).  A: [k, M, N]; y/q/kx_new/kx_prev: [k, M];
+    ineq_mask: [k, M] bool; sigma: [k]."""
+    k, M, N = A.shape
+    assert M % block_m == 0 and N % block_n == 0
+    grid = (k, N // block_n, M // block_m)
+    vec_m = pl.BlockSpec((1, block_m), lambda b, j, i: (b, i))
+    vec_n = pl.BlockSpec((1, block_n), lambda b, j, i: (b, j))
+    out = [jax.ShapeDtypeStruct((k, M), jnp.float32),
+           jax.ShapeDtypeStruct((k, N), jnp.float32)]
+    return pl.pallas_call(
+        _fused_backward_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_n), lambda b, j, i: (b, i, j)),
+            vec_m, vec_m, vec_m, vec_m, vec_m,
+            pl.BlockSpec((1, 1), lambda b, j, i: (b, 0)),
+        ],
+        out_specs=[vec_m, vec_n],
+        out_shape=out,
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
+        interpret=interpret,
+    )(A, y, q, ineq_mask, kx_new, kx_prev, sigma[:, None])

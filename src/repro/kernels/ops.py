@@ -18,9 +18,20 @@ results back, and (b) platform dispatch.  Every wrapper takes a
 ``"xla"``
     Force the pure-jnp reference (A/B benchmarking escape hatch).
 
-The step-engine in ``core/pdhg.py`` (``fused_dense_engine``) builds on
-these wrappers, so a solver constructed once picks the right kernel per
-platform at trace time.
+Two kernel families back the step engines in ``core/pdhg.py``:
+
+* dense (``fused_forward_step`` / ``fused_backward_step`` +
+  ``bmatvec``/``bmatvec_t``) — blocked matmul kernels over an explicit
+  [k, M, N] constraint matrix (``kernels/fused_pdhg_step.py``);
+* structured (``structured_forward_step`` / ``structured_backward_step`` +
+  ``smatvec``/``smatvec_t``) — gather/segment-reduce kernels over ELL
+  index metadata (``core/pdhg.StructuredOperator``,
+  ``kernels/structured_pdhg_step.py``).  Off-TPU the reference path is
+  pure ``take_along_axis`` gathers — no scatter, unlike the
+  ``segment_sum`` scatter-adds in typical domain matvecs.
+
+A solver constructed once picks the right kernel per platform at trace
+time.
 """
 
 from __future__ import annotations
@@ -30,9 +41,13 @@ import jax.numpy as jnp
 
 from . import pdhg_matvec as _mv
 from . import fused_pdhg_step as _fused
+from . import structured_pdhg_step as _structured
 from . import ref as _ref
 
 _MODES = (None, "auto", "pallas", "interpret", "xla")
+
+# lane-axis multiple for the structured kernels' full-lane blocks
+STRUCT_ALIGN = 128
 
 
 def _resolve_mode(backend: str | None) -> str:
@@ -83,37 +98,112 @@ def bmatvec_t(A, y, *, backend: str | None = None,
     return x[:, :N]
 
 
-def fused_primal_step(A, y, x, c, l, u, tau, *, backend: str | None = None,
-                      block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
-    """(x_new, x_bar) — fused clip(x - tau(c + A^T y)) + extrapolation.
+def fused_forward_step(A, x, c, l, u, tau, kty, *, backend: str | None = None,
+                       block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
+    """(x_new, kx) — fused clip(x - tau(c + kty)) + forward matvec.
 
     Padded variables get l = u = 0 blocks (pinned to zero, matching the
     LinearProgram padding contract), so the sliced-back result equals the
     unpadded math exactly."""
     mode = _resolve_mode(backend)
     if mode == "xla":
-        return _ref.fused_primal_step(A, y, x, c, l, u, tau[:, None])
+        return _ref.fused_forward_step(A, x, c, l, u, tau[:, None], kty)
     k, M, N = A.shape
     Ap = _pad_to(_pad_to(A, 1, block_m), 2, block_n)
-    yp = _pad_to(y, 1, block_m)
     pad_vec = lambda v: _pad_to(v, 1, block_n)
-    xn, xb = _fused.fused_primal_step(
-        Ap, yp, pad_vec(x), pad_vec(c), pad_vec(l), pad_vec(u), tau,
+    xn, kx = _fused.fused_forward_step(
+        Ap, pad_vec(x), pad_vec(c), pad_vec(l), pad_vec(u), tau, pad_vec(kty),
         block_m=block_m, block_n=block_n, interpret=mode == "interpret")
-    return xn[:, :N], xb[:, :N]
+    return xn[:, :N], kx[:, :M]
 
 
-def fused_dual_step(A, x_bar, y, q, sigma, ineq_mask, *,
-                    backend: str | None = None,
-                    block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
-    """y_new — fused proj(y + sigma(A x_bar - q))."""
+def fused_backward_step(A, y, q, sigma, ineq_mask, kx_new, kx_prev, *,
+                        backend: str | None = None,
+                        block_m: int = _mv.BLOCK_M, block_n: int = _mv.BLOCK_N):
+    """(y_new, kty) — fused proj(y + sigma(2*kx_new - kx_prev - q)) +
+    adjoint matvec."""
     mode = _resolve_mode(backend)
     if mode == "xla":
-        return _ref.fused_dual_step(A, x_bar, y, q, sigma[:, None], ineq_mask)
+        return _ref.fused_backward_step(A, y, q, sigma[:, None], ineq_mask,
+                                        kx_new, kx_prev)
     k, M, N = A.shape
     Ap = _pad_to(_pad_to(A, 1, block_m), 2, block_n)
-    yn = _fused.fused_dual_step(
-        Ap, _pad_to(x_bar, 1, block_n), _pad_to(y, 1, block_m),
-        _pad_to(q, 1, block_m), sigma, _pad_to(ineq_mask, 1, block_m),
+    pad_vec = lambda v: _pad_to(v, 1, block_m)
+    yn, kty = _fused.fused_backward_step(
+        Ap, pad_vec(y), pad_vec(q), sigma, pad_vec(ineq_mask),
+        pad_vec(kx_new), pad_vec(kx_prev),
         block_m=block_m, block_n=block_n, interpret=mode == "interpret")
-    return yn[:, :M]
+    return yn[:, :M], kty[:, :N]
+
+
+# --------------------------------------------------------------------------
+# structured (ELL gather/segment-reduce) family — ``s`` is a
+# ``core/pdhg.StructuredOperator`` with batched [k, W, {M|N}] leaves
+# --------------------------------------------------------------------------
+
+def smatvec(s, x):
+    """kx = K x through the row-side gather layout.  Pure gather-reduce —
+    the XLA form is the fast path on every platform for the out-of-loop
+    uses (power iteration, equilibration probes, final KKT report); only
+    the inner-loop half-steps get dedicated Pallas kernels."""
+    return _ref.smatvec(s, x)
+
+
+def smatvec_t(s, y):
+    """kty = K^T y through the column-side gather layout."""
+    return _ref.smatvec_t(s, y)
+
+
+def _pad_row_side(s):
+    """Pad the row-side leaves' lane axes to STRUCT_ALIGN multiples for
+    the full-lane Pallas blocks (padded bucket columns feed row 0 with
+    val 0 — exact no-ops)."""
+    return s._replace(
+        row_idx=_pad_to(s.row_idx, 2, STRUCT_ALIGN),
+        row_val=_pad_to(s.row_val, 2, STRUCT_ALIGN),
+        wrow_idx=_pad_to(s.wrow_idx, 2, STRUCT_ALIGN),
+        wrow_val=_pad_to(s.wrow_val, 2, STRUCT_ALIGN),
+        wrow_ids=_pad_to(s.wrow_ids, 1, STRUCT_ALIGN))
+
+
+def _pad_col_side(s):
+    return s._replace(
+        col_idx=_pad_to(s.col_idx, 2, STRUCT_ALIGN),
+        col_val=_pad_to(s.col_val, 2, STRUCT_ALIGN),
+        wcol_idx=_pad_to(s.wcol_idx, 2, STRUCT_ALIGN),
+        wcol_val=_pad_to(s.wcol_val, 2, STRUCT_ALIGN),
+        wcol_ids=_pad_to(s.wcol_ids, 1, STRUCT_ALIGN))
+
+
+def structured_forward_step(s, x, c, l, u, tau, kty, *,
+                            backend: str | None = None):
+    """(x_new, kx) for a structured operator: one gather/segment-reduce
+    launch for the whole k-stack (Pallas on TPU/interpret, XLA reference
+    elsewhere)."""
+    mode = _resolve_mode(backend)
+    if mode == "xla":
+        return _ref.structured_forward_step(s, x, c, l, u, tau[:, None], kty)
+    M = s.row_idx.shape[-1]
+    N = x.shape[1]
+    pad_vec = lambda v: _pad_to(v, 1, STRUCT_ALIGN)
+    xn, kx = _structured.structured_forward_step(
+        _pad_row_side(s), pad_vec(x), pad_vec(c), pad_vec(l), pad_vec(u),
+        tau, pad_vec(kty), interpret=mode == "interpret")
+    return xn[:, :N], kx[:, :M]
+
+
+def structured_backward_step(s, y, q, sigma, ineq_mask, kx_new, kx_prev, *,
+                             backend: str | None = None):
+    """(y_new, kty) for a structured operator."""
+    mode = _resolve_mode(backend)
+    if mode == "xla":
+        return _ref.structured_backward_step(s, y, q, sigma[:, None],
+                                             ineq_mask, kx_new, kx_prev)
+    N = s.col_idx.shape[-1]
+    M = y.shape[1]
+    pad_vec = lambda v: _pad_to(v, 1, STRUCT_ALIGN)
+    yn, kty = _structured.structured_backward_step(
+        _pad_col_side(s), pad_vec(y), pad_vec(q), pad_vec(ineq_mask),
+        pad_vec(kx_new), pad_vec(kx_prev), sigma,
+        interpret=mode == "interpret")
+    return yn[:, :M], kty[:, :N]

@@ -2,7 +2,10 @@
 
 Each function is the semantic ground truth; ``tests/test_kernels.py`` sweeps
 shapes/dtypes and asserts the Pallas implementations (interpret mode on CPU,
-compiled on TPU) match these to tolerance.
+compiled on TPU) match these to tolerance.  Off-TPU these ARE the dispatch
+targets (``ops.py``), so they are written to be XLA-friendly: the
+structured paths use ``take_along_axis`` gathers and axis reductions — no
+scatters anywhere.
 """
 
 from __future__ import annotations
@@ -22,26 +25,78 @@ def bmatvec_t(A: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
                       preferred_element_type=jnp.float32)
 
 
-def fused_primal_step(A, y, x, c, l, u, tau):
-    """PDHG primal update + extrapolation:
+def _bgather(v: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """v[k, n] gathered per lane by idx [k, ...] -> [k, ...]."""
+    k = idx.shape[0]
+    return jnp.take_along_axis(v, idx.reshape(k, -1), axis=1).reshape(idx.shape)
 
-        g     = c + A^T y
-        x_new = clip(x - tau * g, l, u)
-        x_bar = 2 * x_new - x
 
-    Returns (x_new, x_bar).  The Pallas version fuses the A^T matvec with
-    the element-wise tail so the gradient never round-trips HBM.
+def _gather_side(idx, val, widx, wval, wids, v, n_out):
+    """One direction of the two-bucket ELL matvec (``K x`` through the row
+    side, ``K^T y`` through the column side):
+
+        out = sum_w val[:, w, :] * v[idx[:, w, :]]              (narrow)
+        out += scatter(wids, sum_w wval[:, w, :] * v[widx[:, w, :]])
+
+    All gathers; the wide-bucket results land via a one-hot accumulation
+    (bucket ids are distinct, so order never matters).  Padding entries
+    (idx 0, val 0) and empty buckets contribute exact zeros.
     """
-    g = c + bmatvec_t(A, y)
-    x_new = jnp.clip(x - tau * g, l, u)
-    return x_new, 2.0 * x_new - x
+    out = jnp.sum(val * _bgather(v, idx), axis=-2)           # [k, n_out]
+    wide = jnp.sum(wval * _bgather(v, widx), axis=-2)        # [k, D]
+    onehot = (wids[:, :, None] == jnp.arange(n_out)[None, None, :])
+    return out + jnp.einsum("kd,kdm->km", wide,
+                            onehot.astype(wide.dtype))
 
 
-def fused_dual_step(A, x_bar, y, q, sigma, ineq_mask):
-    """PDHG dual update:
+def smatvec(s, x):
+    """kx[k, m] = (K x) through the row-side gather layout of a
+    ``core/pdhg.StructuredOperator`` (padding entries carry val 0)."""
+    return _gather_side(s.row_idx, s.row_val, s.wrow_idx, s.wrow_val,
+                        s.wrow_ids, x, s.row_idx.shape[-1])
 
-        y_new = y + sigma * (A x_bar - q)
-        y_new = max(y_new, 0) where ineq_mask  (inequality duals)
+
+def smatvec_t(s, y):
+    """kty[k, n] = (K^T y) through the column-side gather layout."""
+    return _gather_side(s.col_idx, s.col_val, s.wcol_idx, s.wcol_val,
+                        s.wcol_ids, y, s.col_idx.shape[-1])
+
+
+def fused_forward_step(A, x, c, l, u, tau, kty):
+    """PDHG primal half-step + forward product:
+
+        x_new = clip(x - tau * (c + kty), l, u)       (kty = carried K^T y)
+        kx    = A @ x_new
+
+    Returns (x_new, kx).  The Pallas version fuses the tail with the
+    matvec so x_new feeds the product without an HBM round-trip.
     """
-    y_new = y + sigma * (bmatvec(A, x_bar) - q)
-    return jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+    x_new = jnp.clip(x - tau * (c + kty), l, u)
+    return x_new, bmatvec(A, x_new)
+
+
+def fused_backward_step(A, y, q, sigma, ineq_mask, kx_new, kx_prev):
+    """PDHG dual half-step + adjoint product:
+
+        y_new = y + sigma * (2*kx_new - kx_prev - q)   (K x_bar by linearity)
+        y_new = max(y_new, 0) where ineq_mask          (inequality duals)
+        kty   = A^T @ y_new
+
+    Returns (y_new, kty).
+    """
+    y_new = y + sigma * (2.0 * kx_new - kx_prev - q)
+    y_new = jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+    return y_new, bmatvec_t(A, y_new)
+
+
+def structured_forward_step(s, x, c, l, u, tau, kty):
+    """Structured-operator forward half-step (ELL gather-reduce matvec)."""
+    x_new = jnp.clip(x - tau * (c + kty), l, u)
+    return x_new, smatvec(s, x_new)
+
+
+def structured_backward_step(s, y, q, sigma, ineq_mask, kx_new, kx_prev):
+    """Structured-operator backward half-step."""
+    y_new = y + sigma * (2.0 * kx_new - kx_prev - q)
+    y_new = jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+    return y_new, smatvec_t(s, y_new)

@@ -1,0 +1,144 @@
+"""Pallas TPU kernels: FUSED PDHG half-steps for STRUCTURED operators.
+
+The structured LPs (Gavel per-job rows, traffic per-commodity path sums,
+load-balancing server groups) apply K through segment-sums and gathers, not
+dense matmuls.  In the two-bucket ELL index form
+(``core/pdhg.StructuredOperator``) both matvec directions become *gather +
+multiply + reduce over the nnz axis* — no scatter anywhere, because the
+transpose layout is precomputed at build time and the few wide segments
+(worker-cap rows, hot edges, per-server load rows) live in their own
+compact bucket whose results are folded back with a one-hot accumulation.
+These kernels run one half-step for the WHOLE stacked k-lane batch per
+launch, with the element-wise tail (axpy + projection) fused in front of
+the gathers so the updated iterate never round-trips HBM between the tail
+and the matvec that consumes it:
+
+  structured_forward_step :
+      x_new = clip(x - tau*(c + kty), l, u)           (kty = carried K^T y)
+      kx    = narrow_rows(x_new) + onehot(wrow_ids) . wide_rows(x_new)
+  structured_backward_step:
+      y_new = proj_{>=0 on ineq}(y + sigma*(2*kx - kx_prev - q))
+      kty   = narrow_cols(y_new) + onehot(wcol_ids) . wide_cols(y_new)
+
+Grid is ``(k,)``: each program owns one lane, whose vectors live entirely
+in VMEM (POP sub-problems are small by construction — the k^2 variable
+reduction is the paper's point — so a lane's [N] + [W, M] blocks fit
+comfortably; the FULL unpartitioned problem at paper scale would not, and
+takes the XLA reference path via ``kernels/ops.py`` dispatch instead).
+The nnz axis rides the sublanes (arrays are [W, M] nnz-major) so the
+reduce is a sublane reduction and rows/cols stay on the 128-wide lane
+axis.  Scalars (tau, sigma) ride in (1, 1) blocks so the kernel stays
+shape-polymorphic over the POP batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_side(idx, val, widx, wval, wids, v, n_out):
+    """One matvec direction from VMEM-resident blocks: narrow ELL
+    gather-reduce + wide-bucket gather-reduce folded in via one-hot
+    (bucket ids are distinct; padded bucket columns feed id 0 with 0.0)."""
+    out = jnp.sum(val * jnp.take(v, idx, axis=0), axis=0)       # [n_out]
+    wide = jnp.sum(wval * jnp.take(v, widx, axis=0), axis=0)    # [D]
+    onehot = (wids[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (wids.shape[0], n_out),
+                                          1))
+    return out + jnp.sum(wide[:, None] * onehot.astype(wide.dtype), axis=0)
+
+
+def _forward_kernel(ri_ref, rv_ref, wri_ref, wrv_ref, wrids_ref,
+                    x_ref, c_ref, l_ref, u_ref, kty_ref, tau_ref,
+                    xn_ref, kx_ref):
+    """grid = (k,): one lane per program, everything VMEM-resident."""
+    tau = tau_ref[0, 0]
+    x_new = jnp.clip(x_ref[0] - tau * (c_ref[0] + kty_ref[0]),
+                     l_ref[0], u_ref[0])
+    xn_ref[0, :] = x_new.astype(xn_ref.dtype)
+    kx = _gather_side(ri_ref[0], rv_ref[0], wri_ref[0], wrv_ref[0],
+                      wrids_ref[0], x_new, kx_ref.shape[-1])
+    kx_ref[0, :] = kx.astype(kx_ref.dtype)
+
+
+def _backward_kernel(ci_ref, cv_ref, wci_ref, wcv_ref, wcids_ref,
+                     y_ref, q_ref, mask_ref, kxn_ref, kxp_ref, sig_ref,
+                     yn_ref, kty_ref):
+    """grid = (k,): dual tail + adjoint gather-reduce."""
+    sigma = sig_ref[0, 0]
+    y_new = y_ref[0] + sigma * (2.0 * kxn_ref[0] - kxp_ref[0] - q_ref[0])
+    y_new = jnp.where(mask_ref[0], jnp.maximum(y_new, 0.0), y_new)
+    yn_ref[0, :] = y_new.astype(yn_ref.dtype)
+    kty = _gather_side(ci_ref[0], cv_ref[0], wci_ref[0], wcv_ref[0],
+                       wcids_ref[0], y_new, kty_ref.shape[-1])
+    kty_ref[0, :] = kty.astype(kty_ref.dtype)
+
+
+def _vec(b):
+    """BlockSpec for a per-lane [1, ...] full block."""
+    return pl.BlockSpec(b, lambda i: (i,) + (0,) * (len(b) - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def structured_forward_step(s, x, c, l, u, tau, kty, *,
+                            interpret: bool = False):
+    """Returns (x_new, kx).  ``s`` is a batched StructuredOperator
+    (row-side leaves [k, Wr, M] / [k, Ww, Dr] / [k, Dr]); x/c/l/u/kty:
+    [k, N]; tau: [k] (per-sub-problem step size — POP sub-problems restart
+    independently, so step sizes diverge across the batch)."""
+    k, wr, M = s.row_idx.shape
+    N = x.shape[1]
+    out = [jax.ShapeDtypeStruct((k, N), jnp.float32),
+           jax.ShapeDtypeStruct((k, M), jnp.float32)]
+    return pl.pallas_call(
+        _forward_kernel,
+        grid=(k,),
+        in_specs=[
+            _vec((1,) + s.row_idx.shape[1:]),
+            _vec((1,) + s.row_val.shape[1:]),
+            _vec((1,) + s.wrow_idx.shape[1:]),
+            _vec((1,) + s.wrow_val.shape[1:]),
+            _vec((1,) + s.wrow_ids.shape[1:]),
+            _vec((1, N)), _vec((1, N)), _vec((1, N)), _vec((1, N)),
+            _vec((1, N)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[_vec((1, N)), _vec((1, M))],
+        out_shape=out,
+        interpret=interpret,
+    )(s.row_idx, s.row_val, s.wrow_idx, s.wrow_val, s.wrow_ids,
+      x, c, l, u, kty, tau[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def structured_backward_step(s, y, q, ineq_mask, kx_new, kx_prev, sigma, *,
+                             interpret: bool = False):
+    """Returns (y_new, kty).  ``s`` carries the column-side leaves
+    ([k, Wc, N] / [k, Wv, Dc] / [k, Dc]); y/q/ineq_mask/kx_new/kx_prev:
+    [k, M]; sigma: [k]."""
+    k, wc, N = s.col_idx.shape
+    M = y.shape[1]
+    out = [jax.ShapeDtypeStruct((k, M), jnp.float32),
+           jax.ShapeDtypeStruct((k, N), jnp.float32)]
+    return pl.pallas_call(
+        _backward_kernel,
+        grid=(k,),
+        in_specs=[
+            _vec((1,) + s.col_idx.shape[1:]),
+            _vec((1,) + s.col_val.shape[1:]),
+            _vec((1,) + s.wcol_idx.shape[1:]),
+            _vec((1,) + s.wcol_val.shape[1:]),
+            _vec((1,) + s.wcol_ids.shape[1:]),
+            _vec((1, M)), _vec((1, M)), _vec((1, M)), _vec((1, M)),
+            _vec((1, M)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[_vec((1, M)), _vec((1, N))],
+        out_shape=out,
+        interpret=interpret,
+    )(s.col_idx, s.col_val, s.wcol_idx, s.wcol_val, s.wcol_ids,
+      y, q, ineq_mask, kx_new, kx_prev, sigma[:, None])

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.pdhg import OperatorLP
+from ..core.pdhg import OperatorLP, structured_from_coo
 from ..core.plan import SubLayout
 from ..core.pop import POPProblem
 
@@ -193,6 +193,36 @@ class GavelProblem(POPProblem):
         pairs[dead] = -1
         return np.concatenate([singles, pairs], axis=0)
 
+    def _structured(self, S: np.ndarray, member: np.ndarray, z: np.ndarray,
+                    n_local: int):
+        """ELL index metadata (``core/pdhg.StructuredOperator``) for the
+        singleton-combo operator — what lets ``engine="fused_structured"``
+        run the per-job segment-sums as batched gather/segment-reduce
+        kernels.  Pair combos (space sharing) make the worker rows ~C wide
+        (C ~ n^2/2): genuinely dense-in-X rows where ELL padding loses to
+        the matvec engine, so space-sharing builds skip the metadata."""
+        C, R, _ = S.shape
+        n = n_local
+        mem = np.broadcast_to(member[:, None, :], (C, R, 2))
+        xcol = np.broadcast_to(
+            (np.arange(C)[:, None] * R + np.arange(R)[None, :])[:, :, None],
+            (C, R, 2))
+        valid = mem < n                               # dump slot = n
+        # epigraph rows: +1 on t, -S[c, r, s] on each member's X entries
+        rows = [np.arange(n), mem[valid], n + mem[valid]]
+        cols = [np.full(n, C * R), xcol[valid], xcol[valid]]
+        vals = [np.ones(n), -S[valid], np.ones(int(valid.sum()))]
+        # worker rows: z_c on X[c, r]
+        live = np.broadcast_to((z != 0)[:, None], (C, R))
+        rows.append((2 * n + np.broadcast_to(np.arange(R)[None, :],
+                                             (C, R)))[live])
+        cols.append((np.arange(C)[:, None] * R
+                     + np.arange(R)[None, :])[live])
+        vals.append(np.broadcast_to(z[:, None], (C, R))[live])
+        return structured_from_coo(
+            np.concatenate(rows), np.concatenate(cols), np.concatenate(vals),
+            2 * n + R, C * R + 1)
+
     def _build(self, combos_global: np.ndarray, local_of, n_local: int,
                frac: float, scale_vec: Optional[np.ndarray]) -> OperatorLP:
         wl = self.wl
@@ -217,12 +247,6 @@ class GavelProblem(POPProblem):
         member[is_pair, 1] = local_of(combos_global[is_pair, 1])
         z[valid0] = wl.z[g0][valid0]                      # pairs share workers
 
-        if scale_vec is not None:
-            # replication: scale each member's time budget share instead of
-            # demand (time budget is the per-entity "demand" here) — handled
-            # via per-job time rhs below.
-            pass
-
         n_var = C * R + 1
         c = np.zeros(n_var); c[-1] = -1.0                 # max t
         # secondary: -bonus/n * sum_m rho_m  (keeps max-min primary)
@@ -231,18 +255,25 @@ class GavelProblem(POPProblem):
         u = np.zeros(n_var)
         u[: C * R] = np.repeat(valid0.astype(np.float64), R)
         u[-1] = 10.0
+        # replication (§4.3) scales each replica's time-budget share — time
+        # budget is the per-job "demand" here (padded slots get 0: their
+        # combos are dead, so a zero budget stays trivially feasible)
+        time_rhs = (np.ones(n_local) if scale_vec is None
+                    else np.asarray(scale_vec, np.float64))
         q = np.concatenate([
             np.zeros(n_local),                            # epigraph rows
-            np.ones(n_local),                             # time rows
+            time_rhs,                                     # time rows
             wl.num_workers * frac,                        # worker rows
         ])
         ineq = np.ones(q.shape[0], bool)
         data = (jnp.asarray(S, jnp.float32), jnp.asarray(member, jnp.int32),
                 jnp.asarray(z, jnp.float32), jnp.zeros(n_local + 1, jnp.float32))
+        structured = (None if self.space_sharing
+                      else self._structured(S, member, z, n_local))
         return OperatorLP(
             c=jnp.asarray(c, jnp.float32), q=jnp.asarray(q, jnp.float32),
             l=jnp.asarray(l, jnp.float32), u=jnp.asarray(u, jnp.float32),
-            ineq_mask=jnp.asarray(ineq), data=data)
+            ineq_mask=jnp.asarray(ineq), data=data, structured=structured)
 
     def build_sub(self, idx_row: np.ndarray, frac: float,
                   scale: Optional[np.ndarray] = None) -> OperatorLP:

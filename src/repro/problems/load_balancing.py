@@ -36,7 +36,7 @@ import numpy as np
 from ..core import backends as backends_mod
 from ..core import pdhg
 from ..core import plan as plan_mod
-from ..core.pdhg import OperatorLP
+from ..core.pdhg import OperatorLP, structured_from_coo
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +122,17 @@ def _kt_mv(data, y):
     return g.reshape(-1)
 
 
+# engine="auto" hint consumed by pdhg.select_engine: the distribution
+# matrix X is a DENSE [n, S] block — the per-server rows are matmuls
+# (X.T @ l), not segment-sums — so the gather-ELL fused_structured engine
+# does ~2x the flops of these vmapped matvecs and measures ~2x slower at
+# every size.  The index metadata is still available on demand
+# (_relax_op(structured=True) — what the conformance matrix forces); auto
+# just resolves to the measured winner.
+_k_mv.preferred_engine = "matvec"
+_kt_mv.preferred_engine = "matvec"
+
+
 @dataclasses.dataclass
 class LBResult:
     placement: np.ndarray
@@ -143,8 +154,15 @@ class LoadBalanceProblem:
     def _relax_op(self, shards: np.ndarray, servers: np.ndarray,
                   n_pad: int, s_pad: int,
                   L_target: Optional[float] = None,
-                  eps_eff: Optional[float] = None) -> OperatorLP:
-        """LP relaxation over (shard subset x server subset), padded."""
+                  eps_eff: Optional[float] = None,
+                  structured: bool = False) -> OperatorLP:
+        """LP relaxation over (shard subset x server subset), padded.
+
+        ``structured=True`` additionally attaches the ELL index metadata —
+        only wanted when a caller will FORCE ``engine="fused_structured"``
+        (the conformance matrix does); the auto path never reads it here
+        (``_k_mv.preferred_engine``), so the online re-balance hot path
+        skips the O(nnz log nnz) packing + device upload by default."""
         wl = self.wl
         n_r, s_r = shards.shape[0], servers.shape[0]
         l = np.zeros(n_pad); l[:n_r] = wl.load[shards]
@@ -172,6 +190,25 @@ class LoadBalanceProblem:
         ineq = np.concatenate([np.ones(3 * s_pad, bool), np.zeros(n_pad, bool)])
         u = np.zeros((n_pad, s_pad))
         u[:n_r, :s_r] = 1.0
+
+        structured_op = None
+        if structured:
+            # ELL index metadata (engine="fused_structured"): X[i, j] feeds
+            # the three per-server rows of j (weights l_i / -l_i / m_i) and
+            # shard i's assign row; load-row width is the lane's shard count
+            # (the server-group split keeps lanes small — the POP effect).
+            ii, jj = np.meshgrid(np.arange(n_pad), np.arange(s_pad),
+                                 indexing="ij")
+            ii, jj = ii.ravel(), jj.ravel()
+            xcol = ii * s_pad + jj
+            rows = np.concatenate([jj, s_pad + jj, 2 * s_pad + jj,
+                                   3 * s_pad + ii])
+            cols = np.concatenate([xcol] * 4)
+            vals = np.concatenate([l[ii], -l[ii], m[ii],
+                                   np.ones(ii.shape[0])])
+            structured_op = structured_from_coo(rows, cols, vals,
+                                                3 * s_pad + n_pad,
+                                                n_pad * s_pad)
         return OperatorLP(
             c=jnp.asarray(cost.reshape(-1), jnp.float32),
             q=jnp.asarray(q, jnp.float32),
@@ -180,6 +217,7 @@ class LoadBalanceProblem:
             ineq_mask=jnp.asarray(ineq),
             data=(jnp.asarray(l, jnp.float32), jnp.asarray(m, jnp.float32),
                   jnp.asarray(cost, jnp.float32)),
+            structured=structured_op,
         )
 
     # ------------------------------------------------------------- rounding --
@@ -442,7 +480,7 @@ class LoadBalanceProblem:
             sub_eps.append(float(np.clip(0.95 * eps - dev, 0.25 * eps, eps)))
         ops = [self._relax_op(s, g, n_pad, s_pad, L_target=L, eps_eff=e)
                for s, g, e in zip(shard_sets, groups, sub_eps)]
-        batched = jax.tree.map(lambda *xs: jnp.stack(xs), *ops)
+        batched = pdhg.stack_ops(ops)
         warm_xy = None
         warm_fraction = None
         if warm_start and state is not None:

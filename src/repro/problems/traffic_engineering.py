@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.pdhg import OperatorLP
+from ..core.pdhg import OperatorLP, structured_from_coo
 from ..core.plan import SubLayout
 from ..core.pop import POPProblem
 
@@ -227,10 +227,27 @@ class TrafficProblem(POPProblem):
         l = np.zeros(n_var)
         q = np.concatenate([dem, self.topo.capacity * frac])
         data = (jnp.asarray(pe, jnp.int32), jnp.zeros(E + 1, jnp.float32))
+
+        # ELL index metadata: demand rows sum each commodity's P flows,
+        # edge rows sum every (commodity, path) crossing the edge — the
+        # per-commodity path segment-sums as explicit gathers, unlocking
+        # engine="fused_structured".  Edge-row width is the lane's worst
+        # path congestion (data-dependent; stack_ops pads across lanes).
+        fcol = np.broadcast_to(
+            (np.arange(n_local)[:, None] * P + np.arange(P)[None, :])[:, :, None],
+            pe.shape)
+        on_edge = pe >= 0
+        rows = np.concatenate([np.repeat(np.arange(n_local), P),
+                               n_local + pe[on_edge]])
+        cols = np.concatenate([np.arange(n_local * P), fcol[on_edge]])
+        vals = np.ones(rows.shape[0])
+        structured = structured_from_coo(rows, cols, vals,
+                                         n_local + E, n_var)
         return OperatorLP(
             c=jnp.asarray(c, jnp.float32), q=jnp.asarray(q, jnp.float32),
             l=jnp.asarray(l, jnp.float32), u=jnp.asarray(u, jnp.float32),
-            ineq_mask=jnp.ones(q.shape[0], bool), data=data)
+            ineq_mask=jnp.ones(q.shape[0], bool), data=data,
+            structured=structured)
 
     # --- solution handling --------------------------------------------------------
     def extract(self, op: OperatorLP, x: np.ndarray, idx_row: np.ndarray):

@@ -1,0 +1,260 @@
+"""Cross-engine conformance matrix: the acceptance gate for the step-engine
+substrate.
+
+Every cell of (engine x map backend x paper domain) must produce the same
+trajectory to 1e-5 on a FIXED iteration budget (tolerances 0 so no lane
+terminates early — this compares trajectories, not "two different converged
+points").  The three engines run the SAME mathematical operator through
+three executions:
+
+  * ``matvec``           — the domain's own K_mv/KT_mv callables, vmapped
+  * ``fused_structured`` — the ELL index metadata the domain attaches
+                           (``StructuredOperator``), via the batched
+                           gather/segment-reduce kernels
+  * ``fused``            — the densified K (``structured_to_dense``)
+                           through the blocked matmul kernels
+
+so a pass pins the index metadata against the domain callables AND against
+an explicit dense materialisation, across every execution backend
+(ragged/padded k included) and for warm-started runs.
+
+Also home to the in-loop-KKT regression gate: ``kkt="inloop"`` (free
+convergence checks from carried products) must match ``kkt="standalone"``
+(fresh operator passes per check) BIT-level on the CPU/XLA path — proof
+the carried products never drift through restarts, lane freezing, or warm
+starts.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _subproc import repro_env
+from repro.core import backends as backends_mod
+from repro.core import pdhg, pop
+from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
+from repro.problems.load_balancing import (LoadBalanceProblem,
+                                           make_shard_workload,
+                                           _k_mv as lb_k_mv,
+                                           _kt_mv as lb_kt_mv)
+from repro.problems.traffic_engineering import (TrafficProblem, k_shortest_paths,
+                                                make_demands, make_topology)
+
+# fixed-budget settings: tol 0 => every lane runs max_iters exactly
+FIXED_KW = dict(max_iters=120, check_every=40, tol_primal=0.0, tol_gap=0.0)
+
+ENGINES = ("matvec", "fused", "fused_structured")
+BACKENDS = sorted(backends_mod.MAP_BACKENDS)
+DOMAINS = ("cluster", "traffic", "balance")
+
+
+def _cluster_case():
+    # 16 jobs over k=3 lanes: ragged slot padding (6/5/5)
+    wl = make_cluster_workload(16, num_workers=(6, 6, 6), seed=3)
+    prob = GavelProblem(wl, space_sharing=False)
+    p = pop.plan(prob, 3, strategy="stratified")
+    return pop.build(prob, p), prob.K_mv, prob.KT_mv
+
+
+def _traffic_case():
+    topo = make_topology(24, 48, seed=1)
+    pairs, dem = make_demands(topo, 14, seed=1)
+    pe = k_shortest_paths(topo, pairs, n_paths=3, max_len=12, seed=1)
+    prob = TrafficProblem(topo, pairs, dem, pe)
+    p = pop.plan(prob, 3, strategy="stratified")
+    return pop.build(prob, p), prob.K_mv, prob.KT_mv
+
+
+def _balance_case():
+    # the LB domain split: server groups, shards follow their server —
+    # ragged shard counts per lane, padded to n_pad
+    wl = make_shard_workload(18, 6, seed=2)
+    prob = LoadBalanceProblem(wl)
+    groups = [np.arange(6)[i::3] for i in range(3)]
+    shard_sets = [np.flatnonzero(np.isin(wl.placement, g)) for g in groups]
+    n_pad = max(len(s) for s in shard_sets)
+    ops = pdhg.stack_ops([prob._relax_op(s, g, n_pad, 2, structured=True)
+                          for s, g in zip(shard_sets, groups)])
+    return ops, lb_k_mv, lb_kt_mv
+
+
+_CASES = {"cluster": _cluster_case, "traffic": _traffic_case,
+          "balance": _balance_case}
+
+
+@pytest.fixture(scope="module")
+def cells():
+    """domain -> (structured ops, densified ops, K_mv, KT_mv, reference)."""
+    out = {}
+    for name, build in _CASES.items():
+        ops, k_mv, kt_mv = build()
+        assert ops.structured is not None, name
+        dense = ops._replace(data=(pdhg.structured_to_dense(ops.structured),),
+                             structured=None)
+        ref = backends_mod.solve_map(ops, k_mv, kt_mv, FIXED_KW,
+                                     backend="vmap", engine="matvec")
+        out[name] = (ops, dense, k_mv, kt_mv, ref)
+    return out
+
+
+def _engine_inputs(cells, domain, engine):
+    ops, dense, k_mv, kt_mv, ref = cells[domain]
+    if engine == "fused":
+        return dense, pdhg.dense_K_mv, pdhg.dense_KT_mv, ref
+    return ops, k_mv, kt_mv, ref
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("domain", DOMAINS)
+def test_conformance_matrix(domain, engine, backend, cells):
+    """ISSUE acceptance: every engine x backend x domain cell agrees with
+    the matvec/vmap reference to 1e-5 at a fixed budget.  chunked_vmap
+    runs chunk=2 so k=3 exercises the ragged-k padding path."""
+    ops, k_mv, kt_mv, ref = _engine_inputs(cells, domain, engine)
+    opts = {"chunk": 2} if backend == "chunked_vmap" else {}
+    r = backends_mod.solve_map(ops, k_mv, kt_mv, FIXED_KW,
+                               backend=backend, engine=engine, **opts)
+    np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r.y), np.asarray(ref.y),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r.iterations),
+                                  np.asarray(ref.iterations))
+
+
+@pytest.mark.parametrize("domain", DOMAINS)
+def test_conformance_warm_started(domain, cells):
+    """Warm-started runs stay in conformance: every engine seeded with the
+    same previous iterates produces the same (fixed-budget) trajectory."""
+    ops, _, k_mv, kt_mv, _ = cells[domain]
+    seed = backends_mod.solve_map(ops, k_mv, kt_mv,
+                                  dict(FIXED_KW, max_iters=80),
+                                  backend="vmap", engine="matvec")
+    warm = (seed.x, seed.y)
+    results = {}
+    for engine in ENGINES:
+        e_ops, e_km, e_ktm, _ = _engine_inputs(cells, domain, engine)
+        results[engine] = backends_mod.solve_map(
+            e_ops, e_km, e_ktm, FIXED_KW, backend="vmap", engine=engine,
+            warm=warm)
+    for engine in ("fused", "fused_structured"):
+        np.testing.assert_allclose(np.asarray(results[engine].x),
+                                   np.asarray(results["matvec"].x),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(results[engine].y),
+                                   np.asarray(results["matvec"].y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_auto_picks_structured_when_metadata_present(cells):
+    ops, _, _, _, _ = cells["cluster"]
+    assert pdhg.select_engine(ops, GavelProblem.K_mv,
+                              GavelProblem.KT_mv) == "fused_structured"
+    bare = ops._replace(structured=None)
+    assert pdhg.select_engine(bare, GavelProblem.K_mv,
+                              GavelProblem.KT_mv) == "matvec"
+    with pytest.raises(ValueError, match="fused_structured"):
+        pdhg.resolve_engine("fused_structured", bare)
+
+
+def test_conformance_multi_device_subprocess():
+    """Ragged k on a real multi-device mesh: k=3 on a forced 4-device host
+    pads to 4 lanes in shard_map/pmap; the structured engine must ride the
+    padded batch unchanged (index arrays replicate like any other leaf)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, numpy as np
+        assert jax.device_count() == 4, jax.device_count()
+        from repro.core import backends as backends_mod, pop
+        from repro.problems.cluster_scheduling import (GavelProblem,
+                                                       make_cluster_workload)
+        wl = make_cluster_workload(16, num_workers=(6, 6, 6), seed=3)
+        prob = GavelProblem(wl, space_sharing=False)
+        p = pop.plan(prob, 3, strategy="stratified")
+        ops = pop.build(prob, p)
+        kw = dict(max_iters=120, check_every=40, tol_primal=0.0, tol_gap=0.0)
+        ref = backends_mod.solve_map(ops, prob.K_mv, prob.KT_mv, kw,
+                                     backend="vmap", engine="matvec")
+        for backend in ("shard_map", "pmap"):
+            for engine in ("matvec", "fused_structured"):
+                r = backends_mod.solve_map(ops, prob.K_mv, prob.KT_mv, kw,
+                                           backend=backend, engine=engine)
+                np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                                           rtol=1e-5, atol=1e-5)
+        print("multi-device conformance ok")
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600, env=repro_env())
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "multi-device conformance ok" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# in-loop KKT regression gate (ISSUE satellite): fused-KKT == standalone-KKT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_inloop_kkt_matches_standalone_bitwise(engine, cells):
+    """The in-loop KKT path (convergence checks from carried products, zero
+    extra operator passes) must report the same residuals, iteration counts
+    and restart points as the standalone reference (fresh K/K^T passes per
+    check) — bit-level on the CPU/XLA path.  Real tolerances + small
+    check_every so early termination, lane freezing and adaptive restarts
+    are all exercised."""
+    ops, k_mv, kt_mv, _ = _engine_inputs(cells, "cluster", engine)
+    kw = dict(max_iters=2_000, check_every=20, tol_primal=1e-4, tol_gap=1e-4)
+    r_in = pdhg.solve_stacked(ops, engine=engine, K_mv=k_mv, KT_mv=kt_mv,
+                              kkt="inloop", **kw)
+    r_ref = pdhg.solve_stacked(ops, engine=engine, K_mv=k_mv, KT_mv=kt_mv,
+                               kkt="standalone", **kw)
+    assert bool(np.asarray(r_in.converged).all())
+    exact = jax.default_backend() != "tpu"
+    cmp = (np.testing.assert_array_equal if exact
+           else lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-6,
+                                                        atol=1e-6))
+    cmp(np.asarray(r_in.x), np.asarray(r_ref.x))
+    cmp(np.asarray(r_in.y), np.asarray(r_ref.y))
+    cmp(np.asarray(r_in.primal_res), np.asarray(r_ref.primal_res))
+    cmp(np.asarray(r_in.gap), np.asarray(r_ref.gap))
+    np.testing.assert_array_equal(np.asarray(r_in.iterations),
+                                  np.asarray(r_ref.iterations))
+    np.testing.assert_array_equal(np.asarray(r_in.n_restarts),
+                                  np.asarray(r_ref.n_restarts))
+
+
+def test_inloop_kkt_warm_masked_bitwise(cells):
+    """The carried-product bookkeeping survives masked warm starts (the
+    churn path): in-loop == standalone bit-level there too."""
+    ops, k_mv, kt_mv, ref = cells["cluster"][0], cells["cluster"][2], \
+        cells["cluster"][3], cells["cluster"][4]
+    rng = np.random.default_rng(0)
+    wx = jnp.asarray(rng.uniform(0, 1, np.asarray(ops.c).shape), jnp.float32)
+    wy = jnp.asarray(rng.uniform(0, 1, np.asarray(ops.q).shape), jnp.float32)
+    mask = jnp.asarray([True, False, True])
+    kw = dict(max_iters=1_000, check_every=20, tol_primal=1e-4, tol_gap=1e-4)
+    r_in = pdhg.solve_stacked(ops, engine="fused_structured", warm_x=wx,
+                              warm_y=wy, warm_mask=mask, kkt="inloop", **kw)
+    r_ref = pdhg.solve_stacked(ops, engine="fused_structured", warm_x=wx,
+                               warm_y=wy, warm_mask=mask, kkt="standalone",
+                               **kw)
+    if jax.default_backend() != "tpu":
+        np.testing.assert_array_equal(np.asarray(r_in.x), np.asarray(r_ref.x))
+        np.testing.assert_array_equal(np.asarray(r_in.primal_res),
+                                      np.asarray(r_ref.primal_res))
+    np.testing.assert_array_equal(np.asarray(r_in.iterations),
+                                  np.asarray(r_ref.iterations))
+    np.testing.assert_array_equal(np.asarray(r_in.n_restarts),
+                                  np.asarray(r_ref.n_restarts))
+
+
+def test_unknown_kkt_mode_rejected():
+    ops, k_mv, kt_mv = _cluster_case()
+    with pytest.raises(ValueError, match="kkt mode"):
+        pdhg.solve_stacked(ops, engine="matvec", kkt="telepathy")

@@ -60,33 +60,118 @@ def test_bmatvec_t_matches_ref(shape, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("shape", SHAPES)
-def test_fused_primal_step_matches_ref(shape):
-    rng = np.random.default_rng(1)
+def _primal_operands(shape, seed=1):
+    rng = np.random.default_rng(seed)
     k, M, N = shape
-    A, x, y = _mk(shape, jnp.float32, seed=1)
     x = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
     c = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
     l = jnp.asarray(rng.normal(size=(k, N)) - 2.0, jnp.float32)
     u = l + jnp.asarray(rng.uniform(0.5, 3.0, (k, N)), jnp.float32)
     tau = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
-    xn, xb = ops.fused_primal_step(A, y, x, c, l, u, tau, backend=PALLAS)
-    rn, rb = ref.fused_primal_step(A, y, x, c, l, u, tau[:, None])
-    np.testing.assert_allclose(np.asarray(xn), np.asarray(rn), rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(xb), np.asarray(rb), rtol=1e-5, atol=1e-5)
+    kty = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
+    return x, c, l, u, tau, kty
 
 
-@pytest.mark.parametrize("shape", SHAPES)
-def test_fused_dual_step_matches_ref(shape):
-    rng = np.random.default_rng(2)
+def _dual_operands(shape, seed=2):
+    rng = np.random.default_rng(seed)
     k, M, N = shape
-    A, x, y = _mk(shape, jnp.float32, seed=2)
+    y = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
     q = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
     sigma = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
     mask = jnp.asarray(rng.random((k, M)) < 0.6)
-    yn = ops.fused_dual_step(A, x, y, q, sigma, mask, backend=PALLAS)
-    rn = ref.fused_dual_step(A, x, y, q, sigma[:, None], mask)
+    kxn = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
+    kxp = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
+    return y, q, sigma, mask, kxn, kxp
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_forward_step_matches_ref(shape):
+    A, _, _ = _mk(shape, jnp.float32, seed=1)
+    x, c, l, u, tau, kty = _primal_operands(shape)
+    xn, kx = ops.fused_forward_step(A, x, c, l, u, tau, kty, backend=PALLAS)
+    rn, rkx = ref.fused_forward_step(A, x, c, l, u, tau[:, None], kty)
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(rn), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kx), np.asarray(rkx), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_backward_step_matches_ref(shape):
+    A, _, _ = _mk(shape, jnp.float32, seed=2)
+    y, q, sigma, mask, kxn, kxp = _dual_operands(shape)
+    yn, kty = ops.fused_backward_step(A, y, q, sigma, mask, kxn, kxp,
+                                      backend=PALLAS)
+    rn, rkty = ref.fused_backward_step(A, y, q, sigma[:, None], mask, kxn, kxp)
     np.testing.assert_allclose(np.asarray(yn), np.asarray(rn), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kty), np.asarray(rkty), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# structured (two-bucket ELL gather/segment-reduce) kernels
+# ---------------------------------------------------------------------------
+
+# (k, M, N, density) — skewed shapes: one full row + one full column force
+# the wide buckets, ragged sizes exercise the lane-axis padding
+STRUCT_SHAPES = [
+    (1, 64, 96, 0.3),
+    (3, 45, 67, 0.25),
+    (4, 130, 250, 0.05),
+    (2, 256, 129, 0.1),
+]
+
+
+def _mk_structured(k, M, N, density, seed=0):
+    from repro.core import pdhg
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(k, M, N)) * (rng.random((k, M, N)) < density)
+    G[:, M // 2, :] = rng.normal(size=(k, N))     # a wide row
+    G[:, :, N // 3] = rng.normal(size=(k, M))     # a wide column
+    rows, cols = np.meshgrid(np.arange(M), np.arange(N), indexing="ij")
+    structs = [pdhg.structured_from_coo(rows.ravel(), cols.ravel(),
+                                        G[i].ravel(), M, N)
+               for i in range(k)]
+    s = jax.tree.map(lambda *xs: jnp.stack(xs), *structs)
+    return s, G.astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", STRUCT_SHAPES)
+def test_smatvec_matches_dense(shape):
+    """Both gather layouts of the StructuredOperator encode the same K."""
+    k, M, N, density = shape
+    s, G = _mk_structured(k, M, N, density)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.smatvec(s, x)),
+                               np.einsum("kmn,kn->km", G, np.asarray(x)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ops.smatvec_t(s, y)),
+                               np.einsum("kmn,km->kn", G, np.asarray(y)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", STRUCT_SHAPES)
+def test_structured_forward_step_matches_ref(shape):
+    k, M, N, density = shape
+    s, _ = _mk_structured(k, M, N, density)
+    x, c, l, u, tau, kty = _primal_operands((k, M, N))
+    xn, kx = ops.structured_forward_step(s, x, c, l, u, tau, kty,
+                                         backend=PALLAS)
+    rn, rkx = ref.structured_forward_step(s, x, c, l, u, tau[:, None], kty)
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(rn), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kx), np.asarray(rkx), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", STRUCT_SHAPES)
+def test_structured_backward_step_matches_ref(shape):
+    k, M, N, density = shape
+    s, _ = _mk_structured(k, M, N, density)
+    y, q, sigma, mask, kxn, kxp = _dual_operands((k, M, N))
+    yn, kty = ops.structured_backward_step(s, y, q, sigma, mask, kxn, kxp,
+                                           backend=PALLAS)
+    rn, rkty = ref.structured_backward_step(s, y, q, sigma[:, None], mask,
+                                            kxn, kxp)
+    np.testing.assert_allclose(np.asarray(yn), np.asarray(rn), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kty), np.asarray(rkty), rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -112,18 +197,18 @@ def test_bmatvec_arbitrary_shapes(k, m, n, seed):
 
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
-def test_fused_primal_respects_box(seed):
-    """Property: fused primal output ALWAYS lies inside [l, u]."""
+def test_fused_forward_respects_box(seed):
+    """Property: the fused forward step's x_new ALWAYS lies inside [l, u]."""
     rng = np.random.default_rng(seed)
     k, M, N = 2, 160, 96
     A = jnp.asarray(rng.normal(size=(k, M, N)), jnp.float32)
-    y = jnp.asarray(rng.normal(size=(k, M)), jnp.float32)
+    kty = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
     x = jnp.asarray(rng.normal(size=(k, N)) * 10, jnp.float32)
     c = jnp.asarray(rng.normal(size=(k, N)), jnp.float32)
     l = jnp.asarray(rng.normal(size=(k, N)) - 1, jnp.float32)
     u = l + jnp.asarray(rng.uniform(0.0, 2.0, (k, N)), jnp.float32)
     tau = jnp.asarray(rng.uniform(0.001, 1.0, k), jnp.float32)
-    xn, _ = ops.fused_primal_step(A, y, x, c, l, u, tau, backend=PALLAS)
+    xn, _ = ops.fused_forward_step(A, x, c, l, u, tau, kty, backend=PALLAS)
     assert bool(jnp.all(xn >= l - 1e-6) & jnp.all(xn <= u + 1e-6))
 
 

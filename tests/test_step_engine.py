@@ -5,6 +5,11 @@ generic matvec engine — same algorithm, different execution.  Equivalence
 is pinned on FIXED iteration budgets (tolerances set to 0 so no lane
 terminates early), which compares trajectories rather than "two different
 converged points", plus warm-start behaviour for the online re-solve path.
+
+(The full engine x backend x domain matrix — including the third,
+``fused_structured`` engine and the in-loop-KKT bit-level gate — lives in
+``tests/test_engine_conformance.py`` / ``make test-conformance``; this
+module keeps the dense-engine and warm-start specifics.)
 """
 
 import dataclasses
