@@ -18,14 +18,26 @@
 #                        (engines x map backends x domains at 1e-5, plus
 #                        the in-loop-KKT bit-level gate) — the fast check
 #                        after touching kernels/ or the step engines
+#   make test-api        ONLY the public-surface gates: API snapshot diff,
+#                        service/session + domain-registry tests, shim
+#                        bit-for-bit pins, example smoke runs
+#   make api-snapshot    regenerate docs/api_surface.txt after an
+#                        INTENTIONAL surface change (commit the diff)
 
 PY = PYTHONPATH=src python
 
-.PHONY: test check-imports test-conformance bench-backends bench-smoke \
-        bench-snapshot bench-check bench-churn
+.PHONY: test check-imports test-conformance test-api api-snapshot \
+        bench-backends bench-smoke bench-snapshot bench-check bench-churn
 
 check-imports:
 	$(PY) scripts/check_imports.py
+
+test-api:
+	$(PY) -m pytest -q tests/test_api_surface.py tests/test_service.py \
+	    tests/test_domains.py tests/test_compat_shims.py tests/test_examples.py
+
+api-snapshot:
+	$(PY) scripts/api_surface.py --write
 
 test:
 	sh scripts/test.sh

@@ -24,7 +24,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import pop
+from repro.core import ExecConfig, SolveConfig, pop
 from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
 from repro.problems.load_balancing import (LoadBalanceProblem, ShardWorkload,
                                            make_shard_workload)
@@ -57,8 +57,8 @@ def run_cluster(n_jobs: int = 192, k: int = 8, n_seeds: int = 3,
     wl = make_cluster_workload(n_jobs, num_workers=num_workers, seed=0)
     prob = GavelProblem(wl)
     ids = np.arange(n_jobs)
-    prev = pop.pop_solve(prob, k, strategy="stratified", solver_kw=kw,
-                         entity_ids=ids)
+    prev = pop.solve_instance(prob, SolveConfig(k=k, strategy="stratified"),
+                              ExecConfig(solver_kw=kw), entity_ids=ids)
     rows = []
     for level in CHURN_LEVELS:
         cold_t = warm_t = 0
@@ -78,9 +78,11 @@ def run_cluster(n_jobs: int = 192, k: int = 8, n_seeds: int = 3,
                 job_type=cat(wl.job_type, fresh.job_type))
             ids2 = np.concatenate([keep, 10_000 * (seed + 1) + np.arange(n_out)])
             prob2 = GavelProblem(wl2)
-            warm = pop.pop_solve(prob2, k, warm=prev, solver_kw=kw,
-                                 entity_ids=ids2)
-            cold = pop.pop_solve(prob2, k, plan=warm.plan, solver_kw=kw)
+            warm = pop.solve_instance(prob2, SolveConfig(k=k, strategy="random"),
+                                      ExecConfig(solver_kw=kw),
+                                      warm=prev, entity_ids=ids2)
+            cold = pop.solve_instance(prob2, SolveConfig(k=k),
+                                      ExecConfig(solver_kw=kw), plan=warm.plan)
             cold_t += int(cold.iterations.sum())
             warm_t += int(warm.iterations.sum())
             wf += warm.warm_stats["warm_fraction"] / n_seeds
@@ -99,8 +101,8 @@ def run_traffic(n_demands: int = 512, k: int = 8, n_seeds: int = 3,
     paths = k_shortest_paths(topo, pairs, n_paths=3, max_len=24, seed=0)
     sel = np.arange(n_demands)
     prob = TrafficProblem(topo, pairs[sel], size[sel], paths[sel])
-    prev = pop.pop_solve(prob, k, strategy="random", solver_kw=kw,
-                         entity_ids=sel)
+    prev = pop.solve_instance(prob, SolveConfig(k=k, strategy="random"),
+                              ExecConfig(solver_kw=kw), entity_ids=sel)
     rows = []
     for level in CHURN_LEVELS:
         cold_t = warm_t = 0
@@ -116,9 +118,11 @@ def run_traffic(n_demands: int = 512, k: int = 8, n_seeds: int = 3,
             prob2 = TrafficProblem(
                 topo, pairs[sel2],
                 size[sel2] * rng.uniform(0.97, 1.03, n_demands), paths[sel2])
-            warm = pop.pop_solve(prob2, k, warm=prev, solver_kw=kw,
-                                 entity_ids=sel2)
-            cold = pop.pop_solve(prob2, k, plan=warm.plan, solver_kw=kw)
+            warm = pop.solve_instance(prob2, SolveConfig(k=k, strategy="random"),
+                                      ExecConfig(solver_kw=kw),
+                                      warm=prev, entity_ids=sel2)
+            cold = pop.solve_instance(prob2, SolveConfig(k=k),
+                                      ExecConfig(solver_kw=kw), plan=warm.plan)
             cold_t += int(cold.iterations.sum())
             warm_t += int(warm.iterations.sum())
             wf += warm.warm_stats["warm_fraction"] / n_seeds

@@ -14,7 +14,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import pop
+from repro.core import ExecConfig, SolveConfig, pop
 from repro.problems.cluster_scheduling import (GavelProblem,
                                                gandiva_heuristic,
                                                make_cluster_workload)
@@ -39,7 +39,8 @@ def run(n_jobs: int = 448, workers=(256, 256, 256), ks=(4, 8, 16, 32),
          f"mean={ev['mean_norm_throughput']:.4f};min={ev['min_norm_throughput']:.4f}")
 
     for k in ks:
-        r = pop.pop_solve(prob, k, strategy="stratified", solver_kw=SOLVER_KW)
+        r = pop.solve_instance(prob, SolveConfig(k=k, strategy="stratified"),
+                               ExecConfig(solver_kw=SOLVER_KW))
         ev = prob.evaluate(r.alloc)
         speedup = t_solve / r.solve_time_s
         quality = ev["mean_norm_throughput"] / full_mean

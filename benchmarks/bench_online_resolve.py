@@ -28,7 +28,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import pop
+from repro.core import ExecConfig, SolveConfig, pop
 from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
 from repro.problems.load_balancing import LoadBalanceProblem, make_shard_workload
 from .common import emit, save_json
@@ -44,7 +44,8 @@ def run_cluster(n_jobs: int = 256, k: int = 8, perturb: float = 0.03,
     rng = np.random.default_rng(seed + 1000)
     wl = make_cluster_workload(n_jobs, num_workers=(64, 64, 64), seed=seed)
     prob = GavelProblem(wl, space_sharing=False)
-    prev = pop.pop_solve(prob, k, strategy="stratified", solver_kw=kw)
+    prev = pop.solve_instance(prob, SolveConfig(k=k, strategy="stratified"),
+                              ExecConfig(solver_kw=kw))
     rows = [dict(round=0, mode="cold", solve_s=prev.solve_time_s,
                  iters=int(prev.iterations.sum()),
                  converged=bool(prev.converged.all()))]
@@ -52,8 +53,11 @@ def run_cluster(n_jobs: int = 256, k: int = 8, perturb: float = 0.03,
         wl = dataclasses.replace(
             wl, T=wl.T * rng.uniform(1 - perturb, 1 + perturb, wl.T.shape))
         prob = GavelProblem(wl, space_sharing=False)
-        cold = pop.pop_solve(prob, k, partition_idx=prev.idx, solver_kw=kw)
-        warm = pop.pop_solve(prob, k, warm=prev, solver_kw=kw)
+        cold = pop.solve_instance(prob, SolveConfig(k=k),
+                                  ExecConfig(solver_kw=kw),
+                                  partition_idx=prev.idx)
+        warm = pop.solve_instance(prob, SolveConfig(k=k, strategy="random"),
+                                  ExecConfig(solver_kw=kw), warm=prev)
         for mode, r in (("cold", cold), ("warm", warm)):
             rows.append(dict(round=rnd, mode=mode, solve_s=r.solve_time_s,
                              iters=int(r.iterations.sum()),

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from scipy.optimize import linprog
 
-from repro.core import LinearProgram, backends as backends_mod, pdhg, pop
+from repro.core import (ExecConfig, LinearProgram, SolveConfig,
+                        backends as backends_mod, pdhg, pop)
 from repro.problems.cluster_scheduling import GavelProblem, make_cluster_workload
 from .common import Timer, emit, save_json
 
@@ -192,8 +193,9 @@ def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
             if k == 1:
                 t, iters = t_full, iters_full
             else:
-                r = pop.pop_solve(prob, k, strategy="stratified",
-                                  backend=backend, solver_kw=kw)
+                r = pop.solve_instance(
+                    prob, SolveConfig(k=k, strategy="stratified"),
+                    ExecConfig(backend=backend, solver_kw=kw))
                 t, iters = r.solve_time_s, int(r.iterations.sum())
             rows.append(dict(backend=backend, k=k, solve_s=t, iters=iters))
             t1 = t1 or t

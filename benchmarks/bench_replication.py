@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import pop
+from repro.core import ExecConfig, SolveConfig, pop
 from repro.problems.traffic_engineering import (TrafficProblem,
                                                 k_shortest_paths,
                                                 make_demands, make_topology)
@@ -35,12 +35,15 @@ def run(k: int = 16, seed: int = 0) -> dict:
     full, _, t_full, _ = pop.solve_full(prob, solver_kw=SOLVER_KW)
     opt = prob.evaluate(full)["total_flow"]
 
-    r_plain = pop.pop_solve(prob, k, strategy="random", seed=seed,
-                            solver_kw=SOLVER_KW)
+    r_plain = pop.solve_instance(
+        prob, SolveConfig(k=k, strategy="random", seed=seed),
+        ExecConfig(solver_kw=SOLVER_KW))
     f_plain = prob.evaluate(r_plain.alloc)["total_flow"]
 
-    r_rep = pop.pop_solve(prob, k, replicate_threshold=0.5, seed=seed,
-                          solver_kw=SOLVER_KW)
+    r_rep = pop.solve_instance(
+        prob, SolveConfig(k=k, strategy="random", seed=seed,
+                          replicate_threshold=0.5),
+        ExecConfig(solver_kw=SOLVER_KW))
     f_rep = prob.evaluate(r_rep.alloc)["total_flow"]
 
     emit(f"replication_off_k{k}", r_plain.solve_time_s * 1e6,

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import pop, skewed_partition, similarity_report
+from repro.core import (ExecConfig, SolveConfig, pop, skewed_partition,
+                        similarity_report)
 from repro.problems.traffic_engineering import cspf_heuristic
 from .bench_traffic_engineering import build, SOLVER_KW
 from .common import emit, save_json
@@ -23,12 +24,14 @@ def run(n_demands: int = 10_000, ks=(4, 16), seed: int = 0) -> dict:
     opt = prob.evaluate(full)["total_flow"]
 
     for k in ks:
-        r_rand = pop.pop_solve(prob, k, strategy="random", seed=seed,
-                               solver_kw=SOLVER_KW)
+        r_rand = pop.solve_instance(
+            prob, SolveConfig(k=k, strategy="random", seed=seed),
+            ExecConfig(solver_kw=SOLVER_KW))
         f_rand = prob.evaluate(r_rand.alloc)["total_flow"]
         idx = skewed_partition(prob.source_groups(), k)
-        r_skew = pop.pop_solve(prob, k, partition_idx=idx,
-                               solver_kw=SOLVER_KW)
+        r_skew = pop.solve_instance(
+            prob, SolveConfig(k=k), ExecConfig(solver_kw=SOLVER_KW),
+            partition_idx=idx)
         f_skew = prob.evaluate(r_skew.alloc)["total_flow"]
         sim_r = r_rand.similarity["max_mean_dist"]
         sim_s = r_skew.similarity["max_mean_dist"]

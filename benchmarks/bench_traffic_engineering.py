@@ -10,7 +10,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import pop
+from repro.core import ExecConfig, SolveConfig, pop
 from repro.problems.traffic_engineering import (TrafficProblem,
                                                 cspf_heuristic, k_shortest_paths,
                                                 make_demands, make_topology)
@@ -39,8 +39,9 @@ def run(n_demands: int = 20_000, ks=(4, 16, 64), seed: int = 0) -> dict:
          f"flow={opt_flow:.1f};util={ev['max_edge_util']:.3f}")
 
     for k in ks:
-        r = pop.pop_solve(prob, k, strategy="random", seed=seed,
-                          solver_kw=SOLVER_KW)
+        r = pop.solve_instance(
+            prob, SolveConfig(k=k, strategy="random", seed=seed),
+            ExecConfig(solver_kw=SOLVER_KW))
         ev = prob.evaluate(r.alloc)
         speedup = t_solve / r.solve_time_s
         rel = ev["total_flow"] / opt_flow

@@ -63,8 +63,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_churn, bench_cluster_scheduling,
-                   bench_load_balancing, bench_online_resolve,
-                   bench_pop_scaling, bench_replication, bench_skewed_splits,
+                   bench_load_balancing, bench_moe_placement,
+                   bench_online_resolve, bench_pop_scaling,
+                   bench_replication, bench_session, bench_skewed_splits,
                    bench_traffic_engineering)
 
     suite = {
@@ -90,6 +91,13 @@ def main() -> None:
         "online_resolve": lambda: bench_online_resolve.run(fast=args.fast),
         # churn-aware warm starts across partition changes (PopPlan layer)
         "churn": lambda: bench_churn.run(fast=args.fast),
+        # the fourth scenario: MoE expert placement (registry-onboarded)
+        "moe_placement": lambda: bench_moe_placement.run(
+            n_experts=128 if args.fast else 512,
+            n_devices=8 if args.fast else 16),
+        # multi-tenant PopService session throughput (plan-cache hit rate,
+        # warm fraction, steps/sec under interleaved tenants)
+        "session": lambda: bench_session.run(fast=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))

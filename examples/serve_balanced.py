@@ -1,10 +1,12 @@
 """End-to-end serving driver: batched decode of a small LM across several
-replica groups, with POP (the paper's load-balancing MILP) placing request
-shards onto replicas — the paper's technique running in the serving path.
+replica groups, with a PopService session (the registered ``load_balance``
+domain) placing request shards onto replicas — the paper's technique
+running in the serving path, through the one public API.
 
-    PYTHONPATH=src python examples/serve_balanced.py
+    PYTHONPATH=src python examples/serve_balanced.py [--fast]
 """
 
+import argparse
 import time
 
 import jax
@@ -12,65 +14,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.core import ExecConfig, SolveConfig
+from repro.domains import BalanceInstance
 from repro.models import init_cache, init_params
-from repro.serve.engine import ServeConfig, balance_requests, make_serve_step
+from repro.serve.engine import ServeConfig, make_serve_step
+from repro.service import PopService
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer groups + decode steps (smoke-test mode)")
+    args = ap.parse_args()
+    n_groups = 24 if args.fast else 64
+    decode_cap = 4 if args.fast else 16
+
     print("== POP-balanced batched serving ==")
     cfg = get_reduced("xlstm_350m")
     params = init_params(jax.random.PRNGKey(0), cfg)
     n_replicas = 4
     rng = np.random.default_rng(0)
 
-    # 64 request groups with heavy-tailed load (tokens to generate).
-    # Stable session ids per group: what lets the balancer's warm state
-    # survive group churn (sessions finishing, sessions arriving).
-    n_groups = 64
+    # request groups with heavy-tailed load (tokens to generate).  Stable
+    # session ids per group let the balancer session's warm state survive
+    # group churn (sessions finishing, sessions arriving).
     load = np.minimum(rng.zipf(1.9, n_groups), 60).astype(np.float64)
     current = rng.integers(0, n_replicas, n_groups)   # sticky sessions
     group_ids = np.arange(n_groups)
     next_id = n_groups
 
-    # POP load balancer: request groups = shards, replicas = servers
-    res = balance_requests(load, n_replicas, current, pop_k=2,
-                           solver_kw=dict(max_iters=6_000),
-                           group_ids=group_ids)
+    # the balancer is a long-lived session: request groups = shards,
+    # replicas = servers; warm state lives INSIDE it
+    service = PopService()
+    balancer = service.session(
+        "decode-balancer", domain="load_balance",
+        solve=SolveConfig(k=2),
+        exec=ExecConfig(solver_kw=dict(max_iters=6_000)))
+
+    res = balancer.step(BalanceInstance(load=load, n_targets=n_replicas,
+                                        current=current, eps_frac=0.25,
+                                        ids=group_ids))
     print(f"balancer: {n_groups} request groups -> {n_replicas} replicas "
-          f"in {res.solve_time_s:.2f}s; moved {res.moved} sticky groups; "
-          f"max load dev {res.max_load_dev:.2f}")
+          f"in {res.solve_time_s:.2f}s; moved "
+          f"{int((res.alloc != current).sum())} sticky groups; "
+          f"max load dev {res.metrics['max_load_dev']:.2f} "
+          f"(ran backend={res.backend} engine={res.engine})")
 
     # tick 2: loads drift a few percent -> warm-started re-solve picks
     # up from the previous PDHG iterates instead of cold
     load2 = load * rng.uniform(0.95, 1.05, n_groups)
-    res2 = balance_requests(load2, n_replicas, res.placement, pop_k=2,
-                            solver_kw=dict(max_iters=6_000), warm=res,
-                            group_ids=group_ids)
-    print(f"warm tick: re-balanced in {res2.solve_time_s:.2f}s; "
-          f"moved {res2.moved} groups; max load dev {res2.max_load_dev:.2f}; "
+    res2 = balancer.step(BalanceInstance(load=load2, n_targets=n_replicas,
+                                         current=res.alloc, eps_frac=0.25,
+                                         ids=group_ids))
+    print(f"warm tick: re-balanced in {res2.solve_time_s:.2f}s; moved "
+          f"{int((res2.alloc != res.alloc).sum())} groups; "
+          f"plan_cache {res2.plan_cache}; "
           f"warm_fraction {res2.warm_fraction:.2f}")
 
-    # tick 3: CHURN — 8 sessions finish, 8 new ones arrive.  The warm
-    # state still chains: surviving groups are matched by id and their
-    # iterates remapped onto the new tick's sub-problems (PR-2 would have
-    # silently fallen back to a cold solve here).
-    done = rng.choice(n_groups, 8, replace=False)
+    # tick 3: CHURN — sessions finish, new ones arrive.  The warm state
+    # still chains: surviving groups are matched by id and their iterates
+    # remapped onto the new tick's sub-problems.
+    n_churn = max(2, n_groups // 8)
+    done = rng.choice(n_groups, n_churn, replace=False)
     keep = np.setdiff1d(np.arange(n_groups), done)
-    arrivals = np.minimum(rng.zipf(1.9, 8), 60).astype(np.float64)
+    arrivals = np.minimum(rng.zipf(1.9, n_churn), 60).astype(np.float64)
     load3 = np.concatenate([load2[keep], arrivals])
-    cur3 = np.concatenate([res2.placement[keep],
-                           rng.integers(0, n_replicas, 8)])
+    cur3 = np.concatenate([res2.alloc[keep],
+                           rng.integers(0, n_replicas, n_churn)])
     group_ids = np.concatenate([group_ids[keep],
-                                next_id + np.arange(8)])
-    next_id += 8
-    res3 = balance_requests(load3, n_replicas, cur3, pop_k=2,
-                            solver_kw=dict(max_iters=6_000), warm=res2,
-                            group_ids=group_ids)
-    print(f"churn tick: 8 done / 8 arrived; re-balanced in "
-          f"{res3.solve_time_s:.2f}s; moved {res3.moved} groups; "
+                                next_id + np.arange(n_churn)])
+    next_id += n_churn
+    res3 = balancer.step(BalanceInstance(load=load3, n_targets=n_replicas,
+                                         current=cur3, eps_frac=0.25,
+                                         ids=group_ids))
+    print(f"churn tick: {n_churn} done / {n_churn} arrived; re-balanced in "
+          f"{res3.solve_time_s:.2f}s; plan_cache {res3.plan_cache}; "
           f"warm_fraction {res3.warm_fraction:.2f} "
           f"(survivors warm, arrivals start from priors)")
-    res, load = res3, load3
+    placement, load = res3.alloc, load3
 
     # serve: each replica decodes its assigned groups as one batch
     scfg = ServeConfig(batch=1, max_seq=128)
@@ -78,14 +99,14 @@ def main():
     total_tokens = 0
     t0 = time.perf_counter()
     for r in range(n_replicas):
-        groups = np.flatnonzero(res.placement == r)
+        groups = np.flatnonzero(placement == r)
         if groups.size == 0:
             continue
         B = int(groups.size)
         cache = init_cache(cfg, B, 128)
         tok = jnp.zeros((B, 1), jnp.int32)
         steps = int(load[groups].max())
-        for _ in range(min(steps, 16)):           # cap demo length
+        for _ in range(min(steps, decode_cap)):
             tok, cache = step(params, cache, tok)
             total_tokens += B
         print(f"  replica {r}: batch={B:3d} groups, "

@@ -48,6 +48,16 @@ def main() -> int:
     if failed:
         print("failed: " + ", ".join(failed), file=sys.stderr)
         return 1
+    # the domain registry is import-time state: a clean import that lost a
+    # built-in registration is as broken as an ImportError
+    import repro.domains as domains
+    expected = {"gavel", "traffic", "load_balance", "moe_placement"}
+    missing = expected - set(domains.names())
+    if missing:
+        print(f"domain registry missing built-ins: {sorted(missing)}",
+              file=sys.stderr)
+        return 1
+    print(f"domain registry: {', '.join(domains.names())}")
     return 0
 
 

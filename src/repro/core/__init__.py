@@ -17,10 +17,12 @@ from .replicate import ReplicationPlan, plan_replication, replicated_partition
 from .reduce import coalesce_concat, coalesce_replicated
 from .backends import (
     MAP_BACKENDS, available_backends, get_backend, register_backend,
-    select_backend, solve_map, solve_one, make_map_solver,
+    select_backend, resolve_exec, solve_map, solve_one, make_map_solver,
 )
+from .config import SolveConfig, ExecConfig
 from .plan import PopPlan, SubLayout, WarmStart, remap_warm
-from .pop import POPProblem, POPResult, pop_solve, solve_full
+from .pop import (POPProblem, POPResult, FullResult, pop_solve,
+                  solve_instance, solve_full, solve_full_ex)
 from .maxmin import epigraph_rows, maxmin_objective
 from .rounding import round_relaxation
 
@@ -39,9 +41,12 @@ __all__ = [
     "ReplicationPlan", "plan_replication", "replicated_partition",
     "coalesce_concat", "coalesce_replicated",
     "MAP_BACKENDS", "available_backends", "get_backend", "register_backend",
-    "select_backend", "solve_map", "solve_one", "make_map_solver",
+    "select_backend", "resolve_exec", "solve_map", "solve_one",
+    "make_map_solver",
+    "SolveConfig", "ExecConfig",
     "PopPlan", "SubLayout", "WarmStart", "remap_warm",
-    "POPProblem", "POPResult", "pop_solve", "solve_full",
+    "POPProblem", "POPResult", "FullResult", "pop_solve", "solve_instance",
+    "solve_full", "solve_full_ex",
     "epigraph_rows", "maxmin_objective",
     "round_relaxation",
 ]

@@ -353,15 +353,19 @@ def _resolve_warm(ops: OperatorLP, warm) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return wx, wy
 
 
-def solve_one(op: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
-              backend: str = "auto", engine: EngineSpec = "auto",
-              warm=None, **opts: Any) -> SolveResult:
+def solve_one_ex(op: OperatorLP, K_mv, KT_mv,
+                 solver_kw: Optional[dict] = None,
+                 backend: str = "auto", engine: EngineSpec = "auto",
+                 warm=None, **opts: Any):
     """Solve ONE unbatched LP through the same substrate as the map step
-    (a k=1 stack): full-problem baselines get the engine selection, the
-    backend registry and the jit-cached map solver without hand-rolling
-    the batch/unbatch dance.  ``warm`` is an unbatched (x, y) pair or
-    SolveResult-like object; the result is unbatched again."""
+    (a k=1 stack) and report what ran: returns
+    ``(result, backend_name, engine_name)`` with ``"auto"`` resolved.
+    The operator is batched exactly ONCE (the same stack serves the
+    resolution probe and the solve); ``warm`` is an unbatched (x, y) pair
+    or SolveResult-like object; the result is unbatched again."""
     opb = jax.tree.map(lambda a: jnp.asarray(a)[None], op)
+    backend, engine, opts = resolve_exec(opb, K_mv, KT_mv, backend, engine,
+                                         opts)
     if warm is not None:
         if hasattr(warm, "x") and hasattr(warm, "y"):
             warm = (warm.x, warm.y)
@@ -369,7 +373,52 @@ def solve_one(op: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
     res = solve_map(opb, K_mv, KT_mv, solver_kw, backend=backend,
                     engine=engine, warm=warm, **opts)
     jax.block_until_ready(res.x)
-    return jax.tree.map(lambda a: a[0], res)
+    return (jax.tree.map(lambda a: a[0], res), backend,
+            pdhg.engine_name(engine))
+
+
+def solve_one(op: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
+              backend: str = "auto", engine: EngineSpec = "auto",
+              warm=None, **opts: Any) -> SolveResult:
+    """:func:`solve_one_ex` without the observability tuple — full-problem
+    baselines get the engine selection, the backend registry and the
+    jit-cached map solver without hand-rolling the batch/unbatch dance."""
+    res, _, _ = solve_one_ex(op, K_mv, KT_mv, solver_kw, backend=backend,
+                             engine=engine, warm=warm, **opts)
+    return res
+
+
+def resolve_exec(ops: OperatorLP, K_mv, KT_mv, backend: str = "auto",
+                 engine: EngineSpec = "auto",
+                 opts: Optional[dict] = None):
+    """Resolve ``"auto"`` specs to the (backend name, engine) that will
+    actually run — the single resolution point :func:`solve_map` uses, and
+    the observability hook the pipeline records into ``POPResult.backend``
+    / ``.engine`` (callers and benchmarks otherwise can't see what
+    ``"auto"`` picked).  Returns ``(backend_name, engine, opts)`` where
+    ``engine`` is ``"matvec"`` or a resolved
+    :class:`~repro.core.pdhg.StepEngine` (``pdhg.engine_name`` prints it);
+    under ``backend="auto"``, ``opts`` the winning backend doesn't take
+    (e.g. ``chunk=`` when vmap wins) are dropped — they are hints for
+    *whichever* backend wins, not requirements.  An explicitly named
+    backend keeps opts verbatim (and still rejects unknown ones when
+    called)."""
+    if engine == "auto" or engine is None:
+        engine = pdhg.select_engine(ops, K_mv, KT_mv)
+    if engine != "matvec":
+        # canonical resolution/validation lives in pdhg.resolve_engine;
+        # "matvec" stays a string so _build_solver takes the vmapped path
+        engine = pdhg.resolve_engine(engine, ops, K_mv, KT_mv)
+    opts = dict(opts or {})
+    if backend == "auto":
+        backend = select_backend(batch_size(ops), _n_elems_per_sub(ops))
+        if opts:
+            import inspect
+            accepted = inspect.signature(get_backend(backend)).parameters
+            opts = {k: v for k, v in opts.items() if k in accepted}
+    else:
+        get_backend(backend)          # fail fast on unknown names
+    return backend, engine, opts
 
 
 def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
@@ -377,28 +426,16 @@ def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
               warm=None, **opts: Any) -> SolveResult:
     """Run the POP map step on stacked ``ops`` with the named backend
     (``"auto"`` resolves via :func:`select_backend`) and step engine
-    (``"auto"`` resolves via :func:`repro.core.pdhg.select_engine`).
+    (``"auto"`` resolves via :func:`repro.core.pdhg.select_engine`) —
+    both through :func:`resolve_exec`, so callers who need to report what
+    actually ran can resolve first and pass the resolved values in (the
+    second resolution is a no-op).
 
     ``warm`` seeds every lane from a previous solve of a nearby instance
-    (a SolveResult, or an (x, y) pair) — the online re-solve path.
-
-    Under ``backend="auto"``, opts the chosen backend doesn't take (e.g.
-    ``chunk=`` when it resolves to vmap) are dropped — they are hints for
-    *whichever* backend wins, not requirements.  An explicitly named
-    backend still rejects unknown opts."""
+    (a SolveResult, or an (x, y) pair) — the online re-solve path."""
     solver_kw = dict(solver_kw or {})
-    if engine == "auto" or engine is None:
-        engine = pdhg.select_engine(ops, K_mv, KT_mv)
-    if engine != "matvec":
-        # canonical resolution/validation lives in pdhg.resolve_engine;
-        # "matvec" stays a string so _build_solver takes the vmapped path
-        engine = pdhg.resolve_engine(engine, ops, K_mv, KT_mv)
+    backend, engine, opts = resolve_exec(ops, K_mv, KT_mv, backend, engine,
+                                         opts)
     batch = (ops, *_resolve_warm(ops, warm))
-    if backend == "auto":
-        backend = select_backend(batch_size(ops), _n_elems_per_sub(ops))
-        if opts:
-            import inspect
-            accepted = inspect.signature(get_backend(backend)).parameters
-            opts = {k: v for k, v in opts.items() if k in accepted}
     return get_backend(backend)(batch, K_mv, KT_mv, solver_kw,
                                 engine=engine, **opts)

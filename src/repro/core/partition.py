@@ -122,10 +122,8 @@ def similarity_report(attrs: np.ndarray, idx: np.ndarray) -> dict:
     }
 
 
-PARTITIONERS = {
-    "random": lambda attrs, k, seed=0: random_partition(attrs.shape[0], k, seed),
-    "stratified": lambda attrs, k, seed=0: stratified_partition_multidim(attrs, k, seed),
-}
+# the strategy names make_partition dispatches — what SolveConfig validates
+STRATEGIES = ("random", "stratified", "stratified_multidim")
 
 
 def make_partition(strategy: str, attrs: np.ndarray, scores: np.ndarray,

@@ -116,6 +116,7 @@ Algorithm: Chambolle–Pock primal–dual with
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
@@ -500,6 +501,16 @@ def select_engine(op: OperatorLP, K_mv: Callable = dense_K_mv,
     return "matvec"
 
 
+# the engine spec strings resolve_engine accepts (besides a StepEngine
+# object) — what ExecConfig validates at construction
+ENGINE_NAMES = ("auto", "matvec", "fused", "fused_structured")
+
+
+def engine_name(engine: Union[str, "StepEngine"]) -> str:
+    """Printable name of an engine spec (a resolved StepEngine or a str)."""
+    return engine if isinstance(engine, str) else engine.name
+
+
 def resolve_engine(engine: Union[None, str, StepEngine], op: OperatorLP,
                    K_mv: Callable = dense_K_mv,
                    KT_mv: Callable = dense_KT_mv) -> StepEngine:
@@ -875,6 +886,15 @@ def solve_stacked(
         primal_res=pr, gap=gap, iterations=state.it, converged=state.done,
         n_restarts=state.n_restarts,
     )
+
+
+# the keyword names a solver_kw dict may carry (everything solve_stacked
+# takes except the operator/engine/warm plumbing, which the pipeline
+# threads itself) — what ExecConfig validates at construction
+SOLVER_KW_NAMES = frozenset(
+    name for name, p in inspect.signature(solve_stacked).parameters.items()
+    if p.kind is inspect.Parameter.KEYWORD_ONLY
+    and not name.startswith("warm_"))
 
 
 def solve(

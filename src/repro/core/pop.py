@@ -20,11 +20,17 @@ stages:
   ``reduce()``  coalesce sub-allocations back to global entity order
                 (``core/reduce.py``).
 
-:func:`pop_solve` is the one-call wrapper chaining all four.  Online
-callers hold onto the :class:`PopPlan` (every :class:`POPResult` carries
-its plan) and re-plan only when they must — planning is pure numpy and
-cheap, but *re-using* a plan is what keeps warm starts exact and the jit
-caches hot.
+:func:`solve_instance` is the one-call wrapper chaining all four,
+configured by the frozen dataclasses in ``core/config.py``
+(:class:`SolveConfig` / :class:`ExecConfig`); the legacy kwarg surface
+:func:`pop_solve` forwards onto it with a DeprecationWarning.  These
+stages are the DOCUMENTED INTERNALS that the public surface drives: the
+domain registry (``repro.domains``) describes each scenario
+declaratively, and :class:`repro.service.PopService` sessions call
+:func:`solve_instance` per online step.  Online callers hold onto the
+:class:`PopPlan` (every :class:`POPResult` carries its plan) and re-plan
+only when they must — planning is pure numpy and cheap, but *re-using* a
+plan is what keeps warm starts exact and the jit caches hot.
 
 Warm starts across churn
 ------------------------
@@ -57,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -66,6 +73,7 @@ import numpy as np
 from . import backends as backends_mod
 from . import partition as part_mod
 from . import pdhg
+from .config import ExecConfig, SolveConfig
 from .pdhg import OperatorLP, SolveResult
 from .plan import PopPlan, SubLayout, WarmStart, remap_warm, repair_plan
 from .replicate import ReplicationPlan, plan_replication, replicated_partition
@@ -144,6 +152,14 @@ class POPResult:
     # re-solves) and, for warm solves, the remap statistics
     plan: Optional[PopPlan] = None
     warm_stats: Optional[dict] = None
+    # observability: the backend/engine that ACTUALLY ran ("auto" resolved
+    # — callers and benchmarks otherwise can't see what won), and where
+    # the plan came from: "reused" (cache hit), "repaired" (incremental
+    # re-plan under churn), "fresh" (new partition), "provided" (explicit
+    # plan=)
+    backend: Optional[str] = None
+    engine: Optional[str] = None
+    plan_source: Optional[str] = None
 
 
 # --------------------------------------------------------------------------
@@ -315,6 +331,125 @@ def _plan_of(warm) -> Optional[PopPlan]:
                    entity_of_slot=ent, replication=rep)
 
 
+def solve_instance(
+    problem: POPProblem,
+    solve_cfg: SolveConfig = SolveConfig(),
+    exec_cfg: ExecConfig = ExecConfig(),
+    *,
+    warm: Optional[POPResult] = None,
+    plan: Optional[PopPlan] = None,
+    replan: bool = False,
+    partition_idx: Optional[np.ndarray] = None,
+    entity_ids: Optional[np.ndarray] = None,
+) -> POPResult:
+    """Run POP on ``problem``: :func:`plan` -> :func:`build` ->
+    :func:`solve` -> :func:`reduce` in one call, configured by the two
+    frozen config dataclasses (``core/config.py``): :class:`SolveConfig`
+    says how to split (k, strategy, replication), :class:`ExecConfig` how
+    to execute (backend, engine, solver keywords).  This is the canonical
+    pipeline entry — :class:`~repro.service.PopService` sessions call it
+    per step, and the legacy :func:`pop_solve` kwarg surface forwards
+    here.
+
+    ``warm`` re-solves an UPDATED instance from a previous
+    :class:`POPResult`.  While the instance shape is unchanged the previous
+    plan is reused and every lane continues from its previous (x, y)
+    iterates; across entity arrivals/departures, k changes or forced
+    re-planning (``replan=True`` / explicit ``plan=``) the old iterates
+    are remapped onto the new plan (see module docstring).  ``entity_ids``
+    names entities stably across instances for that matching;
+    ``partition_idx`` overrides the strategy with an explicit split.
+
+    The result reports the backend/engine that ACTUALLY ran (``"auto"``
+    resolved) and where its plan came from (``plan_source``: "reused" /
+    "repaired" / "fresh" / "provided") — the observability the service
+    plan cache and the benchmarks aggregate."""
+    # honour the SolveConfig.min_per_sub promise HERE (the canonical
+    # entry), not in each caller; without min_per_sub the requested k is
+    # used verbatim (the historical pop_solve semantics)
+    k = (solve_cfg.k if solve_cfg.min_per_sub is None
+         else solve_cfg.k_for(problem.n_entities))
+    solver_kw = exec_cfg.solver_dict()
+    if warm is not None and getattr(warm, "x", None) is None:
+        raise ValueError("warm result lacks solver state (x/y)")
+
+    t0 = time.perf_counter()
+    prev_plan = _plan_of(warm) if warm is not None else None
+    # one side naming entities externally while the other matches by
+    # position would pair arbitrary entities — refuse to match, start cold
+    ids_agree = (prev_plan is None
+                 or (prev_plan.entity_ids is None) == (entity_ids is None))
+    source = "fresh"
+    if plan is not None:
+        p = plan
+        source = "provided"
+    elif (warm is not None and prev_plan is not None and not replan
+          and partition_idx is None
+          and solve_cfg.replicate_threshold is None and ids_agree):
+        if _plan_fits(prev_plan, problem, k, entity_ids):
+            p = prev_plan
+            source = "reused"
+        elif prev_plan.k == k and prev_plan.replication is None:
+            # entity churn at the same k: repair the old plan in place —
+            # survivors keep their (lane, slot), so the remapped warm start
+            # lands in an unchanged lane context (see plan.repair_plan)
+            p = repair_plan(prev_plan, problem, entity_ids=entity_ids)
+            source = "repaired"
+        else:
+            p = make_plan(problem, k, strategy=solve_cfg.strategy,
+                          seed=solve_cfg.seed, entity_ids=entity_ids)
+    else:
+        p = make_plan(problem, k, strategy=solve_cfg.strategy,
+                      seed=solve_cfg.seed,
+                      replicate_threshold=solve_cfg.replicate_threshold,
+                      partition_idx=partition_idx, entity_ids=entity_ids)
+    ops = build(problem, p)
+    build_time = time.perf_counter() - t0
+
+    warm_in = None
+    warm_stats = None
+    if warm is not None:
+        if source == "reused":
+            # identity churn: the PR-2 path, previous iterates verbatim
+            warm_in = (warm.x, warm.y)
+            n_live = int((p.entity_of_slot >= 0).sum())
+            warm_stats = dict(warm_fraction=1.0, matched=n_live, fresh=0,
+                              dropped=0, lanes_cold=0, identity=True)
+        elif not ids_agree:
+            warm_stats = dict(warm_fraction=0.0, matched=0, fresh=0,
+                              dropped=0, lanes_cold=k, identity=False,
+                              reason="entity id spaces differ (one side has "
+                                     "entity_ids, the other is positional)")
+        elif prev_plan is not None:
+            ws = remap_warm(prev_plan, p, warm, ops=ops)
+            warm_in = ws
+            warm_stats = ws.stats
+
+    # resolve "auto" specs HERE so the result can report what actually ran
+    backend_name, engine_run, opts = backends_mod.resolve_exec(
+        ops, problem.K_mv, problem.KT_mv, exec_cfg.backend, exec_cfg.engine,
+        exec_cfg.opts_dict())
+    t1 = time.perf_counter()
+    res = solve(problem, p, ops, backend=backend_name, engine=engine_run,
+                solver_kw=solver_kw, backend_opts=opts, warm=warm_in)
+    solve_time = time.perf_counter() - t1
+
+    alloc = reduce(problem, p, ops, res)
+    return POPResult(
+        alloc=alloc, idx=p.idx,
+        solve_time_s=solve_time, build_time_s=build_time,
+        iterations=np.asarray(res.iterations),
+        converged=np.asarray(res.converged),
+        similarity=p.similarity or {},
+        sub_objectives=np.asarray(res.primal_obj),
+        replication=p.replication,
+        x=np.asarray(res.x), y=np.asarray(res.y),
+        plan=p, warm_stats=warm_stats,
+        backend=backend_name, engine=pdhg.engine_name(engine_run),
+        plan_source=source,
+    )
+
+
 def pop_solve(
     problem: POPProblem,
     k: int,
@@ -332,112 +467,80 @@ def pop_solve(
     replan: bool = False,
     entity_ids: Optional[np.ndarray] = None,
 ) -> POPResult:
-    """Run POP-k on ``problem``: :func:`plan` -> :func:`build` ->
-    :func:`solve` -> :func:`reduce` in one call.
+    """DEPRECATED kwarg surface over :func:`solve_instance` — collapse the
+    loose kwargs into a :class:`SolveConfig` + :class:`ExecConfig` (or use
+    a :class:`~repro.service.PopService` session for online re-solves) and
+    call :func:`solve_instance`; results are bit-identical.  Kept as a
+    thin forwarder so existing callers keep working."""
+    warnings.warn(
+        "pop_solve(problem, k, ...) is deprecated: use "
+        "pop.solve_instance(problem, SolveConfig(k=..., strategy=...), "
+        "ExecConfig(...)) or a repro.service.PopService session — results "
+        "are identical when the configs mirror these kwargs (NOTE: "
+        "SolveConfig defaults strategy='stratified'; pop_solve's default "
+        "was 'random')",
+        DeprecationWarning, stacklevel=2)
+    return solve_instance(
+        problem,
+        SolveConfig(k=k, strategy=strategy, seed=seed,
+                    replicate_threshold=replicate_threshold),
+        ExecConfig(backend=backend, engine=engine,
+                   solver_kw=dict(solver_kw or {}),
+                   backend_opts=dict(backend_opts or {})),
+        warm=warm, plan=plan, replan=replan, partition_idx=partition_idx,
+        entity_ids=entity_ids)
 
-    ``backend`` names a map-step backend from ``core/backends.py``
-    (``"auto"`` picks by k, device count and problem size); ``engine`` a
-    PDHG step engine from ``core/pdhg.py`` (``"auto"``: fused kernels for
-    dense data on TPU, operator matvecs otherwise); ``backend_opts`` are
-    forwarded to the backend (e.g. ``chunk=``, ``mesh=``).
 
-    ``warm`` re-solves an UPDATED instance from a previous
-    :class:`POPResult`.  While the instance shape is unchanged the previous
-    plan is reused and every lane continues from its previous (x, y)
-    iterates; across entity arrivals/departures, k changes or forced
-    re-planning (``replan=True`` / explicit ``plan=``) the old iterates
-    are remapped onto the new plan (see module docstring).  ``entity_ids``
-    names entities stably across instances for that matching."""
-    solver_kw = dict(solver_kw or {})
-    if warm is not None and getattr(warm, "x", None) is None:
-        raise ValueError("warm result lacks solver state (x/y)")
+@dataclasses.dataclass
+class FullResult:
+    """Unpartitioned (k=1) solve outcome, with the same observability as
+    :class:`POPResult` (resolved backend/engine)."""
 
+    alloc: np.ndarray
+    res: SolveResult
+    solve_time_s: float
+    build_time_s: float
+    backend: Optional[str] = None
+    engine: Optional[str] = None
+
+
+def solve_full_ex(problem: POPProblem, *,
+                  warm: Optional[SolveResult] = None,
+                  exec_cfg: Optional[ExecConfig] = None) -> FullResult:
+    """Unpartitioned baseline (the paper's 'original problem') as a k=1
+    stack through the SAME execution substrate as the POP path — so
+    full-problem baselines get the fused step engine, explicit backend
+    selection and the jit-cached map solver too.  Everything about the
+    execution (including ``solver_kw``) comes from ``exec_cfg``; ``warm``
+    re-solves from a previous full-problem :class:`SolveResult`.  Returns
+    a :class:`FullResult` reporting the resolved backend/engine."""
+    exec_cfg = exec_cfg or ExecConfig()
+    solver_kw = exec_cfg.solver_dict()
     t0 = time.perf_counter()
-    prev_plan = _plan_of(warm) if warm is not None else None
-    # one side naming entities externally while the other matches by
-    # position would pair arbitrary entities — refuse to match, start cold
-    ids_agree = (prev_plan is None
-                 or (prev_plan.entity_ids is None) == (entity_ids is None))
-    reused = False
-    if plan is not None:
-        p = plan
-    elif (warm is not None and prev_plan is not None and not replan
-          and partition_idx is None and replicate_threshold is None
-          and ids_agree):
-        if _plan_fits(prev_plan, problem, k, entity_ids):
-            p = prev_plan
-            reused = True
-        elif prev_plan.k == k and prev_plan.replication is None:
-            # entity churn at the same k: repair the old plan in place —
-            # survivors keep their (lane, slot), so the remapped warm start
-            # lands in an unchanged lane context (see plan.repair_plan)
-            p = repair_plan(prev_plan, problem, entity_ids=entity_ids)
-        else:
-            p = make_plan(problem, k, strategy=strategy, seed=seed,
-                          entity_ids=entity_ids)
-    else:
-        p = make_plan(problem, k, strategy=strategy, seed=seed,
-                      replicate_threshold=replicate_threshold,
-                      partition_idx=partition_idx, entity_ids=entity_ids)
-    ops = build(problem, p)
+    op = problem.build_full()
     build_time = time.perf_counter() - t0
-
-    warm_in = None
-    warm_stats = None
-    if warm is not None:
-        if reused:
-            # identity churn: the PR-2 path, previous iterates verbatim
-            warm_in = (warm.x, warm.y)
-            n_live = int((p.entity_of_slot >= 0).sum())
-            warm_stats = dict(warm_fraction=1.0, matched=n_live, fresh=0,
-                              dropped=0, lanes_cold=0, identity=True)
-        elif not ids_agree:
-            warm_stats = dict(warm_fraction=0.0, matched=0, fresh=0,
-                              dropped=0, lanes_cold=k, identity=False,
-                              reason="entity id spaces differ (one side has "
-                                     "entity_ids, the other is positional)")
-        elif prev_plan is not None:
-            ws = remap_warm(prev_plan, p, warm, ops=ops)
-            warm_in = ws
-            warm_stats = ws.stats
-
     t1 = time.perf_counter()
-    res = solve(problem, p, ops, backend=backend, engine=engine,
-                solver_kw=solver_kw, backend_opts=backend_opts, warm=warm_in)
+    res, backend_name, engine_name = backends_mod.solve_one_ex(
+        op, problem.K_mv, problem.KT_mv, solver_kw,
+        backend=exec_cfg.backend, engine=exec_cfg.engine, warm=warm,
+        **exec_cfg.opts_dict())
     solve_time = time.perf_counter() - t1
-
-    alloc = reduce(problem, p, ops, res)
-    return POPResult(
-        alloc=alloc, idx=p.idx,
-        solve_time_s=solve_time, build_time_s=build_time,
-        iterations=np.asarray(res.iterations),
-        converged=np.asarray(res.converged),
-        similarity=p.similarity or {},
-        sub_objectives=np.asarray(res.primal_obj),
-        replication=p.replication,
-        x=np.asarray(res.x), y=np.asarray(res.y),
-        plan=p, warm_stats=warm_stats,
-    )
+    idx = np.arange(problem.n_entities)
+    alloc = np.asarray(problem.extract(op, np.asarray(res.x), idx))
+    return FullResult(alloc=alloc, res=res, solve_time_s=solve_time,
+                      build_time_s=build_time, backend=backend_name,
+                      engine=engine_name)
 
 
 def solve_full(problem: POPProblem, solver_kw: Optional[dict] = None,
                warm: Optional[SolveResult] = None, *,
                backend: str = "auto", engine: str = "auto",
                backend_opts: Optional[dict] = None):
-    """Unpartitioned baseline (the paper's 'original problem') as a k=1
-    stack through the SAME execution substrate as the POP path — so
-    full-problem baselines get the fused step engine, explicit backend
-    selection and the jit-cached map solver too.  ``warm`` re-solves from a
-    previous full-problem :class:`SolveResult`."""
-    solver_kw = dict(solver_kw or {})
-    t0 = time.perf_counter()
-    op = problem.build_full()
-    build_time = time.perf_counter() - t0
-    t1 = time.perf_counter()
-    res = backends_mod.solve_one(op, problem.K_mv, problem.KT_mv, solver_kw,
-                                 backend=backend, engine=engine, warm=warm,
-                                 **(backend_opts or {}))
-    solve_time = time.perf_counter() - t1
-    idx = np.arange(problem.n_entities)
-    alloc = np.asarray(problem.extract(op, np.asarray(res.x), idx))
-    return alloc, res, solve_time, build_time
+    """Tuple-returning wrapper over :func:`solve_full_ex` (the historical
+    surface: ``(alloc, res, solve_time, build_time)``)."""
+    r = solve_full_ex(
+        problem, warm=warm,
+        exec_cfg=ExecConfig(backend=backend, engine=engine,
+                            solver_kw=dict(solver_kw or {}),
+                            backend_opts=dict(backend_opts or {})))
+    return r.alloc, r.res, r.solve_time_s, r.build_time_s

@@ -1,0 +1,43 @@
+"""Declarative POP domain registry — one public onboarding path for every
+scenario.
+
+A domain is a :class:`DomainSpec` (``base.py``): an entity model, an LP
+builder in operator form, warm-start layout, reduce/rounding hooks — data,
+not a subclass.  Register it (``register``) and
+``repro.service.PopService`` sessions drive it through the generic
+``plan -> build -> solve -> reduce`` pipeline with zero domain branches in
+``core/``.
+
+Importing this package registers the built-in paper domains plus the MoE
+placement scenario:
+
+====================  =====================================================
+``gavel``             max-min fair cluster scheduling (§3.1)
+``traffic``           WAN traffic engineering (§3.2)
+``load_balance``      E-Store shard/query load balancing (§3.3)
+``moe_placement``     MoE expert placement (the §3.3 MILP re-targeted at
+                      an expert fleet; onboarded through the registry
+                      alone — the template for new scenarios)
+====================  =====================================================
+"""
+
+from .base import DomainSpec, SpecProblem, StepOutcome
+from .registry import get, names, register, spec_for
+
+# built-in domains self-register on import
+from . import gavel           # noqa: F401  (registers "gavel")
+from . import traffic         # noqa: F401  (registers "traffic")
+from . import load_balance    # noqa: F401  (registers "load_balance")
+from . import moe_placement   # noqa: F401  (registers "moe_placement")
+
+from .gavel import GavelInstance
+from .load_balance import BalanceInstance
+from .moe_placement import (MoEPlacementInstance, greedy_placement,
+                            make_placement_instance, place_experts)
+
+__all__ = [
+    "DomainSpec", "SpecProblem", "StepOutcome",
+    "register", "get", "names", "spec_for",
+    "GavelInstance", "BalanceInstance", "MoEPlacementInstance",
+    "make_placement_instance", "place_experts", "greedy_placement",
+]

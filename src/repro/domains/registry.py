@@ -1,0 +1,61 @@
+"""The domain registry: name -> :class:`~repro.domains.base.DomainSpec`.
+
+One flat dict plus lookup helpers.  Built-in paper domains self-register
+at ``repro.domains`` import time; external code registers its own spec the
+same way:
+
+    from repro.domains import DomainSpec, register
+
+    register(DomainSpec(name="my_domain", instance_types=(MyInstance,),
+                        n_entities=..., entity_attrs=..., build_sub=...,
+                        K_mv=..., KT_mv=..., extract=...))
+
+after which ``PopService.session(tenant, MyInstance(...))`` just works —
+the service infers the domain from the instance type (:func:`spec_for`),
+or takes an explicit ``domain="my_domain"``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .base import DomainSpec
+
+_REGISTRY: Dict[str, DomainSpec] = {}
+
+
+def register(spec: DomainSpec, *, replace: bool = False) -> DomainSpec:
+    """Add ``spec`` under ``spec.name``.  Re-registering an existing name
+    is an error unless ``replace=True`` (guards against two modules
+    silently fighting over a name)."""
+    if not replace and spec.name in _REGISTRY:
+        raise ValueError(f"domain {spec.name!r} is already registered "
+                         "(pass replace=True to override)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> DomainSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown domain {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def spec_for(instance: Any) -> Optional[DomainSpec]:
+    """Infer the domain of ``instance`` from registered ``instance_types``
+    (most-derived match wins; None when no registered type matches)."""
+    best: Optional[DomainSpec] = None
+    best_depth = -1
+    for spec in _REGISTRY.values():
+        for t in spec.instance_types:
+            if isinstance(instance, t):
+                depth = len(type(instance).__mro__) - len(t.__mro__)
+                # prefer the registration closest to the concrete type
+                if best is None or depth < best_depth:
+                    best, best_depth = spec, depth
+    return best

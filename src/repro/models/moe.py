@@ -89,20 +89,50 @@ def moe(p, x, *, top_k: int, capacity_factor: float = 1.25,
 
 
 # ---------------------------------------------------------------------------
-# POP-based expert placement (the paper's load-balancing MILP, reused)
+# POP-based expert placement (the registered ``moe_placement`` domain)
 # ---------------------------------------------------------------------------
+
+def expert_gate_load(p, x, *, top_k: int) -> np.ndarray:
+    """Per-expert routing load from the router's gate statistics — the
+    demand vector for POP expert placement (``repro.domains.
+    moe_placement``): run the same top-k routing as :func:`moe` and sum
+    each expert's normalised gate mass over every (batch, position,
+    choice).  ``x``: [B, S, D]."""
+    dt = x.dtype
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)          # [B,S,k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    E = p["router"].shape[1]
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)    # [B,S,k,E]
+    return np.asarray(jnp.einsum("bsk,bske->e", gate_vals, onehot),
+                      np.float64)
+
 
 def plan_expert_placement(expert_load: np.ndarray, n_devices: int,
                           current: np.ndarray | None = None, k: int = 4,
                           seed: int = 0, backend: str = "auto"):
-    """Place experts on devices balancing routing load while minimising
-    expert-weight movement from ``current`` — literally the paper's §3.3
-    MILP with experts as shards.  Returns device id per expert."""
-    from ..problems.load_balancing import balance_placement
+    """Place experts on devices to maximise the gate load served under
+    per-device compute and memory caps, migrating as little expert-weight
+    memory as possible — the registered ``moe_placement`` domain (the
+    paper's technique, fourth scenario).  Returns device id per expert."""
+    from ..core.config import ExecConfig, SolveConfig
+    from ..domains.moe_placement import (MoEPlacementInstance, SPEC,
+                                         place_experts)
 
+    expert_load = np.asarray(expert_load, np.float64)
     E = expert_load.shape[0]
-    res = balance_placement(
-        expert_load, n_devices, current,
+    if current is None:
+        current = np.arange(E) % n_devices
+    inst = MoEPlacementInstance(
+        load=expert_load, mem=np.ones(E),
+        current=np.asarray(current, np.int64),
         cap=np.full(n_devices, np.ceil(2.0 * E / n_devices)),
-        eps_frac=0.2, pop_k=k, seed=seed, backend=backend)
-    return res.placement
+        compute=np.full(n_devices, expert_load.sum() / n_devices))
+    placement, _, _ = place_experts(
+        inst,
+        solve_cfg=SolveConfig(k=k, strategy="stratified", seed=seed,
+                              min_per_sub=SPEC.default_solve.min_per_sub),
+        exec_cfg=ExecConfig(backend=backend,
+                            solver_kw=SPEC.default_exec.solver_kw))
+    return placement

@@ -366,9 +366,9 @@ class LoadBalanceProblem:
         warm_b = None
         if state is not None and state["x"].shape == op.c.shape:
             warm_b = (state["x"], state["y"])
-        res = backends_mod.solve_one(op, _k_mv, _kt_mv, solver_kw,
-                                     backend=backend, engine=engine,
-                                     warm=warm_b)
+        res, backend_name, engine_name = backends_mod.solve_one_ex(
+            op, _k_mv, _kt_mv, solver_kw, backend=backend, engine=engine,
+            warm=warm_b)
         r = np.asarray(res.x).reshape(wl.n_shards, wl.n_servers)
         placement = self._round_repair(r, shards, servers,
                                        L_target=wl.target, eps_eff=eps_eff)
@@ -376,6 +376,11 @@ class LoadBalanceProblem:
         ev = self.evaluate(placement)
         ev["iterations"] = int(res.iterations)
         ev["full_state"] = dict(x=np.asarray(res.x), y=np.asarray(res.y))
+        # observability: what actually ran ("auto" resolved) + plan cache
+        ev["backend"] = backend_name
+        ev["engine"] = engine_name
+        ev["plan_cache"] = "full"
+        ev["k"] = 1
         return LBResult(placement=placement, movement=ev["movement"],
                         max_load_dev=ev["max_load_dev"],
                         feasible=ev["load_feasible"] and ev["mem_feasible"],
@@ -413,6 +418,7 @@ class LoadBalanceProblem:
                  and state["n_shards"] == wl.n_shards
                  and np.array_equal(
                      state.get("ids", np.arange(state["n_shards"])), ids))
+        grouping_kept = False
         if reuse:
             groups = state["groups"]
             shard_sets = state["shard_sets"]
@@ -430,6 +436,7 @@ class LoadBalanceProblem:
                 # lane context)
                 groups = state["groups"]
                 s_pad = state["s_pad"]
+                grouping_kept = True
             else:
                 # deal servers into k groups by descending current load
                 # (stratified)
@@ -490,8 +497,10 @@ class LoadBalanceProblem:
             else:
                 warm_xy, warm_fraction = _remap_lb_state(
                     state, ids, groups, shard_sets, n_pad, s_pad)
+        backend_name, engine_run, _ = backends_mod.resolve_exec(
+            batched, _k_mv, _kt_mv, backend, engine)
         res = backends_mod.solve_map(batched, _k_mv, _kt_mv, solver_kw,
-                                     backend=backend, engine=engine,
+                                     backend=backend_name, engine=engine_run,
                                      warm=warm_xy)
         jax.block_until_ready(res.x)
         placement = wl.placement.copy()
@@ -503,6 +512,14 @@ class LoadBalanceProblem:
         ev = self.evaluate(placement)
         ev["iterations"] = int(np.asarray(res.iterations).sum())
         ev["warm_fraction"] = warm_fraction
+        # observability: what actually ran + how the previous grouping was
+        # reused ("hit" = verbatim, "repair" = server grouping kept across
+        # shard churn, "miss" = fresh grouping)
+        ev["backend"] = backend_name
+        ev["engine"] = pdhg.engine_name(engine_run)
+        ev["plan_cache"] = ("hit" if reuse
+                            else "repair" if grouping_kept else "miss")
+        ev["k"] = k
         ev["pop_state"] = dict(
             k=k, n_shards=wl.n_shards, ids=ids, groups=groups,
             shard_sets=shard_sets, s_pad=s_pad, n_pad=n_pad,

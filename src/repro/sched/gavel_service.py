@@ -1,15 +1,19 @@
 """Cluster scheduler service: POP-accelerated Gavel for the training fleet.
 
-This is where the paper's technique becomes a first-class feature of the
-framework: the scheduler periodically recomputes the fleet-wide max-min
-fair allocation of accelerator types to training jobs (the LM archs in
-``repro.configs``) by solving the Gavel LP through POP — so a 10k-job fleet
-reallocates in seconds instead of the ~30 minutes the paper quotes for the
-full formulation.
+DEPRECATED surface: :class:`GavelScheduler` is now a thin forwarder onto
+the one public API — a :class:`repro.service.PopService` session over the
+registered ``gavel`` domain (``repro.domains.gavel``).  It keeps the
+job-book-keeping conveniences (submit/remove/heartbeats -> stable entity
+ids) and produces bit-identical allocations to the pre-session scheduler,
+but new code should drive the session directly:
 
-Flow per scheduling round:
+    service = PopService()
+    session = service.session("fleet", GavelInstance(wl, job_ids=eids))
+    alloc = session.step(GavelInstance(wl, job_ids=eids))   # per round
+
+Flow per scheduling round (unchanged):
     observe() -> jobs + measured throughputs     (from job heartbeats)
-    allocate() -> POP-k Gavel solve              (core/pop + problems/*)
+    allocate() -> POP-k Gavel solve              (one session.step)
     to_assignments() -> per-job (resource type, time fraction) leases
 """
 
@@ -17,12 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, Optional
 
 import numpy as np
 
-from ..core import pop
-from ..problems.cluster_scheduling import ClusterWorkload, GavelProblem
+from ..core.config import ExecConfig, SolveConfig
+from ..domains.gavel import GavelInstance
+from ..problems.cluster_scheduling import ClusterWorkload
+from ..service import PopService
 
 
 @dataclasses.dataclass
@@ -52,22 +59,33 @@ class SchedulerConfig:
 
 
 class GavelScheduler:
+    """DEPRECATED: drive ``PopService.session(...,
+    GavelInstance(...))`` directly; this class forwards onto exactly that
+    session (same solves, bit-identical allocations) and only adds the
+    job-dict plumbing."""
+
     def __init__(self, cfg: SchedulerConfig):
+        warnings.warn(
+            "GavelScheduler is deprecated: use repro.service.PopService"
+            ".session(tenant, repro.domains.GavelInstance(...)) — this "
+            "class forwards onto that session (results are identical)",
+            DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.jobs: Dict[str, JobSpec] = {}
         self.last_alloc: Optional[np.ndarray] = None
         self.last_round_time: float = 0.0
-        # warm-start state: POPResult / SolveResult of the previous round.
-        # Successive rounds see EMA-drifted throughputs — the textbook
-        # online re-solve — AND job churn (submits/removes).  Each job gets
-        # a stable numeric id at submit; pop_solve(warm=, entity_ids=)
-        # matches surviving jobs across rounds and remaps their iterates
-        # onto the new round's plan, so the warm start survives churn
-        # instead of falling back to cold whenever the job set changes.
-        self._warm = None
+        # the one public API: a per-fleet session.  Warm-start state (plan
+        # reuse, churn repair, id-matched warm remaps) lives INSIDE it —
+        # successive rounds see EMA-drifted throughputs and job churn, and
+        # the session chains warm state through both.
+        self._session = PopService().session(
+            "gavel-fleet", domain="gavel",
+            solve=SolveConfig(k=cfg.pop_k, strategy="stratified",
+                              min_per_sub=8),
+            exec=ExecConfig(backend=cfg.map_backend,
+                            solver_kw=dict(cfg.solver_kw)))
         self._eids: Dict[str, int] = {}
         self._next_eid: int = 0
-        self._warm_full_eids: tuple = ()   # k=1 path: jobs the warm is FOR
         self.last_warm_fraction: Optional[float] = None
 
     # ------------------------------------------------------------- job API --
@@ -104,43 +122,22 @@ class GavelScheduler:
         )
 
     def allocate(self) -> Dict[str, np.ndarray]:
-        """One scheduling round: POP-k Gavel solve -> {job: X_row}.  Warm
-        state chains through job churn: surviving jobs are matched by their
-        stable id and continue from their previous iterates (new arrivals
-        start from population priors, see ``core/plan.py``); only a POP <->
-        full-problem mode flip drops the warm state.  ``warm_fraction``
-        (matched share, via :meth:`fairness_report`) is logged per round."""
+        """One scheduling round = one ``session.step``: the session reuses
+        or repairs its plan, matches surviving jobs by their stable id and
+        continues from their previous iterates (new arrivals start from
+        population priors — ``core/plan.py``); only a POP <-> full-problem
+        mode flip drops the warm state.  ``warm_fraction`` (matched share,
+        via :meth:`fairness_report`) is logged per round."""
         if not self.jobs:
             return {}
         t0 = time.perf_counter()
-        wl = self._workload()
-        prob = GavelProblem(wl, space_sharing=self.cfg.space_sharing)
         eids = np.array([self._eids[j] for j in self.jobs], np.int64)
-        k = max(1, min(self.cfg.pop_k, len(self.jobs) // 8))
-        if k > 1:
-            warm = self._warm if isinstance(self._warm, pop.POPResult) else None
-            res = pop.pop_solve(prob, k, strategy="stratified",
-                                backend=self.cfg.map_backend,
-                                solver_kw=self.cfg.solver_kw,
-                                warm=warm, entity_ids=eids)
-            rho = res.alloc
-            self._warm = res
-            self.last_warm_fraction = (res.warm_stats["warm_fraction"]
-                                       if res.warm_stats else None)
-        else:
-            # full-problem path (tiny fleets): the flat LP has no per-entity
-            # remap, so warm only while the job IDENTITY sequence is
-            # unchanged (a same-size swap would silently misalign rows) —
-            # below the POP threshold a cold solve is cheap anyway
-            full_warm = self._warm if not isinstance(self._warm,
-                                                     pop.POPResult) else None
-            if full_warm is not None and tuple(eids) != self._warm_full_eids:
-                full_warm = None
-            rho, res, _, _ = pop.solve_full(prob, solver_kw=self.cfg.solver_kw,
-                                            warm=full_warm)
-            self._warm = res
-            self._warm_full_eids = tuple(eids)
-            self.last_warm_fraction = None if full_warm is None else 1.0
+        inst = GavelInstance(self._workload(),
+                             space_sharing=self.cfg.space_sharing,
+                             job_ids=eids)
+        result = self._session.step(inst)
+        rho = result.alloc
+        self.last_warm_fraction = result.warm_fraction
         self.last_round_time = time.perf_counter() - t0
         self.last_alloc = rho
         return {j.job_id: rho[i] for i, j in enumerate(self.jobs.values())}

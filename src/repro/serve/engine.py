@@ -101,31 +101,47 @@ def balance_requests(load: np.ndarray, n_replicas: int,
                      solver_kw: Optional[dict] = None,
                      warm: Optional[BalanceResult] = None,
                      group_ids: Optional[np.ndarray] = None) -> BalanceResult:
-    """Place request groups onto decode replicas balancing generation load
-    while keeping sticky sessions where they are — the paper's §3.3 MILP
-    with request groups as shards.  ``backend`` selects the POP map-step
-    execution backend, ``engine`` the PDHG step engine (``core/backends.py``
-    / ``core/pdhg.py``).
+    """DEPRECATED: place request groups onto decode replicas — the paper's
+    §3.3 MILP with request groups as shards — by forwarding onto the one
+    public API, a :class:`repro.service.PopService` session over the
+    registered ``load_balance`` domain (results are bit-identical).  New
+    code should hold a long-lived session instead of hand-carrying the
+    previous tick's :class:`BalanceResult` through ``warm=``:
 
-    Serving loads drift tick to tick, so pass the previous tick's
-    :class:`BalanceResult` as ``warm`` — the re-solve then starts from the
-    previous iterates instead of cold.  Request groups also ARRIVE and
-    FINISH between ticks: pass stable ``group_ids`` (session ids) and the
-    warm state survives the churn — surviving groups are matched by id and
-    their iterates remapped onto the new tick's sub-problems, arrivals
-    start from population priors (``warm_fraction`` reports the matched
-    share)."""
-    from ..problems.load_balancing import balance_placement
+        session = service.session("balancer", BalanceInstance(...))
+        alloc = session.step(BalanceInstance(load, n_replicas, current,
+                                             eps_frac=0.25, ids=group_ids))
 
+    — the session chains warm state through load drift AND group churn
+    (stable ``ids`` match surviving groups; ``alloc.warm_fraction``
+    reports the matched share) without any caller-side threading."""
+    import warnings
+
+    from ..core.config import ExecConfig, SolveConfig
+    from ..domains.load_balance import BalanceInstance
+    from ..service import PopService
+
+    warnings.warn(
+        "balance_requests is deprecated: use repro.service.PopService"
+        ".session(tenant, repro.domains.BalanceInstance(...)) — this "
+        "function forwards onto that session (results are identical)",
+        DeprecationWarning, stacklevel=2)
     load = np.asarray(load, np.float64)
     if current is None:
         current = np.arange(load.shape[0]) % n_replicas
     if solver_kw is None:           # explicit {} means "solver defaults"
         solver_kw = dict(max_iters=6_000)
-    res = balance_placement(
-        load, n_replicas, current, eps_frac=eps_frac, pop_k=pop_k,
-        backend=backend, engine=engine, solver_kw=dict(solver_kw),
-        warm=None if warm is None else warm.lb, shard_ids=group_ids)
+    inst = BalanceInstance(load=load, n_targets=n_replicas,
+                           current=np.asarray(current, np.int64),
+                           eps_frac=eps_frac, ids=group_ids)
+    session = PopService().session(
+        "serve.balance_requests", inst,
+        solve=SolveConfig(k=pop_k),
+        exec=ExecConfig(backend=backend, engine=engine,
+                        solver_kw=dict(solver_kw)))
+    session.seed(None if warm is None else warm.lb)
+    out = session.step(inst)
+    res = out.raw
     return BalanceResult(
         placement=res.placement,
         moved=int((res.placement != current).sum()),

@@ -1,0 +1,341 @@
+"""PopService: the one public door to the paper's technique.
+
+Every scenario — cluster scheduling, traffic engineering, load balancing,
+MoE expert placement, anything registered in ``repro.domains`` — is solved
+the same way:
+
+    from repro.service import PopService
+    from repro.core import SolveConfig, ExecConfig
+
+    service = PopService()                        # long-lived, multi-tenant
+    session = service.session("tenant-a", instance)   # domain inferred
+    alloc = session.step(instance)                # -> Allocation
+    ...
+    alloc = session.step(updated_instance)        # warm-started re-solve
+
+A :class:`PopService` is a long-lived object owning the config defaults,
+the jit/plan caches (plans live on the per-tenant warm state; compiled
+solvers are shared process-wide through ``core/backends.py``, keyed by the
+hashable :class:`~repro.core.config.ExecConfig` contents), and the
+per-tenant warm state.  A :class:`PopSession` is one tenant's stateful
+view: ``step(instance)`` is the single online entry point — plan reuse,
+incremental plan repair under churn (``core/plan.repair_plan``),
+cross-plan warm-start remapping (``core/plan.remap_warm``), stable-id
+threading and ``warm_fraction`` reporting all happen inside, so callers
+stop hand-carrying ``POPResult``s between ticks.
+
+Every step returns an :class:`Allocation` that reports the backend and
+engine that ACTUALLY ran (``"auto"`` resolved — invisible to callers
+before this layer existed) and how the plan cache behaved (``"hit"`` /
+``"repair"`` / ``"miss"`` / ``"full"``); the service aggregates those into
+:meth:`PopService.stats` for fleet dashboards and the session bench.
+
+Domains enter through the declarative registry (``repro.domains``) — the
+legacy doors (``pop_solve``, ``GavelScheduler``, ``balance_requests``)
+forward here and warn.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from .core import pop as pop_mod
+from .core.config import ExecConfig, SolveConfig
+from .core.pdhg import SolveResult
+from .domains import DomainSpec, StepOutcome, registry as registry_mod
+
+__all__ = ["Allocation", "PopService", "PopSession"]
+
+
+@dataclasses.dataclass
+class Allocation:
+    """One session step's outcome — the uniform cross-domain result.
+
+    ``alloc`` is the domain allocation (per-job throughputs, per-demand
+    flows, a placement vector, ...), already through the domain's rounding
+    hook when it has one; ``raw`` is the underlying
+    :class:`~repro.core.pop.POPResult` / :class:`~repro.core.pop.FullResult`
+    / domain result for callers that need solver state or sub-LP detail.
+    """
+
+    domain: str
+    tenant: str
+    step: int
+    alloc: np.ndarray
+    metrics: dict
+    # observability: what ACTUALLY ran ("auto" resolved), and how the plan
+    # cache behaved: "hit" (previous plan reused verbatim), "repair"
+    # (incrementally repaired under churn), "miss" (fresh plan), "full"
+    # (unpartitioned k=1 path)
+    backend: Optional[str]
+    engine: Optional[str]
+    plan_cache: str
+    k: int
+    warm_fraction: Optional[float]
+    solve_time_s: float
+    build_time_s: float
+    iterations: int
+    raw: Any = None
+
+    @property
+    def objective(self) -> Optional[float]:
+        return self.metrics.get("objective")
+
+
+def _zeros() -> dict:
+    return {"steps": 0, "plan_hits": 0, "plan_repairs": 0, "plan_misses": 0,
+            "full_solves": 0, "solve_time_s": 0.0, "warm_fraction_sum": 0.0,
+            "warm_steps": 0}
+
+
+def _tally(stats: dict, alloc: Allocation) -> None:
+    stats["steps"] += 1
+    key = {"hit": "plan_hits", "repair": "plan_repairs",
+           "full": "full_solves"}.get(alloc.plan_cache, "plan_misses")
+    stats[key] += 1
+    stats["solve_time_s"] += alloc.solve_time_s
+    if alloc.warm_fraction is not None:
+        stats["warm_fraction_sum"] += alloc.warm_fraction
+        stats["warm_steps"] += 1
+
+
+class PopSession:
+    """One tenant's stateful solving loop for one domain.
+
+    Holds the warm state (previous plan + iterates) between steps; every
+    ``step(instance)`` re-solves the updated instance warm wherever the
+    domain's layout allows, cold otherwise — the caller never touches
+    solver state.  Create through :meth:`PopService.session`.
+    """
+
+    def __init__(self, service: "PopService", tenant: str, spec: DomainSpec,
+                 solve_cfg: SolveConfig, exec_cfg: ExecConfig):
+        self.service = service
+        self.tenant = tenant
+        self.spec = spec
+        self.solve_cfg = solve_cfg
+        self.exec_cfg = exec_cfg
+        self.steps = 0
+        self.last: Optional[Allocation] = None
+        self.stats = _zeros()
+        # warm state: a POPResult (pop path), a SolveResult (+ the ids it
+        # is FOR, full path), or whatever a step_override domain carries
+        self._warm: Any = None
+        self._mode: Optional[str] = None
+        self._full_ids: Optional[tuple] = None
+
+    # ------------------------------------------------------------------ api --
+    def seed(self, warm_state: Any, mode: Optional[str] = None,
+             entity_ids=None) -> "PopSession":
+        """Adopt externally carried warm state (restores a session from a
+        previous process / the legacy hand-carried-result surface).
+
+        ``mode`` is inferred from the state's type when omitted: a
+        :class:`~repro.core.pop.POPResult` seeds the pop path, a
+        :class:`~repro.core.pop.FullResult` / ``SolveResult`` the k=1 full
+        path, anything else the domain's own ``step_override`` state.
+        Restoring FULL-path state additionally needs ``entity_ids`` — the
+        ids the iterates are FOR (pass the plain entity COUNT for domains
+        without an ``entity_ids`` hook; the flat LP has no per-entity
+        remap, only an alignment check); without them the first step
+        safely starts cold."""
+        if mode is None:
+            if isinstance(warm_state, pop_mod.POPResult):
+                mode = "pop"
+            elif isinstance(warm_state, (pop_mod.FullResult, SolveResult)):
+                mode = "full"
+            else:
+                mode = "domain"
+        if mode == "full":
+            if isinstance(warm_state, pop_mod.FullResult):
+                warm_state = warm_state.res
+            if entity_ids is None:
+                self._full_ids = None
+            elif np.isscalar(entity_ids):
+                # positional domains: ids ARE positions, so the alignment
+                # key is just the entity count (see _step_generic)
+                self._full_ids = ("pos", int(entity_ids))
+            else:
+                self._full_ids = tuple(np.asarray(entity_ids).tolist())
+        self._warm = warm_state
+        self._mode = mode if warm_state is not None else None
+        return self
+
+    def step(self, instance: Any) -> Allocation:
+        """Solve the (updated) instance; warm-start from the previous step
+        wherever the domain allows.  The single online entry point."""
+        if self.spec.step_override is not None:
+            out: StepOutcome = self.spec.step_override(
+                instance, self.solve_cfg, self.exec_cfg, self._warm)
+            self._warm, self._mode = out.warm_state, "domain"
+            alloc = self._wrap(
+                instance, out.alloc, out.metrics, backend=out.backend,
+                engine=out.engine, plan_cache=out.plan_cache, k=out.k,
+                warm_fraction=out.warm_fraction,
+                solve_time_s=out.solve_time_s,
+                build_time_s=out.build_time_s,
+                iterations=out.iterations, raw=out.raw)
+        else:
+            alloc = self._step_generic(instance)
+        self.steps += 1
+        _tally(self.stats, alloc)
+        _tally(self.service._stats, alloc)
+        self.last = alloc
+        return alloc
+
+    # ------------------------------------------------------- generic domains --
+    def _step_generic(self, instance: Any) -> Allocation:
+        spec = self.spec
+        problem = spec.make_problem(instance)
+        eids = spec.ids_of(instance)
+        k = self.solve_cfg.k_for(problem.n_entities)
+        if k > 1:
+            warm = self._warm if self._mode == "pop" else None
+            res = pop_mod.solve_instance(
+                problem, dataclasses.replace(self.solve_cfg, k=k),
+                self.exec_cfg, warm=warm, entity_ids=eids)
+            self._warm, self._mode = res, "pop"
+            raw_alloc = res.alloc
+            cache = {"reused": "hit", "repaired": "repair"}.get(
+                res.plan_source, "miss")
+            wf = res.warm_stats["warm_fraction"] if res.warm_stats else None
+            out = self._wrap(
+                instance, raw_alloc, None, problem=problem,
+                backend=res.backend, engine=res.engine, plan_cache=cache,
+                k=k, warm_fraction=wf, solve_time_s=res.solve_time_s,
+                build_time_s=res.build_time_s,
+                iterations=int(np.asarray(res.iterations).sum()), raw=res)
+            return out
+        # ---- k=1: the unpartitioned full problem through the same substrate.
+        # The flat LP has no per-entity remap, so warm only while the entity
+        # identity sequence is unchanged (a same-size swap would silently
+        # misalign rows); crossing the pop<->full mode boundary drops warm.
+        ids_key = (tuple(np.asarray(eids).tolist()) if eids is not None
+                   else ("pos", problem.n_entities))
+        warm = self._warm if self._mode == "full" else None
+        if warm is not None and (self._full_ids is None
+                                 or ids_key != self._full_ids):
+            warm = None
+        fr = pop_mod.solve_full_ex(problem, warm=warm, exec_cfg=self.exec_cfg)
+        self._warm, self._mode = fr.res, "full"
+        self._full_ids = ids_key
+        return self._wrap(
+            instance, fr.alloc, None, problem=problem, backend=fr.backend,
+            engine=fr.engine, plan_cache="full", k=1,
+            warm_fraction=None if warm is None else 1.0,
+            solve_time_s=fr.solve_time_s, build_time_s=fr.build_time_s,
+            iterations=int(np.asarray(fr.res.iterations).sum()), raw=fr)
+
+    def _wrap(self, instance, raw_alloc, metrics, *, backend, engine,
+              plan_cache, k, warm_fraction, solve_time_s, build_time_s=0.0,
+              iterations=0, raw=None, problem=None) -> Allocation:
+        alloc = raw_alloc
+        if self.spec.round is not None and self.spec.step_override is None:
+            alloc = self.spec.round(instance, raw_alloc)
+        if metrics is None:
+            metrics = self.spec.metrics_of(instance, problem, alloc)
+        return Allocation(
+            domain=self.spec.name, tenant=self.tenant, step=self.steps,
+            alloc=alloc, metrics=metrics, backend=backend, engine=engine,
+            plan_cache=plan_cache, k=k, warm_fraction=warm_fraction,
+            solve_time_s=solve_time_s, build_time_s=build_time_s,
+            iterations=iterations, raw=raw)
+
+
+class PopService:
+    """Long-lived, multi-tenant POP solving service.
+
+    Owns the default configs and the per-tenant sessions (warm state +
+    plans); compiled solvers are shared across sessions whose
+    :class:`ExecConfig` matches (the configs are hashable and key the jit
+    caches in ``core/backends.py``)."""
+
+    def __init__(self, solve: Optional[SolveConfig] = None,
+                 exec: Optional[ExecConfig] = None):
+        # None means "not set" (domain defaults win); an explicit config —
+        # even one equal to the library default — overrides them
+        self._service_solve = solve
+        self._service_exec = exec
+        self.solve_cfg = solve or SolveConfig()
+        self.exec_cfg = exec or ExecConfig()
+        self._sessions: Dict[str, PopSession] = {}
+        self._stats = _zeros()
+        self.created = time.time()
+
+    def session(self, tenant: str, instance: Any = None, *,
+                domain: Optional[str] = None,
+                solve: Optional[SolveConfig] = None,
+                exec: Optional[ExecConfig] = None) -> PopSession:
+        """The session for ``tenant``, created on first use.
+
+        The domain comes from ``domain=`` (a registry name) or is inferred
+        from ``instance``'s type (``repro.domains.spec_for``).  Configs
+        default to the domain's registered defaults, overridden by the
+        service-level configs only where the caller set them explicitly at
+        service construction, then by ``solve=`` / ``exec=`` here.  An
+        existing session is returned as-is (its configs are pinned at
+        creation); asking for the same tenant with a DIFFERENT domain is
+        an error — tenants are per-domain state."""
+        sess = self._sessions.get(tenant)
+        if sess is not None:
+            # configs are pinned at creation: explicitly asking for a
+            # DIFFERENT one must not be silently ignored
+            if solve is not None and solve != sess.solve_cfg:
+                raise ValueError(
+                    f"tenant {tenant!r} session is pinned to "
+                    f"{sess.solve_cfg}; end_session() it to re-create with "
+                    f"{solve} (configs are set at session creation)")
+            if exec is not None and exec != sess.exec_cfg:
+                raise ValueError(
+                    f"tenant {tenant!r} session is pinned to "
+                    f"{sess.exec_cfg}; end_session() it to re-create with "
+                    f"{exec} (configs are set at session creation)")
+        if domain is not None:
+            spec = registry_mod.get(domain)
+        elif instance is not None:
+            spec = registry_mod.spec_for(instance)
+            if spec is None:
+                raise ValueError(
+                    f"no registered domain matches instance type "
+                    f"{type(instance).__name__!r}; register a DomainSpec "
+                    "with that instance_types or pass domain=")
+        elif sess is not None:
+            return sess                  # re-entry by tenant name alone
+        else:
+            raise ValueError("session() needs an instance (to infer the "
+                             "domain) or an explicit domain= name")
+        if sess is not None:
+            if sess.spec.name != spec.name:
+                raise ValueError(
+                    f"tenant {tenant!r} already has a {sess.spec.name!r} "
+                    f"session; one tenant cannot switch to {spec.name!r} "
+                    "(sessions are per-domain warm state)")
+            return sess
+        sess = PopSession(
+            self, tenant, spec,
+            solve or self._service_solve or spec.default_solve,
+            exec or self._service_exec or spec.default_exec)
+        self._sessions[tenant] = sess
+        return sess
+
+    def end_session(self, tenant: str) -> None:
+        """Drop a tenant's session (and its warm state / cached plan)."""
+        self._sessions.pop(tenant, None)
+
+    def tenants(self) -> tuple:
+        return tuple(sorted(self._sessions))
+
+    def stats(self) -> dict:
+        """Service-wide observability: step counts, plan-cache hit rates,
+        aggregate solve time, mean warm fraction."""
+        s = dict(self._stats)
+        steps = max(s["steps"], 1)
+        s["plan_hit_rate"] = s["plan_hits"] / steps
+        s["warm_fraction_mean"] = (s["warm_fraction_sum"] / s["warm_steps"]
+                                   if s["warm_steps"] else None)
+        s["n_sessions"] = len(self._sessions)
+        return s

@@ -1,0 +1,48 @@
+"""Tier-1 gate on the public API surface.
+
+A fresh render of the exported names + signatures must match the
+committed snapshot (``docs/api_surface.txt``).  Intentional surface
+changes regenerate it (``make api-snapshot``) and commit the diff — the
+gate exists so the diff SHOWS UP, not to freeze the API forever."""
+
+import difflib
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_script():
+    spec = importlib.util.spec_from_file_location(
+        "api_surface", REPO / "scripts" / "api_surface.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_api_surface_matches_snapshot():
+    mod = _load_script()
+    fresh = mod.render()
+    snapshot_path = REPO / "docs" / "api_surface.txt"
+    assert snapshot_path.exists(), (
+        "docs/api_surface.txt is missing — run `make api-snapshot`")
+    committed = snapshot_path.read_text()
+    if fresh != committed:
+        diff = "\n".join(difflib.unified_diff(
+            committed.splitlines(), fresh.splitlines(),
+            "docs/api_surface.txt (committed)", "fresh render", lineterm=""))
+        raise AssertionError(
+            "public API surface drifted from the committed snapshot.\n"
+            "If intentional: run `make api-snapshot` and commit the diff.\n"
+            + diff)
+
+
+def test_snapshot_covers_new_surface():
+    """The snapshot must pin the redesigned entry points by name."""
+    text = (REPO / "docs" / "api_surface.txt").read_text()
+    for needle in ("repro.service.PopService", "PopSession.step",
+                   "repro.domains.register", "repro.core.config.SolveConfig",
+                   "repro.core.config.ExecConfig",
+                   "repro.core.solve_instance"):
+        assert needle in text, f"{needle} missing from api_surface.txt"

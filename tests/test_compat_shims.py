@@ -1,0 +1,133 @@
+"""Back-compat shims: the legacy doors (``pop_solve``, ``GavelScheduler``,
+``balance_requests``) must (a) warn DeprecationWarning and (b) produce
+BIT-IDENTICAL allocations to the new single door
+(``PopService.session(...).step(...)``) on all three paper domains — they
+are thin forwarders, not parallel implementations."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import ExecConfig, SolveConfig, pop
+from repro.domains import BalanceInstance, GavelInstance
+from repro.problems.cluster_scheduling import make_cluster_workload
+from repro.problems.traffic_engineering import (TrafficProblem,
+                                                k_shortest_paths,
+                                                make_demands, make_topology)
+from repro.serve.engine import balance_requests
+from repro.service import PopService
+
+KW = dict(max_iters=300, tol_primal=1e-5, tol_gap=1e-5)
+
+
+def _traffic(n=24, seed=0):
+    topo = make_topology(20, 40, seed=seed)
+    pairs, dem = make_demands(topo, n, seed=seed)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=seed)
+    return TrafficProblem(topo, pairs, dem, pe)
+
+
+# ---------------------------------------------------------------------------
+# traffic: pop_solve(...) vs session.step(...)
+# ---------------------------------------------------------------------------
+
+def test_traffic_pop_solve_shim_bitident():
+    prob = _traffic()
+    with pytest.warns(DeprecationWarning, match="pop_solve"):
+        old = pop.pop_solve(prob, 3, strategy="stratified", solver_kw=KW)
+    sess = PopService().session(
+        "t", prob, solve=SolveConfig(k=3, strategy="stratified"),
+        exec=ExecConfig(solver_kw=KW))
+    new = sess.step(prob)
+    assert np.array_equal(old.alloc, new.alloc)
+    # warm tick: hand-carried warm= vs session-internal chaining
+    prob2 = TrafficProblem(prob.topo, prob.pairs, prob.demand * 1.03,
+                           prob.path_edges)
+    with pytest.warns(DeprecationWarning):
+        old2 = pop.pop_solve(prob2, 3, strategy="stratified", solver_kw=KW,
+                             warm=old)
+    new2 = sess.step(prob2)
+    assert np.array_equal(old2.alloc, new2.alloc)
+    assert new2.plan_cache == "hit"
+    assert old2.plan_source == "reused"
+
+
+# ---------------------------------------------------------------------------
+# gavel: GavelScheduler rounds vs hand-driven session steps
+# ---------------------------------------------------------------------------
+
+def test_gavel_scheduler_shim_bitident():
+    from repro.sched.gavel_service import (GavelScheduler, JobSpec,
+                                           SchedulerConfig)
+    rng = np.random.default_rng(0)
+    cfg = SchedulerConfig(pop_k=2, solver_kw=dict(KW))
+    with pytest.warns(DeprecationWarning, match="GavelScheduler"):
+        sched = GavelScheduler(cfg)
+    for i in range(32):
+        sched.submit(JobSpec(
+            job_id=f"j{i}", arch="llama3_8b",
+            priority=float(rng.choice([1.0, 2.0])),
+            throughputs=np.abs(rng.normal([1.0, 0.6, 0.8], 0.2)) + 0.05))
+
+    sess = PopService().session(
+        "fleet", domain="gavel",
+        solve=SolveConfig(k=2, strategy="stratified", min_per_sub=8),
+        exec=ExecConfig(backend=cfg.map_backend, solver_kw=dict(KW)))
+
+    # round 1 (cold), round 2 (drift, warm), round 3 (churn, repaired plan)
+    for round_no in range(3):
+        if round_no == 1:
+            sched.report_throughput("j0", np.array([0.2, 0.1, 0.15]))
+        if round_no == 2:
+            sched.remove("j1")
+            sched.submit(JobSpec(job_id="j99", arch="llama3_8b",
+                                 throughputs=np.array([1.0, 0.5, 0.7])))
+        alloc = sched.allocate()
+        eids = np.array([sched._eids[j] for j in sched.jobs], np.int64)
+        mine = sess.step(GavelInstance(sched._workload(), job_ids=eids))
+        assert np.array_equal(np.stack([np.atleast_1d(v)
+                                        for v in alloc.values()]).ravel(),
+                              np.asarray(mine.alloc).ravel()), round_no
+    assert sched.last_warm_fraction == mine.warm_fraction
+    assert mine.plan_cache == "repair"          # round 3 churned the fleet
+
+
+# ---------------------------------------------------------------------------
+# load balancing: balance_requests ticks vs session steps
+# ---------------------------------------------------------------------------
+
+def test_balance_requests_shim_bitident():
+    rng = np.random.default_rng(1)
+    n, rep = 40, 6
+    load = rng.uniform(1.0, 8.0, n)
+    current = rng.integers(0, rep, n)
+    gids = np.arange(n)
+
+    sess = PopService().session(
+        "bal", domain="load_balance", solve=SolveConfig(k=2),
+        exec=ExecConfig(solver_kw=dict(max_iters=6_000)))
+
+    with pytest.warns(DeprecationWarning, match="balance_requests"):
+        old = balance_requests(load, rep, current, pop_k=2, eps_frac=0.25,
+                               group_ids=gids)
+    new = sess.step(BalanceInstance(load=load, n_targets=rep,
+                                    current=current, eps_frac=0.25,
+                                    ids=gids))
+    assert np.array_equal(old.placement, new.alloc)
+    assert new.backend is not None and new.backend != "auto"
+
+    # churn tick: 5 groups finish, 5 arrive — warm survives via ids
+    keep = np.arange(5, n)
+    load2 = np.concatenate([load[keep] * 1.05, rng.uniform(1.0, 8.0, 5)])
+    cur2 = np.concatenate([old.placement[keep], rng.integers(0, rep, 5)])
+    gids2 = np.concatenate([gids[keep], n + np.arange(5)])
+    with pytest.warns(DeprecationWarning):
+        old2 = balance_requests(load2, rep, cur2, pop_k=2, eps_frac=0.25,
+                                warm=old, group_ids=gids2)
+    new2 = sess.step(BalanceInstance(load=load2, n_targets=rep,
+                                     current=cur2, eps_frac=0.25, ids=gids2))
+    assert np.array_equal(old2.placement, new2.alloc)
+    assert old2.warm_fraction == new2.warm_fraction
+    assert new2.warm_fraction is not None and new2.warm_fraction > 0.5
+    assert new2.plan_cache == "repair"          # server grouping kept

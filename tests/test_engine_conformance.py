@@ -258,3 +258,45 @@ def test_unknown_kkt_mode_rejected():
     ops, k_mv, kt_mv = _cluster_case()
     with pytest.raises(ValueError, match="kkt mode"):
         pdhg.solve_stacked(ops, engine="matvec", kkt="telepathy")
+
+
+# ---------------------------------------------------------------------------
+# observability: results must report the backend/engine that ACTUALLY ran
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("engine", ("matvec", "fused_structured"))
+def test_reported_execution_matches_forced_cell(backend, engine):
+    """Every forced (engine x backend) cell must come back on the
+    POPResult verbatim — the resolution layer may not silently substitute."""
+    wl = make_cluster_workload(16, num_workers=(6, 6, 6), seed=3)
+    prob = GavelProblem(wl, space_sharing=False)
+    from repro.core.config import ExecConfig, SolveConfig
+    opts = {"chunk": 2} if backend == "chunked_vmap" else {}
+    res = pop.solve_instance(
+        prob, SolveConfig(k=3, strategy="stratified"),
+        ExecConfig(backend=backend, engine=engine,
+                   solver_kw=FIXED_KW, backend_opts=opts))
+    assert res.backend == backend
+    assert res.engine == engine
+    assert res.plan_source == "fresh"
+
+
+def test_reported_execution_resolves_auto():
+    """backend="auto"/engine="auto" must be REPORTED as the concrete
+    resolution, never echoed back as "auto" — the observability gap this
+    PR closes."""
+    wl = make_cluster_workload(16, num_workers=(6, 6, 6), seed=3)
+    prob = GavelProblem(wl, space_sharing=False)
+    from repro.core.config import SolveConfig
+    res = pop.solve_instance(prob, SolveConfig(k=3, strategy="stratified"))
+    assert res.backend in backends_mod.MAP_BACKENDS
+    assert res.engine in ("matvec", "fused", "fused_structured")
+    # Gavel singleton combos carry StructuredOperator metadata -> auto
+    # must pick the structured-fused engine (pinned by
+    # test_auto_picks_structured_when_metadata_present at solve_map level)
+    assert res.engine == "fused_structured"
+    from repro.core.config import ExecConfig as _EC
+    full = pop.solve_full_ex(prob, exec_cfg=_EC(solver_kw=dict(FIXED_KW)))
+    assert full.backend in backends_mod.MAP_BACKENDS
+    assert full.engine == "fused_structured"

@@ -1,0 +1,38 @@
+"""Subprocess smoke tests for ``examples/`` — the de-facto API docs.
+
+Each example runs end-to-end in its fast mode in a child process (so a
+surface change that breaks an example fails tier-1 loudly instead of
+rotting silently) and must print its closing marker line."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from _subproc import repro_env
+
+EXAMPLES = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples")
+
+CASES = [
+    # (script, args, marker expected in stdout)
+    ("quickstart.py", ["--fast"], "MoE place"),
+    ("schedule_cluster.py", ["--fast"], "service stats"),
+    ("serve_balanced.py", ["--fast"], "decoded"),
+    ("train_e2e.py", ["--steps", "8", "--fail-at", "4",
+                      "--ckpt-every", "2"], "across restart"),
+]
+
+
+@pytest.mark.parametrize("script,args,marker",
+                         CASES, ids=[c[0] for c in CASES])
+def test_example_runs(script, args, marker):
+    proc = subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES, script), *args],
+        env=repro_env(), capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"{script} failed\n--- stdout ---\n{proc.stdout[-3000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-3000:]}")
+    assert marker in proc.stdout, (
+        f"{script} did not print {marker!r}\n{proc.stdout[-2000:]}")

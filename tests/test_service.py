@@ -1,0 +1,235 @@
+"""PopService/PopSession + config layer: the redesigned public surface.
+
+Covers config validation/hashability, session warm-state chaining across
+instance drift and entity churn, the k=1 full-problem path, tenant
+isolation, and the observability contract (resolved backend/engine +
+plan-cache verdicts + service-level aggregation)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ExecConfig, SolveConfig
+from repro.domains import (BalanceInstance, GavelInstance,
+                           make_placement_instance)
+from repro.problems.cluster_scheduling import make_cluster_workload
+from repro.problems.traffic_engineering import (TrafficProblem,
+                                                k_shortest_paths,
+                                                make_demands, make_topology)
+from repro.service import PopService
+
+KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+
+
+def _traffic(n=24, seed=0, scale=1.0):
+    topo = make_topology(20, 40, seed=seed)
+    pairs, dem = make_demands(topo, n, seed=seed)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=seed)
+    return TrafficProblem(topo, pairs, dem * scale, pe)
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+class TestConfigs:
+    def test_frozen_and_hashable(self):
+        a = ExecConfig(solver_kw=dict(max_iters=100), backend_opts=dict(chunk=4))
+        b = ExecConfig(solver_kw=dict(max_iters=100), backend_opts=dict(chunk=4))
+        assert a == b and hash(a) == hash(b)
+        assert a.solver_dict() == {"max_iters": 100}
+        assert a.opts_dict() == {"chunk": 4}
+        with pytest.raises(Exception):
+            a.backend = "vmap"                      # frozen
+        assert hash(SolveConfig(k=3)) == hash(SolveConfig(k=3))
+
+    def test_validated_at_construction(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            ExecConfig(backend="warp_drive")
+        with pytest.raises(ValueError, match="unknown engine"):
+            ExecConfig(engine="warp_drive")
+        with pytest.raises(ValueError, match="solver_kw"):
+            ExecConfig(solver_kw=dict(max_itres=5))
+        with pytest.raises(ValueError, match="strategy"):
+            SolveConfig(strategy="psychic")
+        with pytest.raises(ValueError, match="k must be"):
+            SolveConfig(k=0)
+        with pytest.raises(ValueError, match="min_per_sub"):
+            SolveConfig(min_per_sub=0)
+        with pytest.raises(ValueError, match="replicate_threshold"):
+            SolveConfig(replicate_threshold=-1.0)
+
+    def test_k_for_clamps(self):
+        assert SolveConfig(k=8, min_per_sub=8).k_for(100) == 8
+        assert SolveConfig(k=8, min_per_sub=8).k_for(40) == 5
+        assert SolveConfig(k=8, min_per_sub=8).k_for(7) == 1
+        assert SolveConfig(k=8).k_for(3) == 3
+
+
+# ---------------------------------------------------------------------------
+# sessions
+# ---------------------------------------------------------------------------
+
+class TestSession:
+    def test_warm_chain_and_plan_cache(self):
+        svc = PopService()
+        prob = _traffic()
+        sess = svc.session("t", prob, solve=SolveConfig(k=3),
+                           exec=ExecConfig(solver_kw=KW))
+        a1 = sess.step(prob)
+        assert a1.plan_cache == "miss" and a1.warm_fraction is None
+        a2 = sess.step(_traffic(scale=1.05))
+        assert a2.plan_cache == "hit" and a2.warm_fraction == 1.0
+        assert a2.step == 1 and sess.steps == 2
+        st = sess.stats
+        assert st["plan_hits"] == 1 and st["plan_misses"] == 1
+
+    def test_churn_repairs_plan(self):
+        svc = PopService()
+        wl = make_cluster_workload(32, seed=0)
+        ids = np.arange(32)
+        sess = svc.session("fleet", domain="gavel",
+                           solve=SolveConfig(k=2, strategy="stratified"),
+                           exec=ExecConfig(solver_kw=KW))
+        sess.step(GavelInstance(wl, job_ids=ids))
+        # 4 jobs leave, 4 arrive
+        wl2 = make_cluster_workload(32, seed=1)
+        ids2 = np.concatenate([ids[4:], 100 + np.arange(4)])
+        a = sess.step(GavelInstance(wl2, job_ids=ids2))
+        assert a.plan_cache == "repair"
+        assert 0.5 < a.warm_fraction < 1.0          # survivors warm
+
+    def test_full_path_small_instance(self):
+        svc = PopService()
+        wl = make_cluster_workload(12, seed=0)
+        sess = svc.session("tiny", domain="gavel",
+                           solve=SolveConfig(k=8, min_per_sub=8),
+                           exec=ExecConfig(solver_kw=KW))
+        a1 = sess.step(GavelInstance(wl, job_ids=np.arange(12)))
+        assert a1.plan_cache == "full" and a1.k == 1
+        assert a1.warm_fraction is None
+        a2 = sess.step(GavelInstance(wl, job_ids=np.arange(12)))
+        assert a2.plan_cache == "full" and a2.warm_fraction == 1.0
+        # identity change drops the full-path warm start (row misalignment)
+        ids3 = np.arange(12).copy(); ids3[[0, 1]] = [1, 0]
+        a3 = sess.step(GavelInstance(wl, job_ids=ids3))
+        assert a3.warm_fraction is None
+
+    def test_observability_concrete(self):
+        svc = PopService()
+        inst = make_placement_instance(48, 6, seed=0)
+        a = svc.session("m", inst, exec=ExecConfig(solver_kw=KW)).step(inst)
+        assert a.backend not in (None, "auto")
+        assert a.engine not in (None, "auto")
+        assert a.domain == "moe_placement" and a.tenant == "m"
+        assert a.iterations > 0 and a.solve_time_s > 0
+        assert a.objective == a.metrics["objective"]
+
+    def test_tenant_isolation_and_reentry(self):
+        svc = PopService()
+        p1, p2 = _traffic(seed=0), _traffic(seed=1)
+        s1 = svc.session("a", p1, exec=ExecConfig(solver_kw=KW),
+                         solve=SolveConfig(k=2))
+        s2 = svc.session("b", p2, exec=ExecConfig(solver_kw=KW),
+                         solve=SolveConfig(k=2))
+        s1.step(p1)
+        assert s2._warm is None                     # b untouched by a
+        assert svc.session("a") is s1               # re-entry by name
+        # re-entry with the SAME explicit configs is idempotent; a
+        # DIFFERENT explicit config must not be silently ignored
+        assert svc.session("a", solve=SolveConfig(k=2)) is s1
+        with pytest.raises(ValueError, match="pinned"):
+            svc.session("a", solve=SolveConfig(k=16))
+        with pytest.raises(ValueError, match="pinned"):
+            svc.session("a", exec=ExecConfig(backend="serial"))
+        assert svc.tenants() == ("a", "b")
+        with pytest.raises(ValueError, match="cannot switch"):
+            svc.session("a", make_placement_instance(16, 4))
+        svc.end_session("a")
+        assert svc.tenants() == ("b",)
+
+    def test_session_needs_domain_or_instance(self):
+        svc = PopService()
+        with pytest.raises(ValueError, match="needs an instance"):
+            svc.session("nobody")
+        with pytest.raises(ValueError, match="no registered domain"):
+            svc.session("x", object())
+        with pytest.raises(KeyError, match="unknown domain"):
+            svc.session("x", domain="warp_drive")
+
+    def test_seed_restores_generic_pop_state(self):
+        """seed() must restore warm state for generic (pipeline) domains
+        too, inferring the pop mode from the POPResult type."""
+        svc = PopService()
+        prob = _traffic()
+        s1 = svc.session("orig", prob, solve=SolveConfig(k=3),
+                         exec=ExecConfig(solver_kw=KW))
+        a1 = s1.step(prob)
+        s2 = svc.session("restored", prob, solve=SolveConfig(k=3),
+                         exec=ExecConfig(solver_kw=KW))
+        s2.seed(a1.raw)                      # POPResult -> "pop" inferred
+        a2 = s2.step(prob)
+        assert a2.plan_cache == "hit" and a2.warm_fraction == 1.0
+
+    def test_seed_full_state_needs_entity_ids(self):
+        """Restoring k=1 full-path state warms only when the caller names
+        the ids the iterates are FOR; without them it safely cold-starts."""
+        svc = PopService()
+        wl = make_cluster_workload(12, seed=0)
+        ids = np.arange(12)
+        s1 = svc.session("tiny", domain="gavel",
+                         solve=SolveConfig(k=8, min_per_sub=8),
+                         exec=ExecConfig(solver_kw=KW))
+        a1 = s1.step(GavelInstance(wl, job_ids=ids))
+        assert a1.plan_cache == "full"
+        s2 = svc.session("tiny2", domain="gavel",
+                         solve=SolveConfig(k=8, min_per_sub=8),
+                         exec=ExecConfig(solver_kw=KW))
+        s2.seed(a1.raw, entity_ids=ids)      # FullResult -> "full" inferred
+        a2 = s2.step(GavelInstance(wl, job_ids=ids))
+        assert a2.warm_fraction == 1.0
+        s3 = svc.session("tiny3", domain="gavel",
+                         solve=SolveConfig(k=8, min_per_sub=8),
+                         exec=ExecConfig(solver_kw=KW))
+        s3.seed(a1.raw)                      # no ids -> safe cold start
+        a3 = s3.step(GavelInstance(wl, job_ids=ids))
+        assert a3.warm_fraction is None
+
+    def test_seed_full_state_positional_domain(self):
+        """Domains without an entity_ids hook restore full-path state by
+        passing the entity COUNT as the alignment key."""
+        svc = PopService()
+        prob = _traffic(n=10)
+        cfg = dict(solve=SolveConfig(k=1), exec=ExecConfig(solver_kw=KW))
+        a1 = svc.session("p1", prob, **cfg).step(prob)
+        assert a1.plan_cache == "full"
+        s2 = svc.session("p2", prob, **cfg)
+        s2.seed(a1.raw, entity_ids=prob.n_entities)
+        a2 = s2.step(prob)
+        assert a2.warm_fraction == 1.0
+
+    def test_seed_restores_domain_state(self):
+        svc = PopService()
+        rng = np.random.default_rng(0)
+        inst = BalanceInstance(load=rng.uniform(1, 5, 30), n_targets=6,
+                               ids=np.arange(30))
+        s1 = svc.session("b1", inst, solve=SolveConfig(k=2),
+                         exec=ExecConfig(solver_kw=dict(max_iters=3_000)))
+        a1 = s1.step(inst)
+        # a fresh session seeded with the carried state behaves warm
+        s2 = svc.session("b2", inst, solve=SolveConfig(k=2),
+                         exec=ExecConfig(solver_kw=dict(max_iters=3_000)))
+        s2.seed(a1.raw)
+        a2 = s2.step(inst)
+        assert a2.plan_cache == "hit" and a2.warm_fraction == 1.0
+
+    def test_service_stats_aggregate(self):
+        svc = PopService()
+        prob = _traffic()
+        sess = svc.session("t", prob, solve=SolveConfig(k=2),
+                           exec=ExecConfig(solver_kw=KW))
+        sess.step(prob)
+        sess.step(prob)
+        st = svc.stats()
+        assert st["steps"] == 2 and st["n_sessions"] == 1
+        assert st["plan_hit_rate"] == 0.5
+        assert st["warm_fraction_mean"] == 1.0
