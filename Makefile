@@ -23,14 +23,27 @@
 #                        bit-for-bit pins, example smoke runs
 #   make api-snapshot    regenerate docs/api_surface.txt after an
 #                        INTENTIONAL surface change (commit the diff)
+#   make lint-pop        popcheck static-analysis suite (host-sync,
+#                        retrace, Pallas, deprecated-door, cache-key
+#                        lints — docs/LINTS.md); exit 1 on findings
+#                        outside popcheck_baseline.json
+#   make lint-pop-baseline  snapshot today's findings into
+#                        popcheck_baseline.json (accepted debt)
 
 PY = PYTHONPATH=src python
 
 .PHONY: test check-imports test-conformance test-api api-snapshot \
+        lint-pop lint-pop-baseline \
         bench-backends bench-smoke bench-snapshot bench-check bench-churn
 
 check-imports:
 	$(PY) scripts/check_imports.py
+
+lint-pop:
+	$(PY) scripts/popcheck.py
+
+lint-pop-baseline:
+	$(PY) scripts/popcheck.py --baseline
 
 test-api:
 	$(PY) -m pytest -q tests/test_api_surface.py tests/test_service.py \

@@ -31,7 +31,8 @@ def run(n_jobs: int = 448, workers=(256, 256, 256), ks=(4, 8, 16, 32),
 
     rows = []
     with Timer() as t:
-        full, res, t_solve, _ = pop.solve_full(prob, solver_kw=SOLVER_KW)
+        fr = pop.solve_full_ex(prob, exec_cfg=ExecConfig(solver_kw=SOLVER_KW))
+        full, t_solve = fr.alloc, fr.solve_time_s
     ev = prob.evaluate(full)
     full_mean = ev["mean_norm_throughput"]
     rows.append(dict(method="full", k=1, solve_s=t_solve, **ev))

@@ -185,8 +185,9 @@ def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
     t_full = None
     iters_full = None
     if 1 in ks:
-        _, res_full, t_full, _ = pop.solve_full(prob, solver_kw=kw)
-        iters_full = int(res_full.iterations)
+        fr = pop.solve_full_ex(prob, exec_cfg=ExecConfig(solver_kw=kw))
+        t_full = fr.solve_time_s
+        iters_full = int(fr.res.iterations)
     for backend in backends:
         t1 = None
         for k in ks:

@@ -32,7 +32,8 @@ def build_hot(n_demands=5_000, hot_frac=0.002, hot_boost=200.0, seed=0):
 
 def run(k: int = 16, seed: int = 0) -> dict:
     prob = build_hot(seed=seed)
-    full, _, t_full, _ = pop.solve_full(prob, solver_kw=SOLVER_KW)
+    fr = pop.solve_full_ex(prob, exec_cfg=ExecConfig(solver_kw=SOLVER_KW))
+    full, t_full = fr.alloc, fr.solve_time_s
     opt = prob.evaluate(full)["total_flow"]
 
     r_plain = pop.solve_instance(

@@ -20,7 +20,8 @@ from .common import emit, save_json
 def run(n_demands: int = 10_000, ks=(4, 16), seed: int = 0) -> dict:
     prob = build(n_demands=n_demands, seed=seed)
     rows = []
-    full, _, t_full, _ = pop.solve_full(prob, solver_kw=SOLVER_KW)
+    fr = pop.solve_full_ex(prob, exec_cfg=ExecConfig(solver_kw=SOLVER_KW))
+    full, t_full = fr.alloc, fr.solve_time_s
     opt = prob.evaluate(full)["total_flow"]
 
     for k in ks:

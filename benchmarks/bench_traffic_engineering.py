@@ -31,7 +31,8 @@ def run(n_demands: int = 20_000, ks=(4, 16, 64), seed: int = 0) -> dict:
     prob = build(n_demands=n_demands, seed=seed)
     rows = []
 
-    full, res, t_solve, _ = pop.solve_full(prob, solver_kw=SOLVER_KW)
+    fr = pop.solve_full_ex(prob, exec_cfg=ExecConfig(solver_kw=SOLVER_KW))
+    full, t_solve = fr.alloc, fr.solve_time_s
     ev = prob.evaluate(full)
     opt_flow = ev["total_flow"]
     rows.append(dict(method="full", k=1, solve_s=t_solve, **ev))

@@ -34,7 +34,8 @@ def main():
 
     exec_cfg = ExecConfig(solver_kw=dict(max_iters=iters, tol_primal=1e-4,
                                          tol_gap=1e-4))
-    full, res, t_full, _ = pop.solve_full(prob, exec_cfg.solver_dict())
+    fr = pop.solve_full_ex(prob, exec_cfg=exec_cfg)
+    full, t_full = fr.alloc, fr.solve_time_s
     ev_full = prob.evaluate(full)
     print(f"full LP     : flow={ev_full['total_flow']:8.1f}  "
           f"t={t_full:6.2f}s  max_util={ev_full['max_edge_util']:.3f}")

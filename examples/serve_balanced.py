@@ -107,6 +107,8 @@ def main():
         tok = jnp.zeros((B, 1), jnp.int32)
         steps = int(load[groups].max())
         for _ in range(min(steps, decode_cap)):
+            # one-shot driver: step is jitted once per process, the loop
+            # reuses the compilation  # popcheck: disable=retrace-hazard
             tok, cache = step(params, cache, tok)
             total_tokens += B
         print(f"  replica {r}: batch={B:3d} groups, "

@@ -58,6 +58,22 @@ def main() -> int:
               file=sys.stderr)
         return 1
     print(f"domain registry: {', '.join(domains.names())}")
+    # static-analysis gate: a clean import with a fresh popcheck finding
+    # (docs/LINTS.md) fails the pre-flight the same way an ImportError
+    # would — `make lint-pop` reproduces this standalone
+    from repro.analysis import load_baseline, run_popcheck
+    findings = run_popcheck(
+        [SRC / "repro", REPO_ROOT / "examples", REPO_ROOT / "benchmarks"],
+        baseline=load_baseline(REPO_ROOT / "popcheck_baseline.json"),
+        repo_root=REPO_ROOT)
+    if findings:
+        for f in findings:
+            print(f.render(), file=sys.stderr)
+        print(f"popcheck: {len(findings)} finding(s) — fix, suppress "
+              "(# popcheck: disable=<rule>) or baseline "
+              "(make lint-pop-baseline); docs/LINTS.md", file=sys.stderr)
+        return 1
+    print("popcheck: clean")
     return 0
 
 

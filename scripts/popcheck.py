@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""popcheck: static analysis tuned to this repo's hot-path failure modes.
+
+    python scripts/popcheck.py                  # scan src/repro, examples/,
+                                                # benchmarks/; exit 1 on any
+                                                # non-baselined finding
+    python scripts/popcheck.py --baseline       # snapshot current findings
+                                                # into popcheck_baseline.json
+    python scripts/popcheck.py --rules host-sync-in-hot-path,api-drift
+    python scripts/popcheck.py path/to/file.py  # scan specific paths
+
+Rule catalog + suppression syntax: docs/LINTS.md.  The committed baseline
+(popcheck_baseline.json) holds known, intentionally-tolerated findings;
+`make lint-pop` fails only on NEW ones.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import (  # noqa: E402
+    RULES, load_baseline, run_popcheck, write_baseline)
+from repro.analysis.core import DEFAULT_SCAN_DIRS  # noqa: E402
+
+BASELINE = REPO_ROOT / "popcheck_baseline.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to scan (default: {DEFAULT_SCAN_DIRS})")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--baseline", action="store_true",
+                    help=f"write current findings to {BASELINE.name} "
+                         "instead of failing on them")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the committed baseline (report everything)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args()
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(name)
+        return 0
+
+    paths = ([Path(p) for p in args.paths] if args.paths
+             else [REPO_ROOT / d for d in DEFAULT_SCAN_DIRS])
+    rules = args.rules.split(",") if args.rules else None
+    baseline = {} if (args.baseline or args.no_baseline) \
+        else load_baseline(BASELINE)
+
+    findings = run_popcheck(paths, rules=rules, baseline=baseline,
+                            repo_root=REPO_ROOT)
+
+    if args.baseline:
+        write_baseline(findings, BASELINE)
+        print(f"popcheck: baselined {len(findings)} finding(s) "
+              f"-> {BASELINE.name}")
+        for f in findings:
+            print(f"  {f.render()}")
+        return 0
+
+    for f in findings:
+        print(f.render())
+    n_rules = len(rules) if rules else len(RULES)
+    if findings:
+        print(f"popcheck: {len(findings)} new finding(s) across {n_rules} "
+              "rule(s); fix them, suppress with '# popcheck: "
+              "disable=<rule>', or re-baseline (make lint-pop-baseline)")
+        return 1
+    print(f"popcheck: clean ({n_rules} rule(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

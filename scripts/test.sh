@@ -1,5 +1,6 @@
 #!/bin/sh
-# Tier-1 verify: smoke-import every repro module, then run the test suite
+# Tier-1 verify: smoke-import every repro module + popcheck lint gate
+# (check_imports.py runs both — see docs/LINTS.md), then the test suite
 # with src/ on PYTHONPATH (the repo has no installed package).
 #
 #     scripts/test.sh              # full tier-1

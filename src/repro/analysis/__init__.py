@@ -1,0 +1,65 @@
+"""``popcheck``: static analysis + runtime sanitizers for the POP hot path.
+
+POP's pitch is sub-second online re-solves, and this repo's hot path rests
+on invariants nothing in Python enforces: jit caches keyed on hashable
+configs/operator identity, zero host sync inside ``solve_stacked``, Pallas
+blocks that fit VMEM, domains that declare the hooks their fill style
+needs.  This package machine-checks them:
+
+* :mod:`repro.analysis.core` — the rule framework (findings, suppression
+  comments, baseline snapshots, the runner ``scripts/popcheck.py`` wraps).
+* :mod:`repro.analysis.hotpath` — host-sync-in-hot-path rule.
+* :mod:`repro.analysis.retrace` — retrace-hazard rule.
+* :mod:`repro.analysis.pallas` — Pallas VMEM / block-alignment /
+  no-scatter rules.
+* :mod:`repro.analysis.contracts` — deprecated-door, dtype-promotion,
+  registry-contract and config-hashability rules.
+* :mod:`repro.analysis.surface` — public-API drift vs
+  ``docs/api_surface.txt``.
+* :mod:`repro.analysis.runtime` — runtime sanitizers: a retrace-counter
+  guard and a host-transfer tripwire for asserting steady-state
+  ``PopSession.step()`` is retrace- and sync-free.
+
+Rule catalog + suppression syntax: ``docs/LINTS.md``.
+"""
+
+from __future__ import annotations
+
+from .core import (  # noqa: F401
+    Finding,
+    Project,
+    RULES,
+    load_baseline,
+    run_popcheck,
+    write_baseline,
+)
+from .runtime import (  # noqa: F401
+    HostSyncError,
+    RetraceError,
+    SanitizerStats,
+    host_sync_tripwire,
+    retrace_guard,
+    steady_state_guard,
+)
+
+# importing the rule modules registers their rules in RULES
+from . import hotpath as _hotpath      # noqa: F401,E402
+from . import retrace as _retrace      # noqa: F401,E402
+from . import pallas as _pallas        # noqa: F401,E402
+from . import contracts as _contracts  # noqa: F401,E402
+from . import surface as _surface      # noqa: F401,E402
+
+__all__ = [
+    "Finding",
+    "Project",
+    "RULES",
+    "run_popcheck",
+    "load_baseline",
+    "write_baseline",
+    "RetraceError",
+    "HostSyncError",
+    "SanitizerStats",
+    "retrace_guard",
+    "host_sync_tripwire",
+    "steady_state_guard",
+]

@@ -1,0 +1,162 @@
+"""Rule ``host-sync-in-hot-path``: no device→host sync reachable from the
+solver's inner loop.
+
+Every ``.item()``, ``float()`` of a traced value, ``np.asarray``,
+``block_until_ready`` or Python branch on device data inside
+``solve_stacked`` / the StepEngine half-steps forces a blocking transfer
+per call — inside a jit it forces a trace-time readback or an abstract-
+value error, and outside it serialises the async dispatch pipeline.  The
+rule walks an approximate call graph DOWNWARD from the hot roots
+(functions named ``solve_stacked``, plus any def marked ``# popcheck:
+hot`` on/above its ``def`` line) and flags host-sync constructs in any
+function it reaches.
+
+The call graph is name-based and deliberately approximate: a call
+``f(...)`` or ``obj.f(...)`` reaches every *followable* def named ``f``.
+Followable files are the solver substrate (``core/`` and ``kernels/``
+under ``src/repro``) plus any scanned file outside ``src/repro`` (fixture
+corpora, standalone scripts) — service/domain/benchmark layers run pre-
+and post-solve on the host, where syncs are the point, so propagation
+stops at that boundary.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from .core import FileContext, Finding, Project, rule
+
+RULE = "host-sync-in-hot-path"
+
+HOT_ROOT_NAMES = {"solve_stacked"}
+
+# numpy module names whose asarray/array force a device->host transfer
+_NUMPY_MODULES = {"numpy"}
+# jax.numpy aliases: branches on calls through these are traced-value
+# branches (concretisation errors / per-step readbacks).  Bare ``jax.*``
+# calls are NOT included — jax.default_backend() and friends are host-side
+# platform queries, not traced values.
+_TRACED_MODULES = {"jax.numpy"}
+
+
+def _followable(ctx: FileContext) -> bool:
+    parts = ctx.rel.split("/")
+    if "repro" in parts:
+        return "core" in parts or "kernels" in parts
+    return True
+
+
+def _function_defs(ctx: FileContext):
+    """Every (possibly nested / method) def in the file."""
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _called_names(fn: ast.AST) -> Set[str]:
+    names = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name):
+                names.add(node.func.id)
+            elif isinstance(node.func, ast.Attribute):
+                names.add(node.func.attr)
+    return names
+
+
+def _is_module_attr(node: ast.AST, ctx: FileContext, modules: Set[str]) -> bool:
+    """True when ``node`` is ``alias.attr`` with ``alias`` imported from one
+    of ``modules`` (e.g. ``np.asarray`` with ``import numpy as np``)."""
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and ctx.module_aliases.get(node.value.id) in modules)
+
+
+def _mentions_traced_call(test: ast.AST, ctx: FileContext) -> bool:
+    """Does an ``if``/``while`` test call into jax/jnp (a traced-value
+    branch), as opposed to comparing static Python config values?"""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call) and _is_module_attr(node.func, ctx,
+                                                          _TRACED_MODULES):
+            return True
+    return False
+
+
+def _violations_in(fn: ast.AST, ctx: FileContext, where: str) -> List[Finding]:
+    out = []
+
+    def flag(node, msg):
+        out.append(Finding(RULE, ctx.rel, node.lineno, f"{where}: {msg}"))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if f.attr == "item" and not node.args:
+                    flag(node, ".item() forces a device->host sync")
+                elif f.attr == "block_until_ready":
+                    flag(node, "block_until_ready() stalls the dispatch "
+                               "pipeline inside the hot path")
+                elif f.attr == "device_get" and _is_module_attr(
+                        f, ctx, {"jax"}):
+                    flag(node, "jax.device_get forces a host transfer")
+                elif f.attr in ("asarray", "array") and _is_module_attr(
+                        f, ctx, _NUMPY_MODULES):
+                    flag(node, f"np.{f.attr}() on (potentially) device data "
+                               "forces a host transfer; use jnp inside the "
+                               "hot path")
+            elif isinstance(f, ast.Name) and f.id in ("float", "int", "bool"):
+                if node.args and not isinstance(node.args[0], ast.Constant):
+                    flag(node, f"{f.id}() on a non-literal concretises a "
+                               "traced value (host sync / trace error)")
+        elif isinstance(node, (ast.If, ast.While)):
+            if _mentions_traced_call(node.test, ctx):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                flag(node, f"Python `{kind}` on a jax/jnp expression "
+                           "branches on a traced value; use jnp.where / "
+                           "lax.cond")
+    return out
+
+
+@rule(RULE)
+def check_hot_path(project: Project) -> List[Finding]:
+    # index: bare name -> [(ctx, def node)] over followable files
+    index: Dict[str, List[Tuple[FileContext, ast.AST]]] = {}
+    roots: List[Tuple[FileContext, ast.AST]] = []
+    for ctx in project.files:
+        if ctx.tree is None or not _followable(ctx):
+            continue
+        for fn in _function_defs(ctx):
+            index.setdefault(fn.name, []).append((ctx, fn))
+            marked = (fn.lineno in ctx.hot_marker_lines
+                      or any(ln in ctx.hot_marker_lines
+                             for ln in range(max(1, fn.lineno - 1 - len(
+                                 fn.decorator_list)), fn.lineno + 1)))
+            if fn.name in HOT_ROOT_NAMES or marked:
+                roots.append((ctx, fn))
+
+    # propagate hotness to a fixpoint over bare-name call edges
+    hot: Set[int] = set()
+    hot_entries: List[Tuple[FileContext, ast.AST, str]] = []
+    work = [(ctx, fn, fn.name) for ctx, fn in roots]
+    while work:
+        ctx, fn, via = work.pop()
+        if id(fn) in hot:
+            continue
+        hot.add(id(fn))
+        hot_entries.append((ctx, fn, via))
+        for name in _called_names(fn):
+            for tctx, tfn in index.get(name, ()):  # followable defs only
+                if id(tfn) not in hot:
+                    work.append((tctx, tfn, f"{via} -> {name}"))
+
+    findings: List[Finding] = []
+    seen = set()
+    for ctx, fn, via in hot_entries:
+        for f in _violations_in(fn, ctx, f"hot via {via}"):
+            key = (f.path, f.line, f.message)
+            if key not in seen:
+                seen.add(key)
+                findings.append(f)
+    return findings

@@ -1,0 +1,236 @@
+"""Pallas kernel invariant rules.
+
+``pallas-vmem-budget``
+    Sum the statically-resolvable BlockSpec block shapes of every
+    ``pl.pallas_call`` (4 bytes/element — the kernels are f32) and flag
+    launches whose resident blocks exceed the ~16 MiB/core TPU VMEM
+    budget.  Dims that resolve through module constants and keyword
+    defaults (``BLOCK_M``/``BLOCK_N``) are counted; data-dependent dims
+    (the structured kernels' per-lane ``s.row_idx.shape[1:]`` blocks) are
+    skipped — their bound is the padding contract, not a literal.
+
+``pallas-block-align``
+    Constant block dims must respect the f32 TPU tiling: the last dim a
+    multiple of 128 (or exactly 1 for scalar / broadcast blocks), the
+    second-to-last a multiple of 8 (or 1).  Misaligned blocks silently
+    waste lanes at best and fail to lower at worst.
+
+``pallas-no-scatter``
+    The structured kernels' whole design is gather + one-hot fold — no
+    scatter anywhere (``kernels/`` module docstrings are explicit).  Flag
+    ``.at[...]`` updates and ``segment_sum`` inside ``kernels/`` files;
+    the scatter-free layout is what keeps the TPU lowering dense and the
+    transpose precomputable.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from .core import FileContext, Finding, Project, rule
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # ~VMEM per TPU core
+BYTES_PER_ELEM = 4                     # kernels are f32 end to end
+LANE_MULT = 128                        # last-dim tiling (f32)
+SUBLANE_MULT = 8                       # second-to-last-dim tiling (f32)
+
+
+def _module_constants(ctx: FileContext) -> Dict[str, int]:
+    consts = {}
+    for node in ctx.tree.body:
+        if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                       ast.Constant):
+            if isinstance(node.value.value, int):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        consts[t.id] = node.value.value
+    return consts
+
+
+class _Resolver:
+    """Resolve int-valued AST expressions through local keyword defaults,
+    module constants and single-hop imported-module constants."""
+
+    def __init__(self, project: Project, ctx: FileContext,
+                 fn: Optional[ast.FunctionDef]):
+        self.project = project
+        self.ctx = ctx
+        self.consts = dict(_module_constants(ctx))
+        # imported names: "from .pdhg_matvec import BLOCK_M"
+        for local, origin in ctx.imported_names.items():
+            mod, _, attr = origin.rpartition(".")
+            for other in project.files:
+                if other.tree and other.rel.endswith(
+                        mod.split(".")[-1] + ".py"):
+                    val = _module_constants(other).get(attr)
+                    if val is not None:
+                        self.consts.setdefault(local, val)
+        if fn is not None:
+            args = fn.args
+            defaults = args.defaults
+            params = args.args[len(args.args) - len(defaults):]
+            for p, d in zip(params, defaults):
+                v = self._resolve_via_tables(d)
+                if v is not None:
+                    self.consts.setdefault(p.arg, v)
+            for p, d in zip(args.kwonlyargs, args.kw_defaults):
+                if d is not None:
+                    v = self._resolve_via_tables(d)
+                    if v is not None:
+                        self.consts.setdefault(p.arg, v)
+
+    def _resolve_via_tables(self, node: ast.AST) -> Optional[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.consts.get(node.id)
+        if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                          ast.Name):
+            # _mv.BLOCK_M: find the aliased module's constant
+            origin = self.ctx.module_aliases.get(node.value.id)
+            if origin:
+                stem = origin.split(".")[-1]
+                for other in self.project.files:
+                    if other.tree and other.rel.endswith(stem + ".py"):
+                        val = _module_constants(other).get(node.attr)
+                        if val is not None:
+                            return val
+            return None
+        return None
+
+    def resolve(self, node: ast.AST) -> Optional[int]:
+        return self._resolve_via_tables(node)
+
+    def resolve_tuple(self, node: ast.AST) -> Optional[Tuple[int, ...]]:
+        if not isinstance(node, ast.Tuple):
+            return None
+        dims = []
+        for el in node.elts:
+            v = self.resolve(el)
+            if v is None:
+                return None
+            dims.append(v)
+        return tuple(dims)
+
+
+def _blockspec_shape(call: ast.Call, res: _Resolver) \
+        -> Optional[Tuple[int, ...]]:
+    """Block tuple of a ``pl.BlockSpec((dims), index_map)`` call, if every
+    dim resolves to a constant."""
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else \
+        f.id if isinstance(f, ast.Name) else ""
+    if name != "BlockSpec" or not call.args:
+        return None
+    return res.resolve_tuple(call.args[0])
+
+
+def _enclosing_fn(node: ast.AST, ctx: FileContext) -> Optional[ast.FunctionDef]:
+    best = None
+    for fn in ast.walk(ctx.tree):
+        if isinstance(fn, ast.FunctionDef) and \
+                fn.lineno <= node.lineno <= (fn.end_lineno or fn.lineno):
+            if best is None or fn.lineno > best.lineno:
+                best = fn
+    return best
+
+
+def _iter_pallas_calls(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.attr if isinstance(f, ast.Attribute) else \
+                f.id if isinstance(f, ast.Name) else ""
+            if name == "pallas_call":
+                yield node
+
+
+@rule("pallas-vmem-budget")
+def check_vmem(project: Project) -> List[Finding]:
+    findings = []
+    for ctx in project.files:
+        if ctx.tree is None or "pallas_call" not in ctx.text:
+            continue
+        for call in _iter_pallas_calls(ctx):
+            res = _Resolver(project, ctx, _enclosing_fn(call, ctx))
+            total = 0
+            for kw in call.keywords:
+                if kw.arg not in ("in_specs", "out_specs"):
+                    continue
+                specs = kw.value.elts if isinstance(
+                    kw.value, (ast.List, ast.Tuple)) else [kw.value]
+                for spec in specs:
+                    if isinstance(spec, ast.Call):
+                        shape = _blockspec_shape(spec, res)
+                        if shape:
+                            elems = 1
+                            for d in shape:
+                                elems *= d
+                            total += elems * BYTES_PER_ELEM
+            if total > VMEM_BUDGET_BYTES:
+                findings.append(Finding(
+                    "pallas-vmem-budget", ctx.rel, call.lineno,
+                    f"pallas_call resident blocks ~{total / 2**20:.1f} MiB "
+                    f"exceed the ~{VMEM_BUDGET_BYTES // 2**20} MiB VMEM "
+                    "budget; shrink the BlockSpec tiles"))
+    return findings
+
+
+@rule("pallas-block-align")
+def check_align(project: Project) -> List[Finding]:
+    findings = []
+    for ctx in project.files:
+        if ctx.tree is None or "BlockSpec" not in ctx.text:
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            res = _Resolver(project, ctx, _enclosing_fn(node, ctx))
+            shape = _blockspec_shape(node, res)
+            if not shape:
+                continue
+            if len(shape) >= 1:
+                last = shape[-1]
+                if last != 1 and last % LANE_MULT != 0:
+                    findings.append(Finding(
+                        "pallas-block-align", ctx.rel, node.lineno,
+                        f"BlockSpec last dim {last} is neither 1 nor a "
+                        f"multiple of {LANE_MULT} (f32 lane tiling); pad "
+                        "via kernels/ops.py _pad_to"))
+            if len(shape) >= 2:
+                sub = shape[-2]
+                if sub != 1 and sub % SUBLANE_MULT != 0:
+                    findings.append(Finding(
+                        "pallas-block-align", ctx.rel, node.lineno,
+                        f"BlockSpec second-to-last dim {sub} is neither 1 "
+                        f"nor a multiple of {SUBLANE_MULT} (f32 sublane "
+                        "tiling)"))
+    return findings
+
+
+@rule("pallas-no-scatter")
+def check_no_scatter(project: Project) -> List[Finding]:
+    findings = []
+    for ctx in project.in_dir("kernels"):
+        if ctx.tree is None:
+            continue
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Subscript) and isinstance(
+                    node.value, ast.Attribute) and node.value.attr == "at":
+                findings.append(Finding(
+                    "pallas-no-scatter", ctx.rel, node.lineno,
+                    ".at[...] scatter update in a kernels/ module — the "
+                    "structured kernels are gather + one-hot fold by "
+                    "design (precomputed transpose layout)"))
+            elif isinstance(node, ast.Call):
+                f = node.func
+                name = f.attr if isinstance(f, ast.Attribute) else \
+                    f.id if isinstance(f, ast.Name) else ""
+                if name == "segment_sum":
+                    findings.append(Finding(
+                        "pallas-no-scatter", ctx.rel, node.lineno,
+                        "segment_sum scatter-add in a kernels/ module — "
+                        "use the precomputed gather layout "
+                        "(StructuredOperator) instead"))
+    return findings

@@ -1,0 +1,171 @@
+"""Rule ``retrace-hazard``: fresh objects must not reach the jit caches.
+
+The map-step substrate keys compiled solvers on *identity and hashability*
+— ``backends._cached_solver`` is an ``lru_cache`` over ``(K_mv, KT_mv,
+kw_items, engine)``, and ``jax.jit``'s own cache keys on the wrapped
+callable's identity.  Two hazard shapes defeat both:
+
+1. passing a definitely-fresh / unhashable object (a lambda, a list/dict/
+   set literal or comprehension) as an argument to an ``lru_cache``-
+   decorated function: either a ``TypeError`` or a guaranteed cache miss
+   per call;
+2. jitting (or pmapping) a freshly-constructed callable and calling the
+   result inside the same function — ``jax.jit(lambda ...)(x)`` or
+   ``fn = jax.jit(make(...)); fn(x)`` outside a memoized builder — which
+   recompiles the whole solver on EVERY invocation (this is exactly the
+   recompile-per-call bug this PR fixes in ``solve_chunked_vmap`` /
+   ``solve_shard_map`` / ``solve_pmap``).
+
+Builders that RETURN a jitted callable (``return jax.jit(...)``) are fine
+— caching is then the caller's contract — and jit calls inside functions
+decorated with ``functools.lru_cache``/``functools.cache`` are the blessed
+memoized-builder pattern.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .core import FileContext, Finding, Project, rule
+
+RULE = "retrace-hazard"
+
+_FRESH_NODES = (ast.Lambda, ast.ListComp, ast.SetComp, ast.DictComp,
+                ast.GeneratorExp, ast.List, ast.Dict, ast.Set)
+
+
+def _is_cache_decorator(dec: ast.AST) -> bool:
+    """functools.lru_cache / functools.cache, bare or called."""
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    name = dec.attr if isinstance(dec, ast.Attribute) else \
+        dec.id if isinstance(dec, ast.Name) else ""
+    return name in ("lru_cache", "cache")
+
+
+def _cached_def_names(project: Project) -> Set[str]:
+    names = set()
+    for ctx in project.files:
+        if ctx.tree is None:
+            continue
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef) and any(
+                    _is_cache_decorator(d) for d in node.decorator_list):
+                names.add(node.name)
+    return names
+
+
+def _called_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _is_jax_wrap(call: ast.Call, ctx: FileContext) -> bool:
+    """jax.jit(...) / jax.pmap(...) (by alias) or bare imported jit/pmap."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        return (f.attr in ("jit", "pmap")
+                and ctx.module_aliases.get(f.value.id) == "jax")
+    if isinstance(f, ast.Name):
+        return ctx.imported_names.get(f.id, "") in ("jax.jit", "jax.pmap")
+    return False
+
+
+def _check_function(ctx: FileContext, fn: ast.FunctionDef,
+                    cached_names: Set[str], findings: List[Finding]) -> None:
+    if any(_is_cache_decorator(d) for d in fn.decorator_list):
+        return  # memoized builder: fresh jits inside are built once per key
+
+    # names assigned from defs / lambdas / calls inside this function are
+    # fresh per invocation
+    fresh_local: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.FunctionDef) and node is not fn:
+            fresh_local.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(
+                node.value, (ast.Lambda, ast.Call)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    fresh_local.add(t.id)
+
+    jitted_fresh: Set[str] = set()   # locals holding a fresh jitted callable
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        # (1) unhashable/fresh args into an lru_cached function
+        if _called_name(node) in cached_names:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, _FRESH_NODES):
+                    findings.append(Finding(
+                        RULE, ctx.rel, arg.lineno,
+                        f"fresh/unhashable {type(arg).__name__} argument to "
+                        f"lru_cached '{_called_name(node)}' — guaranteed "
+                        "cache miss (or TypeError) every call"))
+        # (2) jit/pmap of a fresh callable, called in the same function
+        if _is_jax_wrap(node, ctx) and node.args:
+            target = node.args[0]
+            fresh = (isinstance(target, (ast.Lambda, ast.Call))
+                     or (isinstance(target, ast.Name)
+                         and target.id in fresh_local))
+            if fresh:
+                parent = getattr(node, "_pc_parent", None)
+                if isinstance(parent, ast.Call) and parent.func is node:
+                    # jax.jit(...)(x): jitted and invoked in one expression
+                    findings.append(Finding(
+                        RULE, ctx.rel, node.lineno,
+                        "jit/pmap of a freshly-constructed callable invoked "
+                        "in place — recompiles on every call; memoize the "
+                        "builder (functools.lru_cache)"))
+                else:
+                    for t in _assign_targets(node):
+                        jitted_fresh.add(t)
+    if jitted_fresh:
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in jitted_fresh):
+                findings.append(Finding(
+                    RULE, ctx.rel, node.lineno,
+                    f"'{node.func.id}' holds a per-call jit/pmap of a fresh "
+                    "callable and is invoked here — recompiles on every "
+                    "call; memoize the builder (functools.lru_cache)"))
+
+
+def _assign_targets(value_node: ast.Call) -> List[str]:
+    parent = getattr(value_node, "_pc_parent", None)
+    if isinstance(parent, ast.Assign) and parent.value is value_node:
+        return [t.id for t in parent.targets if isinstance(t, ast.Name)]
+    return []
+
+
+def _link_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._pc_parent = node
+
+
+@rule(RULE)
+def check_retrace(project: Project) -> List[Finding]:
+    cached_names = _cached_def_names(project)
+    cached_names.add("_cached_solver")   # the canonical jit-cache door
+    findings: List[Finding] = []
+    for ctx in project.files:
+        if ctx.tree is None:
+            continue
+        _link_parents(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef):
+                _check_function(ctx, node, cached_names, findings)
+    # dedup (nested defs are walked by their parents too)
+    seen, out = set(), []
+    for f in findings:
+        key = (f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out

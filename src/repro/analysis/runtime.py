@@ -1,0 +1,180 @@
+"""Runtime sanitizers: retrace counting + host-transfer tripwire.
+
+The static rules catch hazard *shapes*; these guards catch the hazards
+themselves, at test time, with zero instrumentation in the production
+code:
+
+:func:`retrace_guard`
+    Counts XLA compilations inside the ``with`` block by listening to
+    JAX's compile logging (``jax_log_compiles``) and raises
+    :class:`RetraceError` when the count exceeds ``max_retraces``.
+    Steady-state online re-solves must compile NOTHING — a retrace means
+    a cache key churned (fresh callable, unhashable config, changed
+    shape).
+
+:func:`host_sync_tripwire`
+    Raises :class:`HostSyncError` on device→host readbacks inside the
+    block: enables JAX's device-to-host transfer guard (authoritative on
+    accelerators) and additionally patches the np.asarray/np.array doors
+    and ``jax.block_until_ready`` / ``jax.device_get``, which the
+    transfer guard does not intercept for committed CPU arrays.
+
+:func:`steady_state_guard`
+    The combination the tests use: a retrace guard over the whole block
+    plus the host-sync tripwire scoped to the map-step backend execution
+    (every entry of ``backends.MAP_BACKENDS`` is wrapped for the duration)
+    — result readback and warm-state capture AFTER the solve are
+    legitimate host syncs, so the tripwire arms only around the hot
+    region.  Yields :class:`SanitizerStats`; on exit asserts the retrace
+    budget.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import logging
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["RetraceError", "HostSyncError", "SanitizerStats",
+           "retrace_guard", "host_sync_tripwire", "steady_state_guard"]
+
+
+class RetraceError(AssertionError):
+    """A jitted solver recompiled inside a region declared steady-state."""
+
+
+class HostSyncError(AssertionError):
+    """A device->host transfer happened inside the guarded hot region."""
+
+
+@dataclasses.dataclass
+class SanitizerStats:
+    """What the guards observed (populated progressively, readable after
+    the ``with`` block exits)."""
+
+    compiles: int = 0
+    compiled_names: list = dataclasses.field(default_factory=list)
+    hot_backend_calls: int = 0
+
+
+class _CompileCounter(logging.Handler):
+    def __init__(self, stats: SanitizerStats):
+        super().__init__(level=logging.DEBUG)
+        self.stats = stats
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith("Compiling "):
+            self.stats.compiles += 1
+            self.stats.compiled_names.append(msg.split()[1])
+
+
+@contextlib.contextmanager
+def retrace_guard(max_retraces: int = 0,
+                  stats: Optional[SanitizerStats] = None
+                  ) -> Iterator[SanitizerStats]:
+    """Raise :class:`RetraceError` if more than ``max_retraces`` XLA
+    compilations happen inside the block."""
+    stats = stats if stats is not None else SanitizerStats()
+    logger = logging.getLogger("jax")
+    handler = _CompileCounter(stats)
+    old_propagate = logger.propagate
+    logger.addHandler(handler)
+    # compile records propagate up from jax._src.* at WARNING level when
+    # jax_log_compiles is on; stop them at our handler so test output
+    # stays quiet
+    logger.propagate = False
+    jax.config.update("jax_log_compiles", True)
+    baseline = stats.compiles
+    try:
+        yield stats
+    finally:
+        jax.config.update("jax_log_compiles", False)
+        logger.removeHandler(handler)
+        logger.propagate = old_propagate
+    seen = stats.compiles - baseline
+    if seen > max_retraces:
+        raise RetraceError(
+            f"{seen} compilation(s) inside a steady-state region "
+            f"(budget {max_retraces}): {stats.compiled_names[-seen:]} — "
+            "a jit cache key churned (fresh callable, unhashable config, "
+            "or an unstable shape)")
+
+
+def _is_device_array(x) -> bool:
+    return isinstance(x, jax.Array)
+
+
+@contextlib.contextmanager
+def host_sync_tripwire() -> Iterator[None]:
+    """Block device->host readbacks for the duration of the block."""
+
+    def deny(what: str):
+        raise HostSyncError(
+            f"{what} inside the guarded hot region forces a device->host "
+            "sync; keep the hot path on-device (jnp) and read back only "
+            "at the map-step boundary")
+
+    orig_asarray, orig_array = np.asarray, np.array
+    orig_block, orig_get = jax.block_until_ready, jax.device_get
+
+    @functools.wraps(orig_asarray)
+    def guarded_asarray(a, *args, **kw):
+        if _is_device_array(a):
+            deny("np.asarray(jax.Array)")
+        return orig_asarray(a, *args, **kw)
+
+    @functools.wraps(orig_array)
+    def guarded_array(a, *args, **kw):
+        if _is_device_array(a):
+            deny("np.array(jax.Array)")
+        return orig_array(a, *args, **kw)
+
+    def guarded_block(x):
+        deny("jax.block_until_ready")
+
+    def guarded_get(x):
+        deny("jax.device_get")
+
+    np.asarray, np.array = guarded_asarray, guarded_array
+    jax.block_until_ready, jax.device_get = guarded_block, guarded_get
+    try:
+        # authoritative on accelerator platforms; on CPU, committed arrays
+        # are host-resident so the np patches above do the catching
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    finally:
+        np.asarray, np.array = orig_asarray, orig_array
+        jax.block_until_ready, jax.device_get = orig_block, orig_get
+
+
+@contextlib.contextmanager
+def steady_state_guard(max_retraces: int = 0) -> Iterator[SanitizerStats]:
+    """Assert a block performs zero retraces anywhere and zero host syncs
+    inside the map-step backends (the solver hot region)."""
+    from ..core import backends as backends_mod
+
+    stats = SanitizerStats()
+    saved = dict(backends_mod.MAP_BACKENDS)
+
+    def wrap(fn):
+        @functools.wraps(fn)
+        def run(*args, **kw):
+            stats.hot_backend_calls += 1
+            with host_sync_tripwire():
+                return fn(*args, **kw)
+        return run
+
+    for name, fn in saved.items():
+        backends_mod.MAP_BACKENDS[name] = wrap(fn)
+    try:
+        with retrace_guard(max_retraces, stats=stats):
+            yield stats
+    finally:
+        backends_mod.MAP_BACKENDS.clear()
+        backends_mod.MAP_BACKENDS.update(saved)

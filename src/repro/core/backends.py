@@ -184,7 +184,72 @@ def make_map_solver(K_mv, KT_mv, solver_kw: Optional[dict] = None,
             return _cached_solver(K_mv, KT_mv, kw_items, engine)
         except TypeError:
             pass
+    # unhashable solver_kw / matvecs: a fresh jit per call is the documented
+    # degradation (callers wanting cache hits pass hashable configs)
     return jax.jit(_build_solver(K_mv, KT_mv, solver_kw, engine))
+
+
+# --------------------------------------------------------------------------
+# memoized outer runners: the jit/pmap wrapper around a map solver must be
+# built ONCE per (inner solver, layout) — jax.jit keys its own cache on the
+# wrapped callable's identity, so re-wrapping per call recompiles the whole
+# solver every invocation (the retrace popcheck's `retrace-hazard` rule and
+# tests/test_retrace_guard.py pin this)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _chunked_runner(inner):
+    """jit(lax.map(inner)) over [n_chunks, chunk, ...] stacked chunks."""
+    return jax.jit(lambda chunks: jax.lax.map(inner, chunks))
+
+
+@functools.lru_cache(maxsize=64)
+def _result_treedef(inner, in_treedef, shapes_dtypes):
+    """Output tree structure of ``inner`` for a given input layout —
+    abstract eval only, memoized so steady-state re-solves skip even the
+    trace."""
+    leaves = [jax.ShapeDtypeStruct(s, d) for s, d in shapes_dtypes]
+    batch = jax.tree.unflatten(in_treedef, leaves)
+    return jax.tree.structure(jax.eval_shape(inner, batch))
+
+
+def _tree_key(tree):
+    """Hashable (treedef, shapes/dtypes) layout key for a stacked batch."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return treedef, tuple((l.shape, jnp.asarray(l).dtype.name)
+                          for l in leaves)
+
+
+@functools.lru_cache(maxsize=64)
+def _shard_runner(inner, mesh, axis, chunk, in_treedef, shapes_dtypes):
+    """jit(shard_map(...)) for one (solver, mesh, chunking, layout)."""
+    if chunk:
+        def local_solve(local_batch):
+            chunked = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // chunk, chunk)
+                                    + a.shape[1:]), local_batch)
+            res = jax.lax.map(inner, chunked)
+            return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                                res)
+    else:
+        local_solve = inner
+    spec = jax.tree.unflatten(in_treedef,
+                              [P(axis)] * in_treedef.num_leaves)
+    out_treedef = _result_treedef(inner, in_treedef, shapes_dtypes)
+    out_spec = jax.tree.unflatten(out_treedef,
+                                  [P(axis)] * out_treedef.num_leaves)
+    fn = compat.shard_map(local_solve, mesh=mesh, in_specs=(spec,),
+                          out_specs=out_spec,
+                          # solver constants (power-iteration seed vectors)
+                          # are unvarying while problem data varies over the
+                          # POP axis — exactly the intent; skip the check
+                          check=False)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _pmap_runner(inner, devices: tuple):
+    return jax.pmap(inner, devices=list(devices))
 
 
 # --------------------------------------------------------------------------
@@ -221,7 +286,7 @@ def solve_chunked_vmap(batch, K_mv, KT_mv, solver_kw,
     chunked = jax.tree.map(
         lambda a: a.reshape((k_pad // chunk, chunk) + a.shape[1:]), padded)
     inner = make_map_solver(K_mv, KT_mv, solver_kw, engine)
-    res = jax.jit(lambda c: jax.lax.map(inner, c))(chunked)
+    res = _chunked_runner(inner)(chunked)
     res = jax.tree.map(lambda a: a.reshape((k_pad,) + a.shape[2:]), res)
     return _slice_result(res, k)
 
@@ -253,26 +318,9 @@ def solve_shard_map(batch, K_mv, KT_mv, solver_kw,
     padded, k = pad_to_multiple(batch, n_dev * chunk if chunk else n_dev)
 
     inner = make_map_solver(K_mv, KT_mv, solver_kw, engine)
-    if chunk:
-        def local_solve(local_batch):
-            chunked = jax.tree.map(
-                lambda a: a.reshape((a.shape[0] // chunk, chunk)
-                                    + a.shape[1:]), local_batch)
-            res = jax.lax.map(inner, chunked)
-            return jax.tree.map(
-                lambda a: a.reshape((-1,) + a.shape[2:]), res)
-    else:
-        local_solve = inner
-    spec = jax.tree.map(lambda _: P(axis), padded)
-    out_spec = jax.tree.map(lambda _: P(axis),
-                            jax.eval_shape(local_solve, padded))
-    fn = compat.shard_map(local_solve, mesh=mesh, in_specs=(spec,),
-                          out_specs=out_spec,
-                          # solver constants (power-iteration seed vectors)
-                          # are unvarying while problem data varies over the
-                          # POP axis — exactly the intent; skip the check
-                          check=False)
-    return _slice_result(jax.jit(fn)(padded), k)
+    in_treedef, shapes_dtypes = _tree_key(padded)
+    fn = _shard_runner(inner, mesh, axis, chunk, in_treedef, shapes_dtypes)
+    return _slice_result(fn(padded), k)
 
 
 @register_backend("pmap")
@@ -287,8 +335,8 @@ def solve_pmap(batch, K_mv, KT_mv, solver_kw,
     k_pad = batch_size(padded)
     sharded = jax.tree.map(
         lambda a: a.reshape((n_dev, k_pad // n_dev) + a.shape[1:]), padded)
-    fn = jax.pmap(make_map_solver(K_mv, KT_mv, solver_kw, engine),
-                  devices=devices)
+    fn = _pmap_runner(make_map_solver(K_mv, KT_mv, solver_kw, engine),
+                      tuple(devices))
     res = fn(sharded)
     res = jax.tree.map(lambda a: a.reshape((k_pad,) + a.shape[2:]), res)
     return _slice_result(res, k)

@@ -25,9 +25,44 @@ share compiled solvers.  Dict-valued inputs (``solver_kw``,
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Optional, Tuple, Union
 
 __all__ = ["SolveConfig", "ExecConfig"]
+
+
+def _check_cache_key(cfg) -> None:
+    """Construction-time ``__hash__``/``__eq__`` consistency check.
+
+    These configs key the jit/plan caches directly, so an unhashable field
+    value (or a hash that disagrees with equality) must fail where the
+    config is WRITTEN, not as a silent per-call cache miss three layers
+    down.  An equal reconstruction (``dataclasses.replace`` with no
+    changes — which re-runs validation and field freezing) must compare
+    equal and hash identically; this also covers subclasses that add
+    fields (``tests/test_config_keys.py``)."""
+    if getattr(_CHECKING, "active", False):
+        return   # the reconstruction below re-enters __post_init__
+    _CHECKING.active = True
+    try:
+        try:
+            h = hash(cfg)
+        except TypeError as e:
+            raise TypeError(
+                f"{type(cfg).__name__} must stay hashable — it keys the "
+                f"jit/plan caches ({e}); pass hashable field values "
+                "(dicts are frozen automatically)") from e
+        twin = dataclasses.replace(cfg)
+        if twin != cfg or hash(twin) != h:
+            raise ValueError(
+                f"{type(cfg).__name__} hash/eq are inconsistent: an equal "
+                "reconstruction produced a different cache key — field "
+                "freezing in __post_init__ must be idempotent")
+    finally:
+        _CHECKING.active = False
+
+
+_CHECKING = threading.local()
 
 
 def _freeze_items(value: Any, field: str) -> Tuple:
@@ -73,6 +108,7 @@ class SolveConfig:
         if self.min_per_sub is not None and self.min_per_sub < 1:
             raise ValueError(f"min_per_sub must be >= 1 or None, "
                              f"got {self.min_per_sub!r}")
+        _check_cache_key(self)
 
     def k_for(self, n_entities: int) -> int:
         """Effective k for an instance of ``n_entities`` (1 = full solve)."""
@@ -122,6 +158,7 @@ class ExecConfig:
             raise ValueError(
                 f"unknown solver_kw key(s) {bad}; the solver accepts "
                 f"{sorted(pdhg.SOLVER_KW_NAMES)}")
+        _check_cache_key(self)
 
     def solver_dict(self) -> dict:
         return dict(self.solver_kw)

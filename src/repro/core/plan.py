@@ -49,6 +49,8 @@ import numpy as np
 from .replicate import ReplicationPlan
 
 
+# frozen for immutability only — layouts are never cache keys
+# popcheck: disable=config-hashability
 @dataclasses.dataclass(frozen=True)
 class SubLayout:
     """Variable/constraint layout of one sub-LP, for warm-start remapping.

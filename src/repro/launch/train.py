@@ -79,6 +79,7 @@ def main():
     for s in range(start, a.steps):
         batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
         t0 = time.perf_counter()
+        # one-shot driver: jitted once, reused  # popcheck: disable=retrace-hazard
         params, opt, m = step_fn(params, opt, batch)
         if ck and s and s % a.ckpt_every == 0:
             ck.save_async(s, {"params": params, "opt": opt},

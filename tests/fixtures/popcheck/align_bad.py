@@ -1,0 +1,7 @@
+"""Known-bad fixture: block dims off the f32 (8, 128) tiling grid."""
+from jax.experimental import pallas as pl
+
+# last dim 100: neither 1 nor a multiple of 128
+VEC = pl.BlockSpec((1, 100), lambda i: (i, 0))
+# second-to-last dim 12: neither 1 nor a multiple of 8
+MAT = pl.BlockSpec((12, 128), lambda i: (i, 0))

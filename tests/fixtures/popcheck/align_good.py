@@ -1,0 +1,6 @@
+"""Good twin: aligned (or scalar) blocks."""
+from jax.experimental import pallas as pl
+
+VEC = pl.BlockSpec((1, 128), lambda i: (i, 0))
+MAT = pl.BlockSpec((16, 256), lambda i: (i, 0))
+SCALAR = pl.BlockSpec((1, 1), lambda i: (i, 0))

@@ -1,0 +1,18 @@
+"""Known-bad fixture: cache-key classes that cannot actually hash."""
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeakyConfig:
+    # BAD: dict/ndarray fields on a frozen dataclass, never re-frozen —
+    # hash(LeakyConfig(...)) raises and every keyed cache breaks
+    solver_kw: dict = dataclasses.field(default_factory=dict)
+    weights: np.ndarray = None
+
+
+class EqOnly:
+    # BAD: __eq__ without __hash__ -> Python sets __hash__ = None
+    def __eq__(self, other):
+        return isinstance(other, EqOnly)

@@ -1,0 +1,11 @@
+"""Known-bad fixture: internal code going through the compat doors."""
+from repro.core import pop
+from repro.core.pop import pop_solve
+from repro.sched.gavel_service import GavelScheduler
+
+
+def run(prob, wl):
+    alloc, res, t, _ = pop.solve_full(prob, solver_kw={})      # BAD
+    r = pop_solve(prob, 4, strategy="stratified")              # BAD
+    sched = GavelScheduler(wl)                                 # BAD
+    return alloc, r, sched

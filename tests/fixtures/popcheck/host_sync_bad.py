@@ -1,0 +1,22 @@
+"""Known-bad fixture: host syncs reachable from a hot root."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _inner_step(x):
+    jnp.asarray(x)                      # fine: stays on device
+    gap = float(jnp.sum(x))             # BAD: float() on a traced value
+    host = np.asarray(x)                # BAD: np.asarray readback
+    x.block_until_ready()               # BAD: sync in the hot loop
+    if jnp.any(x > 0):                  # BAD: Python branch on traced value
+        host = host + 1
+    return gap, host
+
+
+# popcheck: hot
+def run_hot(x):
+    val = _inner_step(x)
+    tail = x.sum().item()               # BAD: .item() readback
+    got = jax.device_get(x)             # BAD: explicit device_get
+    return val, tail, got

@@ -1,0 +1,23 @@
+"""Good twin: same structure, everything stays on device; readbacks only
+in the (cold) caller, which is not reachable from the hot root."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _inner_step(x):
+    gap = jnp.sum(x)
+    mask = jnp.where(x > 0, x + 1.0, x)   # data-dependent via where
+    return gap, mask
+
+
+# popcheck: hot
+def run_hot(x):
+    return _inner_step(jnp.asarray(x))
+
+
+def cold_report(x):
+    # not reachable from run_hot: boundary readbacks are the point here
+    gap, mask = run_hot(x)
+    jax.block_until_ready(mask)
+    return float(np.asarray(gap))

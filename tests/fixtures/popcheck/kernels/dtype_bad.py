@@ -1,0 +1,11 @@
+"""Known-bad fixture (lives under kernels/): f64 creep in a kernel ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)      # BAD: repo-wide f64
+
+
+def reference(A, x):
+    acc = jnp.zeros(A.shape[0], dtype=jnp.float64)     # BAD: f64 accum
+    return acc + A.astype("float64") @ x.astype(np.float64)   # BAD x2

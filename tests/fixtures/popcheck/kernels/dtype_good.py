@@ -1,0 +1,8 @@
+"""Good twin: f32 end to end."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def reference(A, x):
+    acc = jnp.zeros(A.shape[0], dtype=jnp.float32)
+    return acc + A.astype("float32") @ x.astype(np.float32)

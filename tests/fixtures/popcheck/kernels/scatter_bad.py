@@ -1,0 +1,9 @@
+"""Known-bad fixture (lives under kernels/): scatter in a kernel module."""
+import jax
+import jax.numpy as jnp
+
+
+def fold(out, wide, ids):
+    out = out.at[ids].add(wide)                      # BAD: scatter-add
+    seg = jax.ops.segment_sum(wide, ids, out.shape[0])   # BAD: segment_sum
+    return out + seg

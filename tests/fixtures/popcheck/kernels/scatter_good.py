@@ -1,0 +1,10 @@
+"""Good twin: gather + one-hot fold (the structured-kernel design)."""
+import jax
+import jax.numpy as jnp
+
+
+def fold(val, idx, v, n_out):
+    out = jnp.sum(val * jnp.take(v, idx, axis=0), axis=0)
+    onehot = idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (idx.shape[0], n_out), 1)
+    return out + jnp.sum(val[:, None] * onehot.astype(val.dtype), axis=0)

@@ -1,0 +1,25 @@
+"""Known-bad fixture: fresh objects defeating the jit/lru caches."""
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_builder(key, fn):
+    return key, fn
+
+
+def build_each_call(data):
+    # BAD: lambda arg to an lru_cached function — cache miss every call
+    return _cached_builder("k", lambda x: x + 1)
+
+
+def solve_each_call(solver, chunked):
+    # BAD: jit of a fresh lambda invoked in place — recompiles per call
+    return jax.jit(lambda c: jax.lax.map(solver, c))(chunked)
+
+
+def wrap_each_call(make, batch):
+    # BAD: locally-built callable jitted then invoked in the same function
+    fn = jax.jit(make())
+    return fn(batch)

@@ -1,0 +1,23 @@
+"""Good twin: the memoized-builder pattern."""
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_builder(key, fn):
+    return key, fn
+
+
+@functools.lru_cache(maxsize=8)
+def _runner(solver):
+    # jit inside an lru_cached builder: built once per solver identity
+    return jax.jit(lambda c: jax.lax.map(solver, c))
+
+
+def build_once(named_fn):
+    return _cached_builder("k", named_fn)
+
+
+def solve_cached(solver, chunked):
+    return _runner(solver)(chunked)

@@ -1,0 +1,15 @@
+"""Known-bad fixture: BlockSpec tiles that cannot fit VMEM."""
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def launch(kernel, a, out_shape):
+    # 2 x (1, 4096, 4096) f32 blocks = 128 MiB resident >> ~16 MiB VMEM
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((1, BLOCK, BLOCK), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, BLOCK, BLOCK), lambda i: (i, 0, 0)),
+        out_shape=out_shape,
+    )(a)

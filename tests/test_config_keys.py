@@ -1,0 +1,84 @@
+"""Cache-key contract for SolveConfig/ExecConfig: hash/eq consistency is
+asserted at CONSTRUCTION (``config._check_cache_key``), and the keys
+survive dataclass evolution — a subclass adding a field still
+distinguishes configs in an lru_cache, so growing the config never
+silently aliases two different solver setups onto one compiled entry."""
+
+import dataclasses
+import functools
+
+import pytest
+
+from repro.core import ExecConfig, SolveConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class _GrownExec(ExecConfig):
+    # tomorrow's field, added after caches started keying on ExecConfig
+    pipeline_depth: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeakyExec(ExecConfig):
+    # a field that defeats freezing — must fail at construction
+    gadgets: list = dataclasses.field(default_factory=list)
+
+
+class TestConstructionCheck:
+    def test_unhashable_field_fails_at_construction(self):
+        with pytest.raises(TypeError, match="must stay hashable"):
+            _LeakyExec(backend="vmap")
+
+    def test_error_names_the_class(self):
+        with pytest.raises(TypeError, match="_LeakyExec"):
+            _LeakyExec()
+
+    def test_dict_fields_are_frozen_not_rejected(self):
+        cfg = ExecConfig(solver_kw={"max_iters": 50},
+                         backend_opts={"chunk": 4})
+        assert isinstance(cfg.solver_kw, tuple)
+        assert isinstance(cfg.backend_opts, tuple)
+        assert hash(cfg) == hash(ExecConfig(solver_kw={"max_iters": 50},
+                                            backend_opts={"chunk": 4}))
+
+    def test_replace_roundtrip_is_identity_key(self):
+        for cfg in (SolveConfig(k=4, strategy="stratified"),
+                    ExecConfig(solver_kw={"max_iters": 50})):
+            twin = dataclasses.replace(cfg)
+            assert twin == cfg and hash(twin) == hash(cfg)
+
+
+class TestKeysSurviveFieldAdditions:
+    def test_new_field_distinguishes_configs(self):
+        a = _GrownExec(solver_kw={"max_iters": 50}, pipeline_depth=1)
+        b = _GrownExec(solver_kw={"max_iters": 50}, pipeline_depth=2)
+        assert a != b
+        assert hash(a) != hash(b)   # dataclass hash covers ALL fields
+
+    def test_lru_cache_keyed_on_config_sees_new_field(self):
+        calls = []
+
+        @functools.lru_cache(maxsize=8)
+        def build(cfg):
+            calls.append(cfg)
+            return object()
+
+        a = _GrownExec(pipeline_depth=1)
+        b = _GrownExec(pipeline_depth=2)
+        s1 = build(a)
+        s2 = build(b)
+        assert s1 is not s2 and len(calls) == 2
+        # equal reconstruction hits the cache — no spurious recompiles
+        assert build(dataclasses.replace(a)) is s1
+        assert len(calls) == 2
+
+    def test_subclass_inherits_validation(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            _GrownExec(backend="warp_drive")
+        with pytest.raises(ValueError, match="solver_kw"):
+            _GrownExec(solver_kw={"max_itres": 5})
+
+    def test_base_and_subclass_never_alias(self):
+        base = ExecConfig()
+        grown = _GrownExec()
+        assert base != grown    # dataclass eq requires same class

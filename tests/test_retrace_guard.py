@@ -1,0 +1,118 @@
+"""Runtime sanitizers: steady-state ``PopSession.step()`` must run the
+map-step backends with ZERO retraces and ZERO host syncs.  The guards
+themselves are unit-tested first (they must actually trip), then armed
+over a 10-tick warm session including one churn repair — the acceptance
+claim of the popcheck PR."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.runtime import (HostSyncError, RetraceError,
+                                    host_sync_tripwire, retrace_guard,
+                                    steady_state_guard)
+from repro.core import ExecConfig, SolveConfig
+from repro.domains import GavelInstance
+from repro.problems.cluster_scheduling import make_cluster_workload
+from repro.service import PopService
+
+KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the guards must trip (a sanitizer that can't fire proves nothing)
+# ---------------------------------------------------------------------------
+
+class TestGuardsTrip:
+    def test_retrace_guard_counts_fresh_compiles(self):
+        with pytest.raises(RetraceError, match="compilation"):
+            with retrace_guard(max_retraces=0):
+                jax.jit(lambda x: x * 2.0)(jnp.arange(4.0))  # fresh compile
+
+    def test_retrace_guard_budget_and_stats(self):
+        with retrace_guard(max_retraces=1) as stats:
+            jax.jit(lambda x: x * 3.0)(jnp.arange(4.0))
+        assert stats.compiles == 1 and stats.compiled_names
+
+    def test_retrace_guard_silent_on_cached_execution(self):
+        fn = jax.jit(lambda x: x + 1.0)
+        x = jnp.arange(8.0)
+        fn(x).block_until_ready()                    # compile outside
+        with retrace_guard(max_retraces=0) as stats:
+            fn(x)                                    # cache hit
+        assert stats.compiles == 0
+
+    def test_tripwire_rejects_numpy_readback(self):
+        x = jnp.arange(4.0)
+        with pytest.raises(HostSyncError, match="np.asarray"):
+            with host_sync_tripwire():
+                np.asarray(x)
+
+    def test_tripwire_rejects_block_and_get(self):
+        x = jnp.arange(4.0)
+        with pytest.raises(HostSyncError, match="block_until_ready"):
+            with host_sync_tripwire():
+                jax.block_until_ready(x)
+        with pytest.raises(HostSyncError, match="device_get"):
+            with host_sync_tripwire():
+                jax.device_get(x)
+
+    def test_tripwire_allows_pure_host_numpy(self):
+        with host_sync_tripwire():
+            out = np.asarray([1.0, 2.0]) + np.array(3.0)
+        assert out.shape == (2,)
+
+    def test_tripwire_restores_patches(self):
+        orig_asarray = np.asarray
+        with host_sync_tripwire():
+            assert np.asarray is not orig_asarray
+        assert np.asarray is orig_asarray
+        np.asarray(jnp.arange(2.0))                  # fine again
+
+
+# ---------------------------------------------------------------------------
+# the acceptance claim: warm session ticks are retrace- and sync-free
+# ---------------------------------------------------------------------------
+
+class TestSteadyStateSession:
+    def test_ten_warm_ticks_zero_retraces_zero_host_syncs(self):
+        svc = PopService()
+        sess = svc.session("fleet", domain="gavel",
+                           solve=SolveConfig(k=2, strategy="stratified"),
+                           exec=ExecConfig(solver_kw=KW))
+        ids = np.arange(32)
+
+        # warm-up covers every step TYPE once, outside the guard: the
+        # cold first solve, a plan hit, and one churn repair (the masked
+        # warm-start blend in backends._resolve_warm compiles its tiny
+        # where/broadcast primitives the first time a partially-cold
+        # lane mask appears — a one-time cost per shape, paid here)
+        sess.step(GavelInstance(make_cluster_workload(32, seed=0),
+                                job_ids=ids))
+        sess.step(GavelInstance(make_cluster_workload(32, seed=1),
+                                job_ids=ids))
+        ids = np.concatenate([ids[4:], 100 + np.arange(4)])
+        warm = sess.step(GavelInstance(make_cluster_workload(32, seed=2),
+                                       job_ids=ids))
+        assert warm.plan_cache == "repair"
+
+        with steady_state_guard(max_retraces=0) as stats:
+            for tick in range(3, 11):
+                if tick == 7:
+                    # a SECOND churn, inside the guard: 4 more jobs
+                    # leave, 4 arrive — the plan repairs in place and,
+                    # shapes being stable, compiles nothing
+                    ids = np.concatenate([ids[4:], 200 + np.arange(4)])
+                wl = make_cluster_workload(32, seed=tick)
+                a = sess.step(GavelInstance(wl, job_ids=ids))
+                if tick == 7:
+                    assert a.plan_cache == "repair"
+                else:
+                    assert a.plan_cache == "hit"
+                assert a.k == 2
+
+        assert stats.compiles == 0, stats.compiled_names
+        # the guard really covered the hot path: every tick went through
+        # a wrapped MAP_BACKENDS entry at least once
+        assert stats.hot_backend_calls >= 8
