@@ -18,6 +18,10 @@
 #                        (engines x map backends x domains at 1e-5, plus
 #                        the in-loop-KKT bit-level gate) — the fast check
 #                        after touching kernels/ or the step engines
+#   make test-faults     ONLY the fault-tolerance gates: the chaos suite
+#                        (divergence quarantine, deadline ladder, damaged
+#                        warm state) + session checkpoint/restore incl.
+#                        the cross-process restore (docs/ROBUSTNESS.md)
 #   make test-api        ONLY the public-surface gates: API snapshot diff,
 #                        service/session + domain-registry tests, shim
 #                        bit-for-bit pins, example smoke runs
@@ -32,8 +36,8 @@
 
 PY = PYTHONPATH=src python
 
-.PHONY: test check-imports test-conformance test-api api-snapshot \
-        lint-pop lint-pop-baseline \
+.PHONY: test check-imports test-conformance test-api test-faults \
+        api-snapshot lint-pop lint-pop-baseline \
         bench-backends bench-smoke bench-snapshot bench-check bench-churn
 
 check-imports:
@@ -57,6 +61,9 @@ test:
 
 test-conformance:
 	$(PY) -m pytest -q tests/test_engine_conformance.py
+
+test-faults:
+	$(PY) -m pytest -q tests/test_faults.py tests/test_session_checkpoint.py
 
 bench-backends:
 	$(PY) -m benchmarks.bench_pop_scaling --backend vmap --backend chunked_vmap --backend shard_map

@@ -3,8 +3,16 @@
 One service, several tenants across all four registered domains, steps
 interleaved (the serving pattern: every tenant's instance drifts each
 round, one churns periodically).  Reports steps/sec after the warmup
-round, the plan-cache hit rate, and the mean warm fraction — the
-observability the session layer added, aggregated by the service itself.
+round, p50/p99 step latency, the plan-cache hit rate, and the mean warm
+fraction — the observability the session layer added, aggregated by the
+service itself.
+
+A fault-injection phase (``repro.analysis.faults``) then drives one
+tenant through the degradation ladder — poisoned warm iterates, a dropped
+plan, a deadline under inflated solve rates — and reports the
+degraded/recovered/fallback counters plus fault-step latency, so the
+robustness layer's overhead and behavior are tracked PR-over-PR alongside
+the happy path.
 
     PYTHONPATH=src python -m benchmarks.bench_session [--fast]
 """
@@ -117,13 +125,18 @@ def run(fast: bool = False, rounds: int = None, seed: int = 0) -> dict:
     t1 = time.perf_counter()
     n_steps = 0
     per_tenant = {name: [] for name, *_ in tenants}
+    step_walls = []
     for _ in range(rounds):
         for name, _, drift, _, _ in tenants:
             insts[name] = drift(insts[name])
+            ts = time.perf_counter()
             a = service.session(name).step(insts[name])
+            step_walls.append(time.perf_counter() - ts)
             per_tenant[name].append(a.solve_time_s)
             n_steps += 1
     steady_s = time.perf_counter() - t1
+    p50 = float(np.percentile(step_walls, 50))
+    p99 = float(np.percentile(step_walls, 99))
 
     stats = service.stats()
     steps_per_sec = n_steps / steady_s
@@ -131,6 +144,7 @@ def run(fast: bool = False, rounds: int = None, seed: int = 0) -> dict:
          f"steps_per_sec={steps_per_sec:.2f};"
          f"plan_hit_rate={stats['plan_hit_rate']:.2f};"
          f"warm_fraction={stats['warm_fraction_mean']:.3f}")
+    emit("session_step_latency_p50", p50 * 1e6, f"p99_us={p99 * 1e6:.0f}")
     emit("session_warmup_round", warmup_s / len(tenants) * 1e6,
          f"tenants={len(tenants)}")
     for name in per_tenant:
@@ -138,17 +152,61 @@ def run(fast: bool = False, rounds: int = None, seed: int = 0) -> dict:
              float(np.mean(per_tenant[name])) * 1e6,
              f"steps={len(per_tenant[name])}")
 
+    fault = _fault_phase(service, insts, tenants)
+
     out = {
         "tenants": len(tenants), "rounds": rounds,
         "warmup_s": round(warmup_s, 3), "steady_s": round(steady_s, 3),
         "steps_per_sec": round(steps_per_sec, 3),
+        "step_latency_p50_s": round(p50, 4),
+        "step_latency_p99_s": round(p99, 4),
+        "faults": fault,
         "service_stats": {k: (round(v, 4) if isinstance(v, float) else v)
-                          for k, v in stats.items()},
+                          for k, v in service.stats().items()},
         "per_tenant_mean_s": {k: round(float(np.mean(v)), 4)
                               for k, v in per_tenant.items()},
     }
     save_json("session", out)
     return out
+
+
+def _fault_phase(service, insts, tenants) -> dict:
+    """Push one traffic tenant down the degradation ladder and time every
+    rung (docs/ROBUSTNESS.md): lane quarantine, warm-state mismatch, and a
+    deadline fallback under inflated solve rates."""
+    from repro.analysis import faults as fj
+
+    name, _, drift = next((n, i, d) for n, i, d, *_ in tenants
+                          if n.startswith("net"))
+    sess = service.session(name)
+    statuses, walls = [], []
+
+    def _step(deadline_s=None):
+        insts[name] = drift(insts[name])
+        ts = time.perf_counter()
+        a = sess.step(insts[name], deadline_s=deadline_s)
+        walls.append(time.perf_counter() - ts)
+        statuses.append(a.status)
+        return a
+
+    fj.poison_warm(sess, lanes=[1])
+    _step()                                   # -> recovered (quarantine)
+    fj.drop_warm_plan(sess)
+    _step()                                   # -> recovered (mismatch)
+    saved = dict(service._rates)
+    fj.inflate_rates(service, factor=1e9)
+    _step(deadline_s=0.25)                    # -> fallback (deadline)
+    service._rates.clear()
+    service._rates.update(saved)
+    _step()                                   # -> ok (ladder exits clean)
+
+    counts = {s: statuses.count(s)
+              for s in ("ok", "degraded", "recovered", "fallback")}
+    emit("session_fault_step", float(np.mean(walls)) * 1e6,
+         f"recovered={counts['recovered']};fallback={counts['fallback']};"
+         f"final={statuses[-1]}")
+    return {"statuses": statuses, "counts": counts,
+            "mean_fault_step_s": round(float(np.mean(walls)), 4)}
 
 
 if __name__ == "__main__":

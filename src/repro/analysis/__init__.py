@@ -19,6 +19,9 @@ needs.  This package machine-checks them:
 * :mod:`repro.analysis.runtime` — runtime sanitizers: a retrace-counter
   guard and a host-transfer tripwire for asserting steady-state
   ``PopSession.step()`` is retrace- and sync-free.
+* :mod:`repro.analysis.faults` — fault injection for the serving layer
+  (poisoned/dropped warm state, damaged checkpoints, inflated solve
+  rates) driving the chaos suite behind docs/ROBUSTNESS.md.
 
 Rule catalog + suppression syntax: ``docs/LINTS.md``.
 """
@@ -32,6 +35,15 @@ from .core import (  # noqa: F401
     load_baseline,
     run_popcheck,
     write_baseline,
+)
+from .faults import (  # noqa: F401
+    FAULTS,
+    corrupt_checkpoint,
+    drop_warm_plan,
+    inflate_rates,
+    mismatch_warm,
+    poison_warm,
+    truncate_checkpoint,
 )
 from .runtime import (  # noqa: F401
     HostSyncError,
@@ -62,4 +74,11 @@ __all__ = [
     "retrace_guard",
     "host_sync_tripwire",
     "steady_state_guard",
+    "FAULTS",
+    "poison_warm",
+    "drop_warm_plan",
+    "mismatch_warm",
+    "inflate_rates",
+    "truncate_checkpoint",
+    "corrupt_checkpoint",
 ]

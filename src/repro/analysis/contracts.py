@@ -31,6 +31,16 @@ config hashability.
     ``@dataclass(frozen=True)`` classes that are not re-frozen in
     ``__post_init__``, and any class defining ``__eq__`` without
     ``__hash__`` (Python then silently sets ``__hash__ = None``).
+
+``silent-except``
+    The fault-tolerant serving layer (docs/ROBUSTNESS.md) turns every
+    caught exception into a recorded fault — an ``except`` that swallows
+    silently hides exactly the divergence/deadline/corruption events the
+    ladder exists to count.  Flags, inside ``core/`` and ``service.py``:
+    bare ``except:`` (catches ``KeyboardInterrupt``/``SystemExit`` too),
+    and ``except Exception:`` / ``except BaseException:`` whose body is
+    only ``pass``/``...``.  Typed handlers (``except ValueError: pass``)
+    and broad handlers that record/re-raise are fine.
 """
 
 from __future__ import annotations
@@ -277,4 +287,66 @@ def check_config_hash(project: Project) -> List[Finding]:
                         f"{sorted(bad)} (unhashable) and never re-frozen "
                         "in __post_init__ — it will poison every cache "
                         "keyed on the config"))
+    return findings
+
+
+_BROAD_EXC = {"Exception", "BaseException"}
+
+
+def _silent_except_scope(rel: str) -> bool:
+    """Which files the silent-except rule polices: the serving hot path
+    (``core/`` + ``service.py``) inside the package; everything handed to
+    the runner outside it (so fixtures pin the rule)."""
+    parts = rel.split("/")
+    if "repro" in parts and "src" in parts:
+        return "core" in parts or parts[-1] == "service.py"
+    return True
+
+
+def _is_silent_body(body) -> bool:
+    return all(
+        isinstance(stmt, ast.Pass)
+        or (isinstance(stmt, ast.Expr)
+            and isinstance(stmt.value, ast.Constant)
+            and stmt.value.value is ...)
+        for stmt in body)
+
+
+def _exc_names(node) -> Set[str]:
+    """Exception-class names a handler catches (unwraps tuples)."""
+    if node is None:
+        return set()
+    elts = node.elts if isinstance(node, ast.Tuple) else [node]
+    names = set()
+    for e in elts:
+        if isinstance(e, ast.Name):
+            names.add(e.id)
+        elif isinstance(e, ast.Attribute):
+            names.add(e.attr)
+    return names
+
+
+@rule("silent-except")
+def check_silent_except(project: Project) -> List[Finding]:
+    findings = []
+    for ctx in project.files:
+        if ctx.tree is None or not _silent_except_scope(ctx.rel):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                findings.append(Finding(
+                    "silent-except", ctx.rel, node.lineno,
+                    "bare 'except:' — catches KeyboardInterrupt/SystemExit "
+                    "and hides the fault from the serving ladder; catch a "
+                    "typed exception and record it as a fault"))
+                continue
+            broad = _exc_names(node.type) & _BROAD_EXC
+            if broad and _is_silent_body(node.body):
+                findings.append(Finding(
+                    "silent-except", ctx.rel, node.lineno,
+                    f"'except {sorted(broad)[0]}' with a pass-only body "
+                    "swallows faults silently — record the fault "
+                    "(Allocation.faults / stats counters) or re-raise"))
     return findings

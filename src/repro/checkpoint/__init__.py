@@ -1,2 +1,4 @@
-"""Sharded, atomic, async checkpointing."""
+"""Sharded, atomic, async checkpointing + session-state byte format."""
 from .checkpointer import Checkpointer
+from .session_state import (CheckpointError, config_digest, pack_state,
+                            unpack_state)

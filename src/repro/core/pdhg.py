@@ -335,6 +335,7 @@ class SolveResult(NamedTuple):
     iterations: jnp.ndarray
     converged: jnp.ndarray
     n_restarts: Optional[jnp.ndarray] = None   # [k] adaptive-restart count
+    diverged: Optional[jnp.ndarray] = None     # [k] lane quarantined in-loop
 
 
 # --------------------------------------------------------------------------
@@ -655,6 +656,8 @@ class _State(NamedTuple):
     n_restarts: jnp.ndarray   # [k]
     prim_res: jnp.ndarray
     gap: jnp.ndarray
+    best_score: jnp.ndarray   # [k] best KKT score seen (divergence baseline)
+    diverged: jnp.ndarray     # [k] lane frozen by the divergence guard
 
 
 def _equilibrate(engine: StepEngine, op: OperatorLP,
@@ -700,6 +703,7 @@ def solve_stacked(
     warm_y: Optional[jnp.ndarray] = None,
     warm_mask: Optional[jnp.ndarray] = None,
     kkt: str = "inloop",
+    divergence_ratio: float = 1e4,
 ) -> SolveResult:
     """Solve a STACK of k LPs at once (every ``op`` leaf has a leading [k]
     axis; the result carries the same axis).  This is the map-step core:
@@ -719,6 +723,15 @@ def solve_stacked(
     candidate's products with fresh K/K^T passes each check (2 extra
     applications per chunk): the verification reference that must match
     the in-loop path bit-level on the CPU/XLA path.
+
+    Divergence quarantine: a lane whose KKT score goes non-finite (NaN/inf
+    iterates, e.g. from a poisoned warm start) or exceeds
+    ``divergence_ratio`` times the best score it has seen is frozen in
+    place and reported in ``SolveResult.diverged`` ([k] bool).  The guard
+    is carried as loop data exactly like ``done`` — no host sync, no
+    retrace — and healthy batch peers keep iterating.  Diverged lanes
+    report ``converged=False``; callers (``service.PopSession``) quarantine
+    the warm state and cold-restart only those lanes.
     """
     if kkt not in ("inloop", "standalone"):
         raise ValueError(f"unknown kkt mode {kkt!r}; "
@@ -812,6 +825,16 @@ def solve_stacked(
         gap = jnp.where(use_avg, gap_a, gap_c)
         score = jnp.minimum(score_a, score_c)
 
+        # ---- divergence guard: non-finite score, or blow-up past the best
+        # score this lane ever reached.  best_score starts at +inf so the
+        # ratio test cannot fire before a finite score exists.  Pure data —
+        # the lane freezes via the same mechanism as `done`.
+        blown = (~jnp.isfinite(score)) | (
+            score > divergence_ratio * jnp.maximum(state.best_score, 1e-12))
+        diverged = state.diverged | (blown & ~state.done)
+        best_score = jnp.minimum(
+            state.best_score, jnp.where(jnp.isfinite(score), score, jnp.inf))
+
         # ---- adaptive restart: only on sufficient KKT decay ---------------
         # (restarting every chunk kills PDHG momentum; PDLP-style decay test)
         restart = (score < 0.4 * state.last_score) | (avg_n >= 16 * check_every)
@@ -825,15 +848,17 @@ def solve_stacked(
             0.5 * jnp.log(jnp.clip(ratio, 1e-4, 1e4)) + 0.5 * jnp.log(state.omega)
         )
 
-        conv = (pr < tol_primal) & (gap < tol_gap)
+        conv = (pr < tol_primal) & (gap < tol_gap) & ~state.diverged
         done = state.done | conv
 
         def pick(on_restart, no_restart):
             return jnp.where(_bcast(restart, on_restart), on_restart, no_restart)
 
-        # freeze finished lanes: batch peers keep going
+        # freeze finished AND quarantined lanes: batch peers keep going
+        frozen = state.done | state.diverged
+
         def keep(new, old):
-            return jnp.where(_bcast(state.done, new), old, new)
+            return jnp.where(_bcast(frozen, new), old, new)
 
         return _State(
             x=keep(pick(x_r, x), state.x),
@@ -851,11 +876,13 @@ def solve_stacked(
             y_anchor=keep(pick(y_r, state.y_anchor), state.y_anchor),
             omega=keep(pick(omega_new, state.omega), state.omega),
             last_score=keep(pick(score, state.last_score), state.last_score),
-            it=state.it + jnp.where(state.done, 0, check_every),
+            it=state.it + jnp.where(frozen, 0, check_every),
             done=done,
             n_restarts=state.n_restarts + jnp.where(
-                state.done | ~restart, 0, 1).astype(jnp.int32),
+                frozen | ~restart, 0, 1).astype(jnp.int32),
             prim_res=keep(pr, state.prim_res), gap=keep(gap, state.gap),
+            best_score=keep(best_score, state.best_score),
+            diverged=diverged,
         )
 
     init = _State(
@@ -870,10 +897,13 @@ def solve_stacked(
         done=jnp.zeros((k,), bool),
         n_restarts=jnp.zeros((k,), jnp.int32),
         prim_res=jnp.full((k,), jnp.inf), gap=jnp.full((k,), jnp.inf),
+        best_score=jnp.full((k,), jnp.inf),
+        diverged=jnp.zeros((k,), bool),
     )
 
     state = jax.lax.while_loop(
-        lambda s: jnp.any((~s.done) & (s.it < max_iters)), chunk, init
+        lambda s: jnp.any((~s.done) & (~s.diverged) & (s.it < max_iters)),
+        chunk, init,
     )
 
     x_fin, y_fin = state.x, state.y
@@ -884,7 +914,7 @@ def solve_stacked(
     return SolveResult(
         x=x_fin, y=y_fin, primal_obj=p_obj, dual_obj=d_obj,
         primal_res=pr, gap=gap, iterations=state.it, converged=state.done,
-        n_restarts=state.n_restarts,
+        n_restarts=state.n_restarts, diverged=state.diverged,
     )
 
 
@@ -914,6 +944,7 @@ def solve(
     warm_mask: Optional[jnp.ndarray] = None,
     engine: Union[None, str, StepEngine] = "matvec",
     kkt: str = "inloop",
+    divergence_ratio: float = 1e4,
 ) -> SolveResult:
     """Solve one LP: a k=1 stack through :func:`solve_stacked`.  Fully
     traceable; vmap over a batched ``op`` for POP (or better, hand the
@@ -926,7 +957,8 @@ def solve(
         opb, engine=engine, K_mv=K_mv, KT_mv=KT_mv,
         max_iters=max_iters, check_every=check_every,
         tol_primal=tol_primal, tol_gap=tol_gap, eta=eta, omega0=omega0,
-        equilibrate=equilibrate, warm_x=wx, warm_y=wy, warm_mask=wm, kkt=kkt)
+        equilibrate=equilibrate, warm_x=wx, warm_y=wy, warm_mask=wm, kkt=kkt,
+        divergence_ratio=divergence_ratio)
     return jax.tree.map(lambda a: a[0], res)
 
 
@@ -982,7 +1014,7 @@ def solve_dense(lp: LinearProgram, max_iters: int = 20_000,
                        dual_obj=squeeze(d_obj), primal_res=squeeze(pr),
                        gap=squeeze(gap),
                        iterations=res.iterations, converged=res.converged,
-                       n_restarts=res.n_restarts)
+                       n_restarts=res.n_restarts, diverged=res.diverged)
 
 
 def solve_batched(op_batched: OperatorLP, K_mv=dense_K_mv, KT_mv=dense_KT_mv,

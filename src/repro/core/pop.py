@@ -160,6 +160,10 @@ class POPResult:
     backend: Optional[str] = None
     engine: Optional[str] = None
     plan_source: Optional[str] = None
+    # [k] per-lane divergence-quarantine flags from the solver (lanes whose
+    # KKT score went non-finite or blew up; see pdhg.solve_stacked) — what
+    # the service layer reads to cold-restart only the poisoned lanes
+    diverged: Optional[np.ndarray] = None
 
 
 # --------------------------------------------------------------------------
@@ -302,6 +306,44 @@ def reduce(problem: POPProblem, pop_plan: PopPlan, ops: OperatorLP,
 # the one-call wrapper
 # --------------------------------------------------------------------------
 
+def _require_finite_ops(ops: OperatorLP, where: str) -> None:
+    """Reject NaN/inf instance data before it reaches the solver.
+
+    BIG-sentinel bounds are finite by construction (``core/problem.py``),
+    so any genuine non-finite value in the built operator means the
+    *instance* carried NaN/inf (bad rates, corrupted demands).  Raising
+    here with the field name beats the alternative — a silently garbage
+    allocation, or a divergence quarantine blamed on the warm start.
+    Host-side scalar reads are fine at this boundary: it runs before the
+    map-step backends (the steady-state host-sync tripwire arms around
+    those only), and it is not reachable from ``solve_stacked``.
+    """
+    def _nonfinite(a) -> bool:
+        a = jnp.asarray(a)
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            return False
+        return not bool(jnp.all(jnp.isfinite(a)))
+
+    for name in ("c", "q", "l", "u"):
+        if _nonfinite(getattr(ops, name)):
+            raise ValueError(
+                f"non-finite instance data reached {where}: field {name!r} "
+                "contains NaN/inf — fix the instance (rates/demands/bounds) "
+                "before solving")
+    for group_name, group in (("data", ops.data),
+                              ("structured", ops.structured)):
+        if group is None:
+            continue
+        leaves = jax.tree_util.tree_flatten_with_path(group)[0]
+        for path, leaf in leaves:
+            if _nonfinite(leaf):
+                key = jax.tree_util.keystr(path)
+                raise ValueError(
+                    f"non-finite instance data reached {where}: operator "
+                    f"field {group_name}{key} contains NaN/inf — fix the "
+                    "instance (constraint matrices) before solving")
+
+
 def _ids_or_positional(ids, n: int) -> np.ndarray:
     return np.arange(n) if ids is None else np.asarray(ids)
 
@@ -341,6 +383,7 @@ def solve_instance(
     replan: bool = False,
     partition_idx: Optional[np.ndarray] = None,
     entity_ids: Optional[np.ndarray] = None,
+    cold_lanes: Optional[np.ndarray] = None,
 ) -> POPResult:
     """Run POP on ``problem``: :func:`plan` -> :func:`build` ->
     :func:`solve` -> :func:`reduce` in one call, configured by the two
@@ -363,7 +406,13 @@ def solve_instance(
     The result reports the backend/engine that ACTUALLY ran (``"auto"``
     resolved) and where its plan came from (``plan_source``: "reused" /
     "repaired" / "fresh" / "provided") — the observability the service
-    plan cache and the benchmarks aggregate."""
+    plan cache and the benchmarks aggregate.
+
+    ``cold_lanes`` ([k] bool) forces those lanes to start cold even when a
+    warm start is supplied — the divergence-quarantine retry path:
+    ``PopSession.step`` re-solves with ``plan=prev.plan`` and
+    ``cold_lanes=prev.diverged`` so only the poisoned lanes restart while
+    healthy lanes keep their iterates."""
     # honour the SolveConfig.min_per_sub promise HERE (the canonical
     # entry), not in each caller; without min_per_sub the requested k is
     # used verbatim (the historical pop_solve semantics)
@@ -404,6 +453,7 @@ def solve_instance(
                       replicate_threshold=solve_cfg.replicate_threshold,
                       partition_idx=partition_idx, entity_ids=entity_ids)
     ops = build(problem, p)
+    _require_finite_ops(ops, "solve_instance")
     build_time = time.perf_counter() - t0
 
     warm_in = None
@@ -424,6 +474,29 @@ def solve_instance(
             ws = remap_warm(prev_plan, p, warm, ops=ops)
             warm_in = ws
             warm_stats = ws.stats
+
+    if cold_lanes is not None and warm_in is not None:
+        # divergence quarantine: poisoned lanes restart cold, survivors
+        # keep their iterates (a data-level mask — same jit cache key)
+        cl = np.asarray(cold_lanes, bool).reshape(-1)
+        if cl.shape[0] != p.k:
+            raise ValueError(f"cold_lanes has {cl.shape[0]} entries for "
+                             f"k={p.k} lanes")
+        if isinstance(warm_in, WarmStart):
+            wx, wy = warm_in.x, warm_in.y
+            mask = np.asarray(warm_in.mask, bool) & ~cl
+            stats = dict(warm_in.stats or {})
+        else:
+            wx, wy = warm_in
+            mask = ~cl
+            stats = dict(warm_stats or {})
+        stats["quarantined_lanes"] = int(cl.sum())
+        stats["lanes_cold"] = int((~mask).sum())
+        stats["warm_fraction"] = float(
+            stats.get("warm_fraction", 1.0) * mask.mean()) if p.k else 0.0
+        stats["identity"] = False
+        warm_in = WarmStart(x=wx, y=wy, mask=mask, stats=stats)
+        warm_stats = stats
 
     # resolve "auto" specs HERE so the result can report what actually ran
     backend_name, engine_run, opts = backends_mod.resolve_exec(
@@ -447,6 +520,8 @@ def solve_instance(
         plan=p, warm_stats=warm_stats,
         backend=backend_name, engine=pdhg.engine_name(engine_run),
         plan_source=source,
+        diverged=(None if res.diverged is None
+                  else np.asarray(res.diverged)),
     )
 
 
@@ -518,6 +593,7 @@ def solve_full_ex(problem: POPProblem, *,
     solver_kw = exec_cfg.solver_dict()
     t0 = time.perf_counter()
     op = problem.build_full()
+    _require_finite_ops(op, "solve_full_ex")
     build_time = time.perf_counter() - t0
     t1 = time.perf_counter()
     res, backend_name, engine_name = backends_mod.solve_one_ex(

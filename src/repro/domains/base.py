@@ -88,6 +88,11 @@ class DomainSpec:
     entity_ids: Optional[Callable[[Any], Optional[np.ndarray]]] = None
     round: Optional[Callable] = None          # (inst, alloc) -> allocation
     evaluate: Optional[Callable] = None       # (inst, alloc) -> metrics
+    # solver-free fallback allocation, (inst) -> alloc: the last rung of
+    # the serving degradation ladder (docs/ROBUSTNESS.md) — what a session
+    # returns when the solve diverges/misses its deadline and there is no
+    # previous allocation to repeat
+    greedy: Optional[Callable] = None
     default_solve: SolveConfig = SolveConfig()
     default_exec: ExecConfig = ExecConfig()
 

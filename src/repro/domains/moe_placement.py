@@ -255,6 +255,8 @@ SPEC = register(DomainSpec(
     entity_ids=lambda inst: inst.ids,
     round=_round,
     evaluate=_evaluate,
+    # degradation-ladder fallback (defined below, resolved at call time)
+    greedy=lambda inst: greedy_placement(inst),
     default_solve=SolveConfig(k=4, strategy="stratified", min_per_sub=8),
     default_exec=ExecConfig(solver_kw=dict(
         max_iters=8_000, tol_primal=1e-4, tol_gap=1e-4)),

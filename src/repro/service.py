@@ -30,6 +30,18 @@ before this layer existed) and how the plan cache behaved (``"hit"`` /
 ``"repair"`` / ``"miss"`` / ``"full"``); the service aggregates those into
 :meth:`PopService.stats` for fleet dashboards and the session bench.
 
+Serving is fault-tolerant (docs/ROBUSTNESS.md): ``step`` never returns a
+non-finite allocation.  Diverged solver lanes (``POPResult.diverged``,
+detected in-loop by ``pdhg.solve_stacked``) quarantine the poisoned warm
+state and cold-restart only the affected lanes; ``step(deadline_s=...)``
+budgets iterations from a measured per-iteration rate and degrades
+through a ladder (full solve → capped/relaxed solve → best-effort chunk →
+previous allocation / domain greedy); ``Allocation.status`` reports the
+rung taken (``ok``/``degraded``/``recovered``/``fallback``).
+:meth:`PopService.checkpoint` / :meth:`PopService.restore` serialize every
+tenant's warm state to bytes (``repro.checkpoint.session_state``) for
+rolling restarts — corrupt or stale blobs degrade to cold starts.
+
 Domains enter through the declarative registry (``repro.domains``) — the
 legacy doors (``pop_solve``, ``GavelScheduler``, ``balance_requests``)
 forward here and warn.
@@ -38,14 +50,17 @@ forward here and warn.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Any, Dict, Optional
 
 import numpy as np
 
+from .checkpoint import session_state as ckpt_mod
 from .core import pop as pop_mod
 from .core.config import ExecConfig, SolveConfig
 from .core.pdhg import SolveResult
+from .core.plan import PopPlan
 from .domains import DomainSpec, StepOutcome, registry as registry_mod
 
 __all__ = ["Allocation", "PopService", "PopSession"]
@@ -60,6 +75,15 @@ class Allocation:
     hook when it has one; ``raw`` is the underlying
     :class:`~repro.core.pop.POPResult` / :class:`~repro.core.pop.FullResult`
     / domain result for callers that need solver state or sub-LP detail.
+
+    ``status`` is the degradation-ladder rung the step landed on
+    (docs/ROBUSTNESS.md): ``"ok"`` (normal solve), ``"degraded"`` (solve
+    ran with a deadline-capped iteration budget / relaxed tolerance),
+    ``"recovered"`` (a fault — diverged lanes, poisoned warm state — was
+    quarantined and re-solved), ``"fallback"`` (no solve result; ``alloc``
+    is the previous allocation or the domain's greedy).  ``faults`` lists
+    what happened on the way (``"divergence:2"``, ``"deadline:capped"``,
+    ``"warm-state-mismatch"``, ...); empty on clean steps.
     """
 
     domain: str
@@ -70,7 +94,7 @@ class Allocation:
     # observability: what ACTUALLY ran ("auto" resolved), and how the plan
     # cache behaved: "hit" (previous plan reused verbatim), "repair"
     # (incrementally repaired under churn), "miss" (fresh plan), "full"
-    # (unpartitioned k=1 path)
+    # (unpartitioned k=1 path), "fallback" (no solve ran)
     backend: Optional[str]
     engine: Optional[str]
     plan_cache: str
@@ -80,6 +104,8 @@ class Allocation:
     build_time_s: float
     iterations: int
     raw: Any = None
+    status: str = "ok"
+    faults: tuple = ()
 
     @property
     def objective(self) -> Optional[float]:
@@ -89,18 +115,61 @@ class Allocation:
 def _zeros() -> dict:
     return {"steps": 0, "plan_hits": 0, "plan_repairs": 0, "plan_misses": 0,
             "full_solves": 0, "solve_time_s": 0.0, "warm_fraction_sum": 0.0,
-            "warm_steps": 0}
+            "warm_steps": 0,
+            # fault-tolerance counters (docs/ROBUSTNESS.md): ladder rungs
+            # taken, solver lanes cold-restarted by the divergence guard,
+            # total faults recorded, checkpoint restore outcomes
+            "degraded_steps": 0, "recovered_steps": 0, "fallback_steps": 0,
+            "quarantined_lanes": 0, "faults": 0,
+            "checkpoint_restores": 0, "checkpoint_failures": 0}
 
 
 def _tally(stats: dict, alloc: Allocation) -> None:
     stats["steps"] += 1
-    key = {"hit": "plan_hits", "repair": "plan_repairs",
-           "full": "full_solves"}.get(alloc.plan_cache, "plan_misses")
-    stats[key] += 1
+    if alloc.status == "fallback":
+        pass        # no solve ran — the plan cache was never consulted
+    else:
+        key = {"hit": "plan_hits", "repair": "plan_repairs",
+               "full": "full_solves"}.get(alloc.plan_cache, "plan_misses")
+        stats[key] += 1
+    if alloc.status != "ok":
+        stats[alloc.status + "_steps"] += 1
+    stats["faults"] += len(alloc.faults)
     stats["solve_time_s"] += alloc.solve_time_s
     if alloc.warm_fraction is not None:
         stats["warm_fraction_sum"] += alloc.warm_fraction
         stats["warm_steps"] += 1
+
+
+def _finite(alloc) -> bool:
+    """Is every numeric entry of an allocation finite?"""
+    try:
+        arr = np.asarray(alloc, dtype=float)
+    except (TypeError, ValueError):
+        return True     # non-numeric allocation: nothing to check
+    return bool(np.isfinite(arr).all())
+
+
+def _pop_warm_ok(warm) -> bool:
+    """Is a pop-mode warm state internally consistent (plan present,
+    iterates present and shaped like the plan says)?  Catches dropped or
+    mismatched warm state — a bad restore, an injector, a stale seed —
+    BEFORE it reaches the solver."""
+    plan = getattr(warm, "plan", None)
+    x, y = getattr(warm, "x", None), getattr(warm, "y", None)
+    if plan is None or x is None or y is None:
+        return False
+    shapes = getattr(plan, "shapes", None) or {}
+    for name, arr in (("x", x), ("y", y)):
+        want = shapes.get(name)
+        if want is not None and tuple(np.shape(arr)) != tuple(want):
+            return False
+    return True
+
+
+def _count_diverged(res) -> int:
+    div = getattr(res, "diverged", None)
+    return 0 if div is None else int(np.asarray(div).sum())
 
 
 class PopSession:
@@ -127,6 +196,9 @@ class PopSession:
         self._warm: Any = None
         self._mode: Optional[str] = None
         self._full_ids: Optional[tuple] = None
+        # wall time of the most recent step (the deadline predictor for
+        # step_override domains, which have no iteration-rate model)
+        self._last_wall: Optional[float] = None
 
     # ------------------------------------------------------------------ api --
     def seed(self, warm_state: Any, mode: Optional[str] = None,
@@ -138,11 +210,16 @@ class PopSession:
         :class:`~repro.core.pop.POPResult` seeds the pop path, a
         :class:`~repro.core.pop.FullResult` / ``SolveResult`` the k=1 full
         path, anything else the domain's own ``step_override`` state.
-        Restoring FULL-path state additionally needs ``entity_ids`` — the
-        ids the iterates are FOR (pass the plain entity COUNT for domains
-        without an ``entity_ids`` hook; the flat LP has no per-entity
-        remap, only an alignment check); without them the first step
-        safely starts cold."""
+        An explicit ``mode`` is validated against the state's type — a
+        mismatch raises here, with a clear message, instead of failing
+        deep inside ``solve_instance``.  Restoring FULL-path state
+        additionally needs ``entity_ids`` — the ids the iterates are FOR
+        (pass the plain entity COUNT for domains without an
+        ``entity_ids`` hook; the flat LP has no per-entity remap, only an
+        alignment check); without them the first step safely starts cold."""
+        if warm_state is None:
+            self._warm, self._mode = None, None
+            return self
         if mode is None:
             if isinstance(warm_state, pop_mod.POPResult):
                 mode = "pop"
@@ -150,89 +227,355 @@ class PopSession:
                 mode = "full"
             else:
                 mode = "domain"
+        elif mode not in ("pop", "full", "domain"):
+            raise ValueError(f"seed(): unknown mode {mode!r}; expected "
+                             "'pop', 'full' or 'domain'")
+        if mode == "pop":
+            if not isinstance(warm_state, pop_mod.POPResult):
+                raise TypeError(
+                    f"seed(mode='pop') needs a POPResult, got "
+                    f"{type(warm_state).__name__} — pass mode='full' for "
+                    "FullResult/SolveResult state or mode='domain' for a "
+                    "step_override domain's own state")
+            if warm_state.x is None or warm_state.y is None:
+                raise ValueError(
+                    "seed(mode='pop'): POPResult carries no solver "
+                    "iterates (x/y are None) — it cannot warm-start")
         if mode == "full":
+            if not isinstance(warm_state, (pop_mod.FullResult, SolveResult)):
+                raise TypeError(
+                    f"seed(mode='full') needs a FullResult or SolveResult, "
+                    f"got {type(warm_state).__name__} — pass mode='pop' "
+                    "for POPResult state")
             if isinstance(warm_state, pop_mod.FullResult):
                 warm_state = warm_state.res
             if entity_ids is None:
                 self._full_ids = None
             elif np.isscalar(entity_ids):
                 # positional domains: ids ARE positions, so the alignment
-                # key is just the entity count (see _step_generic)
+                # key is just the entity count (see _step_full)
                 self._full_ids = ("pos", int(entity_ids))
             else:
                 self._full_ids = tuple(np.asarray(entity_ids).tolist())
         self._warm = warm_state
-        self._mode = mode if warm_state is not None else None
+        self._mode = mode
         return self
 
-    def step(self, instance: Any) -> Allocation:
+    def step(self, instance: Any, *,
+             deadline_s: Optional[float] = None) -> Allocation:
         """Solve the (updated) instance; warm-start from the previous step
-        wherever the domain allows.  The single online entry point."""
+        wherever the domain allows.  The single online entry point.
+
+        ``deadline_s`` bounds the step's wall time: the iteration budget
+        is derived from the measured per-iteration rate of previous steps
+        with the same (domain, ExecConfig, shape) and the solve degrades
+        down the ladder (docs/ROBUSTNESS.md) when the budget is short —
+        the returned :class:`Allocation` reports the rung in ``status``.
+        Without a deadline the fault-free path is byte-identical to the
+        pre-deadline behavior (same jit cache keys, zero retraces)."""
+        t0 = time.perf_counter()
         if self.spec.step_override is not None:
-            out: StepOutcome = self.spec.step_override(
-                instance, self.solve_cfg, self.exec_cfg, self._warm)
-            self._warm, self._mode = out.warm_state, "domain"
-            alloc = self._wrap(
-                instance, out.alloc, out.metrics, backend=out.backend,
-                engine=out.engine, plan_cache=out.plan_cache, k=out.k,
-                warm_fraction=out.warm_fraction,
-                solve_time_s=out.solve_time_s,
-                build_time_s=out.build_time_s,
-                iterations=out.iterations, raw=out.raw)
+            alloc = self._step_override(instance, deadline_s, t0)
         else:
-            alloc = self._step_generic(instance)
+            alloc = self._step_generic(instance, deadline_s, t0)
         self.steps += 1
+        self._last_wall = time.perf_counter() - t0
         _tally(self.stats, alloc)
         _tally(self.service._stats, alloc)
         self.last = alloc
         return alloc
 
+    # ------------------------------------------------- step_override domains --
+    def _step_override(self, instance: Any, deadline_s: Optional[float],
+                       t0: float) -> Allocation:
+        faults: list = []
+        # no iteration-rate model for domain-run pipelines: if the last
+        # step's wall time already blows the deadline, skip the solve
+        if (deadline_s is not None and self._last_wall is not None
+                and self._last_wall > deadline_s
+                and (self.last is not None or self.spec.greedy is not None)):
+            return self._fallback(instance, ["deadline"], t0)
+        out = None
+        attempts = [self._warm] + ([None] if self._warm is not None else [])
+        for i, warm in enumerate(attempts):
+            try:
+                cand: StepOutcome = self.spec.step_override(
+                    instance, self.solve_cfg, self.exec_cfg, warm)
+            except Exception as e:
+                faults.append(f"step-error:{type(e).__name__}")
+                continue
+            if not _finite(cand.alloc):
+                faults.append("nonfinite-alloc")
+                continue
+            out = cand
+            if i > 0:
+                faults.append("warm-quarantined")
+            break
+        if out is None:
+            self._warm, self._mode = None, None
+            return self._fallback(instance, faults, t0)
+        self._warm, self._mode = out.warm_state, "domain"
+        return self._wrap(
+            instance, out.alloc, out.metrics, backend=out.backend,
+            engine=out.engine, plan_cache=out.plan_cache, k=out.k,
+            warm_fraction=out.warm_fraction,
+            solve_time_s=out.solve_time_s,
+            build_time_s=out.build_time_s,
+            iterations=out.iterations, raw=out.raw,
+            status="recovered" if faults else "ok", faults=tuple(faults))
+
     # ------------------------------------------------------- generic domains --
-    def _step_generic(self, instance: Any) -> Allocation:
+    def _step_generic(self, instance: Any, deadline_s: Optional[float],
+                      t0: float) -> Allocation:
         spec = self.spec
         problem = spec.make_problem(instance)
         eids = spec.ids_of(instance)
         k = self.solve_cfg.k_for(problem.n_entities)
         if k > 1:
-            warm = self._warm if self._mode == "pop" else None
-            res = pop_mod.solve_instance(
-                problem, dataclasses.replace(self.solve_cfg, k=k),
-                self.exec_cfg, warm=warm, entity_ids=eids)
-            self._warm, self._mode = res, "pop"
-            raw_alloc = res.alloc
-            cache = {"reused": "hit", "repaired": "repair"}.get(
-                res.plan_source, "miss")
-            wf = res.warm_stats["warm_fraction"] if res.warm_stats else None
-            out = self._wrap(
-                instance, raw_alloc, None, problem=problem,
-                backend=res.backend, engine=res.engine, plan_cache=cache,
-                k=k, warm_fraction=wf, solve_time_s=res.solve_time_s,
-                build_time_s=res.build_time_s,
-                iterations=int(np.asarray(res.iterations).sum()), raw=res)
-            return out
+            return self._step_pop(instance, problem, eids, k, deadline_s, t0)
+        return self._step_full(instance, problem, eids, deadline_s, t0)
+
+    def _step_pop(self, instance, problem, eids, k: int,
+                  deadline_s: Optional[float], t0: float) -> Allocation:
+        faults: list = []
+        warm = self._warm if self._mode == "pop" else None
+        if warm is not None and not _pop_warm_ok(warm):
+            faults.append("warm-state-mismatch")
+            self._warm, self._mode = None, None
+            warm = None
+        scfg = dataclasses.replace(self.solve_cfg, k=k)
+        rkey = ("pop", self.spec.name, self.exec_cfg, k, problem.n_entities)
+        exec_run, rung = self._ladder(rkey, deadline_s, t0)
+        if rung == "fallback":
+            return self._fallback(instance, faults + ["deadline"], t0,
+                                  problem=problem)
+        if rung is not None:
+            faults.append(f"deadline:{rung}")
+
+        def _solve(w, **kw):
+            return pop_mod.solve_instance(problem, scfg, exec_run, warm=w,
+                                          entity_ids=eids, **kw)
+
+        try:
+            res = _solve(warm)
+        except Exception as e:
+            if warm is None:
+                raise     # cold-solve errors (bad instance data) are real
+            faults.append(f"warm-solve-error:{type(e).__name__}")
+            self._warm, self._mode = None, None
+            warm = None
+            res = _solve(None)
+
+        n_div = _count_diverged(res)
+        if n_div and warm is not None:
+            # quarantine: cold-restart ONLY the diverged lanes, keep the
+            # plan and the healthy lanes' iterates
+            faults.append(f"divergence:{n_div}")
+            self._note_quarantine(n_div)
+            retry = None
+            try:
+                retry = _solve(warm, plan=res.plan, cold_lanes=res.diverged)
+            except Exception as e:
+                faults.append(f"warm-solve-error:{type(e).__name__}")
+            if retry is None or _count_diverged(retry):
+                # quarantine didn't clear it: drop the warm state entirely
+                if retry is not None:
+                    self._note_quarantine(_count_diverged(retry))
+                faults.append("warm-dropped")
+                self._warm, self._mode = None, None
+                warm = None
+                res = _solve(None)
+            else:
+                res = retry
+            n_div = _count_diverged(res)
+        if n_div:
+            # a COLD solve diverged: the instance itself is pathological
+            # at this config — nothing left to quarantine
+            faults.append(f"cold-divergence:{n_div}")
+            self._note_quarantine(n_div)
+            self._warm, self._mode = None, None
+            return self._fallback(instance, faults, t0, problem=problem)
+        if not _finite(res.alloc):
+            faults.append("nonfinite-alloc")
+            self._warm, self._mode = None, None
+            return self._fallback(instance, faults, t0, problem=problem)
+
+        self._warm, self._mode = res, "pop"
+        self._note_rate(rkey, int(np.asarray(res.iterations).max(initial=0)),
+                        res.solve_time_s, time.perf_counter() - t0)
+        cache = {"reused": "hit", "repaired": "repair"}.get(
+            res.plan_source, "miss")
+        wf = res.warm_stats["warm_fraction"] if res.warm_stats else None
+        return self._wrap(
+            instance, res.alloc, None, problem=problem,
+            backend=res.backend, engine=res.engine, plan_cache=cache,
+            k=res.plan.k if res.plan is not None else 0,
+            warm_fraction=wf, solve_time_s=res.solve_time_s,
+            build_time_s=res.build_time_s,
+            iterations=int(np.asarray(res.iterations).sum()), raw=res,
+            status=self._status_of(faults, rung), faults=tuple(faults))
+
+    def _step_full(self, instance, problem, eids,
+                   deadline_s: Optional[float], t0: float) -> Allocation:
         # ---- k=1: the unpartitioned full problem through the same substrate.
         # The flat LP has no per-entity remap, so warm only while the entity
         # identity sequence is unchanged (a same-size swap would silently
         # misalign rows); crossing the pop<->full mode boundary drops warm.
+        faults: list = []
         ids_key = (tuple(np.asarray(eids).tolist()) if eids is not None
                    else ("pos", problem.n_entities))
         warm = self._warm if self._mode == "full" else None
         if warm is not None and (self._full_ids is None
                                  or ids_key != self._full_ids):
             warm = None
-        fr = pop_mod.solve_full_ex(problem, warm=warm, exec_cfg=self.exec_cfg)
+        rkey = ("full", self.spec.name, self.exec_cfg, 1, problem.n_entities)
+        exec_run, rung = self._ladder(rkey, deadline_s, t0)
+        if rung == "fallback":
+            return self._fallback(instance, faults + ["deadline"], t0,
+                                  problem=problem)
+        if rung is not None:
+            faults.append(f"deadline:{rung}")
+
+        try:
+            fr = pop_mod.solve_full_ex(problem, warm=warm, exec_cfg=exec_run)
+        except Exception as e:
+            if warm is None:
+                raise
+            faults.append(f"warm-solve-error:{type(e).__name__}")
+            self._warm, self._mode = None, None
+            warm = None
+            fr = pop_mod.solve_full_ex(problem, warm=None, exec_cfg=exec_run)
+        if _count_diverged(fr.res) and warm is not None:
+            # k=1 has a single lane: quarantine == full cold restart
+            faults.append("divergence:1")
+            self._note_quarantine(1)
+            self._warm, self._mode = None, None
+            warm = None
+            fr = pop_mod.solve_full_ex(problem, warm=None, exec_cfg=exec_run)
+        if _count_diverged(fr.res):
+            faults.append("cold-divergence:1")
+            self._note_quarantine(1)
+            self._warm, self._mode = None, None
+            return self._fallback(instance, faults, t0, problem=problem)
+        if not _finite(fr.alloc):
+            faults.append("nonfinite-alloc")
+            self._warm, self._mode = None, None
+            return self._fallback(instance, faults, t0, problem=problem)
+
         self._warm, self._mode = fr.res, "full"
         self._full_ids = ids_key
+        self._note_rate(rkey, int(np.asarray(fr.res.iterations).max(initial=0)),
+                        fr.solve_time_s, time.perf_counter() - t0)
         return self._wrap(
             instance, fr.alloc, None, problem=problem, backend=fr.backend,
             engine=fr.engine, plan_cache="full", k=1,
             warm_fraction=None if warm is None else 1.0,
             solve_time_s=fr.solve_time_s, build_time_s=fr.build_time_s,
-            iterations=int(np.asarray(fr.res.iterations).sum()), raw=fr)
+            iterations=int(np.asarray(fr.res.iterations).sum()), raw=fr,
+            status=self._status_of(faults, rung), faults=tuple(faults))
+
+    # ---------------------------------------------- degradation ladder rungs --
+    @staticmethod
+    def _status_of(faults: list, rung: Optional[str]) -> str:
+        if any(not f.startswith("deadline") for f in faults):
+            return "recovered"
+        return "degraded" if rung is not None else "ok"
+
+    def _ladder(self, rkey: tuple, deadline_s: Optional[float],
+                t0: float):
+        """Pick the ExecConfig for this step under the deadline.
+
+        Returns ``(exec_cfg, rung)`` with rung ``None`` (full budget —
+        and, critically, the UNMODIFIED session ExecConfig, so the
+        no-deadline path keeps byte-identical jit cache keys),
+        ``"capped"`` (iteration cap + relaxed tolerance), ``"best-effort"``
+        (a single convergence-check chunk), or ``"fallback"`` (not even
+        one chunk fits — skip the solve).  Iteration budgets are quantized
+        to power-of-two multiples of ``check_every`` so the ladder only
+        ever creates O(log) distinct solver compilations per config."""
+        if deadline_s is None:
+            return self.exec_cfg, None
+        rate = self.service._rates.get(rkey)
+        if rate is None or rate <= 0.0:
+            return self.exec_cfg, None     # no measurement yet: run full
+        overhead = self.service._overheads.get(rkey, 0.0)
+        remaining = deadline_s - (time.perf_counter() - t0) - overhead
+        kw = self.exec_cfg.solver_dict()
+        max_it = int(kw.get("max_iters", 20_000))
+        ce = int(kw.get("check_every", 40))
+        budget = int(remaining / rate) if remaining > 0 else 0
+        if budget >= max_it:
+            return self.exec_cfg, None
+        if budget < ce:
+            return None, "fallback"
+        q = ce
+        while q * 2 <= budget:
+            q *= 2
+        kw["max_iters"] = int(min(q, max_it))
+        # a capped solve gets one tolerance notch back: better a looser
+        # answer within budget than a tight one we never reach
+        kw["tol_primal"] = float(kw.get("tol_primal", 1e-4)) * 10.0
+        kw["tol_gap"] = float(kw.get("tol_gap", 1e-4)) * 10.0
+        rung = "best-effort" if q == ce else "capped"
+        return dataclasses.replace(self.exec_cfg, solver_kw=kw), rung
+
+    def _note_rate(self, rkey: tuple, iters: int, solve_time_s: float,
+                   wall_s: float) -> None:
+        """EMA-update the measured per-iteration rate + per-step overhead
+        for this (domain, ExecConfig, shape) — what _ladder budgets from."""
+        if iters <= 0 or solve_time_s <= 0.0:
+            return
+        rates = self.service._rates
+        r = solve_time_s / iters
+        old = rates.get(rkey)
+        rates[rkey] = r if old is None else 0.5 * old + 0.5 * r
+        overheads = self.service._overheads
+        ov = max(wall_s - solve_time_s, 0.0)
+        o = overheads.get(rkey)
+        overheads[rkey] = ov if o is None else 0.5 * o + 0.5 * ov
+
+    def _note_quarantine(self, n: int) -> None:
+        self.stats["quarantined_lanes"] += n
+        self.service._stats["quarantined_lanes"] += n
+
+    def _fallback(self, instance, faults: list, t0: float,
+                  problem=None) -> Allocation:
+        """The ladder's last rung: repeat the previous allocation, else ask
+        the domain's greedy hook.  Never returns non-finite data; raises
+        only when there is literally nothing to serve."""
+        spec = self.spec
+        alloc, source = None, None
+        if self.last is not None and _finite(self.last.alloc):
+            alloc, source = self.last.alloc, "previous-allocation"
+        elif spec.greedy is not None:
+            alloc, source = np.asarray(spec.greedy(instance)), "greedy"
+        if alloc is None:
+            raise RuntimeError(
+                f"tenant {self.tenant!r} ({spec.name}): cannot produce an "
+                f"allocation — solve failed ({', '.join(faults) or 'n/a'}) "
+                "and the session has no previous allocation and the domain "
+                "registers no greedy= fallback hook")
+        try:
+            metrics = dict(spec.metrics_of(instance, problem, alloc))
+        except Exception as e:
+            # fallback must not die computing metrics for an allocation
+            # that was never meant for this exact instance
+            metrics = {"metrics_error": f"{type(e).__name__}: {e}"}
+        metrics["fallback_source"] = source
+        # NOTE: no rounding hook here — a previous allocation is already
+        # rounded, and greedy hooks return final allocations by contract
+        return Allocation(
+            domain=spec.name, tenant=self.tenant, step=self.steps,
+            alloc=alloc, metrics=metrics, backend=None, engine=None,
+            plan_cache="fallback", k=0, warm_fraction=None,
+            solve_time_s=time.perf_counter() - t0, build_time_s=0.0,
+            iterations=0, raw=None, status="fallback",
+            faults=tuple(faults) if faults else ("deadline",))
 
     def _wrap(self, instance, raw_alloc, metrics, *, backend, engine,
               plan_cache, k, warm_fraction, solve_time_s, build_time_s=0.0,
-              iterations=0, raw=None, problem=None) -> Allocation:
+              iterations=0, raw=None, problem=None, status="ok",
+              faults=()) -> Allocation:
         alloc = raw_alloc
         if self.spec.round is not None and self.spec.step_override is None:
             alloc = self.spec.round(instance, raw_alloc)
@@ -243,7 +586,140 @@ class PopSession:
             alloc=alloc, metrics=metrics, backend=backend, engine=engine,
             plan_cache=plan_cache, k=k, warm_fraction=warm_fraction,
             solve_time_s=solve_time_s, build_time_s=build_time_s,
-            iterations=iterations, raw=raw)
+            iterations=iterations, raw=raw, status=status,
+            faults=tuple(faults))
+
+    # ------------------------------------------------------ checkpoint hooks --
+    def _checkpoint_payload(self, prefix: str):
+        """(meta, arrays) for this session — see PopService.checkpoint."""
+        base = {
+            "prefix": prefix,
+            "domain": self.spec.name,
+            "steps": int(self.steps),
+            "solve_cfg": {
+                "k": self.solve_cfg.k, "strategy": self.solve_cfg.strategy,
+                "seed": self.solve_cfg.seed,
+                "replicate_threshold": self.solve_cfg.replicate_threshold,
+                "min_per_sub": self.solve_cfg.min_per_sub},
+            "exec_cfg": {
+                "backend": self.exec_cfg.backend,
+                "engine": self.exec_cfg.engine,
+                "solver_kw": self.exec_cfg.solver_dict(),
+                "backend_opts": self.exec_cfg.opts_dict()},
+            "digest": ckpt_mod.config_digest(self.solve_cfg, self.exec_cfg),
+        }
+        if self._mode == "pop" and isinstance(self._warm, pop_mod.POPResult):
+            w = self._warm
+            plan = w.plan
+            if (plan is None or w.x is None or w.y is None
+                    or plan.replication is not None):
+                return {**base, "mode": "skipped",
+                        "reason": "pop warm state without a serializable "
+                                  "plan (replicated plans are v1-excluded)"}, {}
+            meta = {**base, "mode": "pop", "plan": {
+                "k": int(plan.k), "n_entities": int(plan.n_entities),
+                "strategy": plan.strategy, "seed": int(plan.seed),
+                "shapes": {name: list(v)
+                           for name, v in (plan.shapes or {}).items()},
+                "has_ids": plan.entity_ids is not None}}
+            arrays = {f"{prefix}/x": w.x, f"{prefix}/y": w.y,
+                      f"{prefix}/idx": plan.idx,
+                      f"{prefix}/entity_of_slot": plan.entity_of_slot,
+                      f"{prefix}/alloc": w.alloc,
+                      f"{prefix}/iterations": w.iterations,
+                      f"{prefix}/converged": w.converged}
+            if plan.entity_ids is not None:
+                arrays[f"{prefix}/entity_ids"] = plan.entity_ids
+            return meta, arrays
+        if self._mode == "full" and isinstance(self._warm, SolveResult):
+            r = self._warm
+            if self._full_ids is None:
+                ids_kind, ids_val = "none", None
+            elif self._full_ids[0] == "pos":
+                ids_kind, ids_val = "pos", int(self._full_ids[1])
+            else:
+                ids_kind, ids_val = "ids", list(self._full_ids)
+            meta = {**base, "mode": "full", "full_ids_kind": ids_kind,
+                    "full_ids": ids_val}
+            arrays = {f"{prefix}/x": np.asarray(r.x),
+                      f"{prefix}/y": np.asarray(r.y),
+                      f"{prefix}/iterations": np.asarray(r.iterations),
+                      f"{prefix}/converged": np.asarray(r.converged),
+                      f"{prefix}/primal_obj": np.asarray(r.primal_obj)}
+            return meta, arrays
+        if self._mode == "domain":
+            return {**base, "mode": "skipped",
+                    "reason": "step_override domains carry opaque warm "
+                              "state (not serialized in v1)"}, {}
+        return {**base, "mode": "cold"}, {}
+
+    def _restore_payload(self, tmeta: dict, arrays: Dict[str, np.ndarray]):
+        """Rebuild this session's warm state from checkpoint meta+arrays;
+        raises CheckpointError on any misalignment."""
+        mode = tmeta.get("mode", "cold")
+        if mode in ("cold", "skipped"):
+            return
+        prefix = tmeta.get("prefix", "")
+
+        def arr(name: str) -> np.ndarray:
+            key = f"{prefix}/{name}"
+            if key not in arrays:
+                raise ckpt_mod.CheckpointError(
+                    f"checkpoint payload missing array {key!r}")
+            return arrays[key]
+
+        if mode == "pop":
+            pm = tmeta.get("plan") or {}
+            k, n = int(pm["k"]), int(pm["n_entities"])
+            idx, eos = arr("idx"), arr("entity_of_slot")
+            x, y = arr("x"), arr("y")
+            shapes = {name: tuple(v)
+                      for name, v in (pm.get("shapes") or {}).items()}
+            if idx.ndim != 2 or idx.shape[0] != k or eos.shape != idx.shape:
+                raise ckpt_mod.CheckpointError(
+                    f"plan arrays misaligned: idx {idx.shape} / "
+                    f"entity_of_slot {eos.shape} for k={k}")
+            for name, a in (("x", x), ("y", y)):
+                want = shapes.get(name)
+                if want is not None and tuple(a.shape) != want:
+                    raise ckpt_mod.CheckpointError(
+                        f"iterate {name} has shape {tuple(a.shape)}, plan "
+                        f"says {want} — stale or corrupt warm state")
+            ids = arr("entity_ids") if pm.get("has_ids") else None
+            if ids is not None and ids.shape[0] != n:
+                raise ckpt_mod.CheckpointError(
+                    f"entity_ids has {ids.shape[0]} entries for "
+                    f"{n} entities")
+            plan = PopPlan(k=k, n_entities=n, idx=idx, entity_of_slot=eos,
+                           strategy=pm.get("strategy", "stratified"),
+                           seed=int(pm.get("seed", 0)), replication=None,
+                           entity_ids=ids, similarity=None, layout=None,
+                           shapes=shapes or None)
+            res = pop_mod.POPResult(
+                alloc=arr("alloc"), idx=idx, solve_time_s=0.0,
+                build_time_s=0.0, iterations=arr("iterations"),
+                converged=arr("converged"), similarity={},
+                sub_objectives=np.zeros(k, np.float32), x=x, y=y, plan=plan)
+            self.seed(res, mode="pop")
+            return
+        if mode == "full":
+            x, y = arr("x"), arr("y")
+            res = SolveResult(
+                x=x, y=y, primal_obj=arr("primal_obj"),
+                dual_obj=np.float32(0.0), primal_res=np.float32(np.inf),
+                gap=np.float32(np.inf), iterations=arr("iterations"),
+                converged=arr("converged"))
+            kind = tmeta.get("full_ids_kind", "none")
+            if kind == "pos":
+                entity_ids = int(tmeta["full_ids"])
+            elif kind == "ids":
+                entity_ids = tmeta["full_ids"]
+            else:
+                entity_ids = None
+            self.seed(res, mode="full", entity_ids=entity_ids)
+            return
+        raise ckpt_mod.CheckpointError(
+            f"unknown session checkpoint mode {mode!r}")
 
 
 class PopService:
@@ -264,6 +740,11 @@ class PopService:
         self.exec_cfg = exec or ExecConfig()
         self._sessions: Dict[str, PopSession] = {}
         self._stats = _zeros()
+        # measured per-iteration solve rates + per-step overheads, keyed
+        # (path, domain, ExecConfig, k, n_entities) — the deadline ladder's
+        # budget model, warmed by every fault-free step
+        self._rates: Dict[tuple, float] = {}
+        self._overheads: Dict[tuple, float] = {}
         self.created = time.time()
 
     def session(self, tenant: str, instance: Any = None, *,
@@ -329,9 +810,100 @@ class PopService:
     def tenants(self) -> tuple:
         return tuple(sorted(self._sessions))
 
+    # --------------------------------------------------- checkpoint/restore --
+    def checkpoint(self) -> bytes:
+        """Serialize every tenant session's warm state to one bytes blob.
+
+        The blob (format: ``repro.checkpoint.session_state``) carries, per
+        tenant: the domain name, the pinned configs + their digest, the
+        step counter, and the warm state — PopPlan arrays + solver
+        iterates + entity ids (pop path) or the flat iterates + id key
+        (full path).  Warm state the format cannot express (replicated
+        plans, step_override domains' opaque state) is recorded as
+        ``skipped`` and restores cold.  Round-trip with
+        :meth:`restore`."""
+        tenants_meta: Dict[str, dict] = {}
+        arrays: Dict[str, np.ndarray] = {}
+        for i, tenant in enumerate(sorted(self._sessions)):
+            sess = self._sessions[tenant]
+            meta, arrs = sess._checkpoint_payload(f"t{i}")
+            try:
+                json.dumps(meta)
+            except (TypeError, ValueError):
+                meta = {"prefix": f"t{i}", "domain": sess.spec.name,
+                        "mode": "skipped",
+                        "reason": "non-JSON-serializable session config"}
+                arrs = {}
+            tenants_meta[tenant] = meta
+            arrays.update(arrs)
+        return ckpt_mod.pack_state({"tenants": tenants_meta}, arrays)
+
+    def restore(self, data: bytes, *, strict: bool = False) -> dict:
+        """Restore tenant sessions from a :meth:`checkpoint` blob.
+
+        Integrity (content hash, magic, version) is checked by the format;
+        alignment (config digest, plan-vs-iterate shapes, entity-id
+        counts) per tenant here.  Any failure DEGRADES: the blob — or just
+        the offending tenant — restores cold and the failure lands in the
+        returned report (``{"restored": [...], "cold": [...], "errors":
+        {...}}``) and ``stats()["checkpoint_failures"]``; nothing raises
+        unless ``strict=True``."""
+        report = {"restored": [], "cold": [], "errors": {}}
+        try:
+            meta, arrays = ckpt_mod.unpack_state(data)
+            tenants = meta["tenants"]
+            if not isinstance(tenants, dict):
+                raise ckpt_mod.CheckpointError("manifest meta lacks a "
+                                               "tenants table")
+        except (ckpt_mod.CheckpointError, KeyError, TypeError) as e:
+            self._stats["checkpoint_failures"] += 1
+            if strict:
+                raise
+            report["errors"]["<checkpoint>"] = f"{type(e).__name__}: {e}"
+            return report
+        for tenant in sorted(tenants):
+            tmeta = tenants[tenant]
+            try:
+                sess = self.session(tenant, domain=tmeta["domain"],
+                                    solve=self._cfg_solve(tmeta),
+                                    exec=self._cfg_exec(tmeta))
+                if ckpt_mod.config_digest(sess.solve_cfg, sess.exec_cfg) \
+                        != tmeta.get("digest"):
+                    raise ckpt_mod.CheckpointError(
+                        "config digest mismatch (stale checkpoint or "
+                        "changed config schema)")
+                sess.steps = int(tmeta.get("steps", 0))
+                sess._restore_payload(tmeta, arrays)
+            except Exception as e:
+                self._stats["checkpoint_failures"] += 1
+                if strict:
+                    raise
+                report["errors"][tenant] = f"{type(e).__name__}: {e}"
+                report["cold"].append(tenant)
+                continue
+            if self._sessions[tenant]._warm is not None:
+                self._stats["checkpoint_restores"] += 1
+                report["restored"].append(tenant)
+            else:
+                report["cold"].append(tenant)
+        return report
+
+    @staticmethod
+    def _cfg_solve(tmeta: dict) -> SolveConfig:
+        return SolveConfig(**dict(tmeta["solve_cfg"]))
+
+    @staticmethod
+    def _cfg_exec(tmeta: dict) -> ExecConfig:
+        e = dict(tmeta["exec_cfg"])
+        return ExecConfig(backend=e["backend"], engine=e["engine"],
+                          solver_kw=dict(e.get("solver_kw") or {}),
+                          backend_opts=dict(e.get("backend_opts") or {}))
+
     def stats(self) -> dict:
         """Service-wide observability: step counts, plan-cache hit rates,
-        aggregate solve time, mean warm fraction."""
+        aggregate solve time, mean warm fraction, and the fault-tolerance
+        counters (degraded/recovered/fallback steps, quarantined lanes,
+        checkpoint restore outcomes)."""
         s = dict(self._stats)
         steps = max(s["steps"], 1)
         s["plan_hit_rate"] = s["plan_hits"] / steps

@@ -1,0 +1,296 @@
+"""Chaos suite for the fault-tolerant serving layer (docs/ROBUSTNESS.md).
+
+Every injector in ``repro.analysis.faults`` must land the session on its
+intended degradation-ladder rung: a finite allocation, the right
+``Allocation.status``/``faults``, the right service counters — and zero
+unhandled exceptions.  Run via ``make test-faults``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analysis import faults as fj
+from repro.core import ExecConfig, SolveConfig
+from repro.core import pop as pop_mod
+from repro.problems.traffic_engineering import (TrafficProblem,
+                                                k_shortest_paths,
+                                                make_demands, make_topology)
+from repro.service import PopService
+
+KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+
+
+def _traffic(n=24, seed=0, scale=1.0):
+    topo = make_topology(20, 40, seed=seed)
+    pairs, dem = make_demands(topo, n, seed=seed)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=seed)
+    return TrafficProblem(topo, pairs, dem * scale, pe)
+
+
+def _service(k=4):
+    return PopService(solve=SolveConfig(k=k), exec=ExecConfig(solver_kw=KW))
+
+
+def _warmed(svc, tenant="t", steps=2):
+    inst = _traffic()
+    sess = svc.session(tenant, inst)
+    sess.step(inst)
+    for i in range(1, steps):
+        sess.step(_traffic(scale=1.0 + 0.1 * i))
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# divergence quarantine
+# ---------------------------------------------------------------------------
+
+class TestDivergenceQuarantine:
+    def test_poisoned_lane_recovers(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.poison_warm(sess, lanes=[1])
+        alloc = sess.step(_traffic(scale=1.3))
+        assert alloc.status == "recovered"
+        assert any(f.startswith("divergence:") for f in alloc.faults)
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()
+        s = svc.stats()
+        assert s["recovered_steps"] == 1
+        assert s["quarantined_lanes"] >= 1
+        assert s["faults"] >= 1
+
+    def test_healthy_lanes_keep_iterates(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.poison_warm(sess, lanes=[0])
+        alloc = sess.step(_traffic(scale=1.3))
+        # the retry kept the plan and the surviving lanes' iterates
+        ws = alloc.raw.warm_stats
+        assert ws is not None and ws["quarantined_lanes"] == 1
+        assert 0.0 < ws["warm_fraction"] < 1.0
+
+    def test_next_step_is_clean(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.poison_warm(sess, lanes=[1])
+        sess.step(_traffic(scale=1.3))
+        after = sess.step(_traffic(scale=1.35))
+        assert after.status == "ok" and after.faults == ()
+
+    def test_all_lanes_poisoned_still_finite(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.poison_warm(sess, lanes=list(range(4)))
+        alloc = sess.step(_traffic(scale=1.3))
+        assert alloc.status == "recovered"
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()
+
+
+class TestWarmStateDamage:
+    def test_dropped_plan_flags_mismatch(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.drop_warm_plan(sess)
+        alloc = sess.step(_traffic(scale=1.3))
+        assert alloc.status == "recovered"
+        assert "warm-state-mismatch" in alloc.faults
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()
+
+    def test_mismatched_shapes_flag_mismatch(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.mismatch_warm(sess)
+        alloc = sess.step(_traffic(scale=1.3))
+        assert alloc.status == "recovered"
+        assert "warm-state-mismatch" in alloc.faults
+
+    def test_injectors_demand_warm_state(self):
+        svc = _service()
+        sess = svc.session("cold", domain="traffic")
+        with pytest.raises(ValueError, match="warm state"):
+            fj.poison_warm(sess)
+        with pytest.raises(ValueError, match="warm state"):
+            fj.drop_warm_plan(sess)
+
+
+# ---------------------------------------------------------------------------
+# deadline ladder
+# ---------------------------------------------------------------------------
+
+class TestDeadlineLadder:
+    def test_unmeasured_rate_runs_full(self):
+        svc = _service()
+        inst = _traffic()
+        sess = svc.session("t", inst)
+        alloc = sess.step(inst, deadline_s=0.001)   # no rate model yet
+        assert alloc.status == "ok" and alloc.faults == ()
+
+    def test_inflated_rate_falls_back_within_deadline(self):
+        svc = _service()
+        sess = _warmed(svc)
+        fj.inflate_rates(svc, factor=1e6)
+        deadline = 0.5
+        import time
+        t0 = time.perf_counter()
+        alloc = sess.step(_traffic(scale=1.3), deadline_s=deadline)
+        wall = time.perf_counter() - t0
+        assert alloc.status == "fallback"
+        assert "deadline" in alloc.faults
+        assert alloc.metrics["fallback_source"] == "previous-allocation"
+        assert wall < 2 * deadline
+        assert svc.stats()["fallback_steps"] == 1
+
+    def test_tight_budget_degrades(self):
+        svc = _service()
+        sess = _warmed(svc)
+        key = next(k for k in svc._rates if k[0] == "pop")
+        svc._rates[key] = 2e-5
+        svc._overheads[key] = 0.0
+        alloc = sess.step(_traffic(scale=1.3), deadline_s=0.002)
+        assert alloc.status == "degraded"
+        assert any(f.startswith("deadline:") for f in alloc.faults)
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()
+        assert svc.stats()["degraded_steps"] == 1
+
+    def test_loose_deadline_is_clean(self):
+        svc = _service()
+        sess = _warmed(svc)
+        alloc = sess.step(_traffic(scale=1.3), deadline_s=100.0)
+        assert alloc.status == "ok" and alloc.faults == ()
+
+    def test_fallback_without_history_uses_greedy(self):
+        # rates are SERVICE-level: a fresh tenant with the same
+        # (domain, config, shape) inherits the measurement, so its very
+        # first deadline-bound step can land on the last rung — which must
+        # come from the domain's greedy hook when there is no history
+        from repro.domains import make_placement_instance
+        svc = PopService(solve=SolveConfig(k=4),
+                         exec=ExecConfig(solver_kw=KW))
+        inst = make_placement_instance(32, 8, seed=0)
+        warm = svc.session("a", inst)
+        warm.step(inst)
+        fj.inflate_rates(svc, factor=1e6)
+        fresh = svc.session("b", domain="moe_placement")
+        alloc = fresh.step(inst, deadline_s=0.5)
+        assert alloc.status == "fallback"
+        assert alloc.metrics["fallback_source"] == "greedy"
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()
+
+    def test_no_history_no_greedy_raises(self):
+        svc = _service()
+        _warmed(svc, tenant="a")
+        fj.inflate_rates(svc, factor=1e6)
+        fresh = svc.session("b", domain="traffic")
+        with pytest.raises(RuntimeError, match="no previous allocation"):
+            fresh.step(_traffic(scale=1.3), deadline_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# input validation at the solve boundary
+# ---------------------------------------------------------------------------
+
+class TestNonFiniteRejection:
+    def test_solve_instance_rejects_nan_demand(self):
+        inst = _traffic()
+        bad = TrafficProblem(inst.topo, inst.pairs,
+                             np.where(np.arange(len(inst.demand)) == 3,
+                                      np.nan, inst.demand),
+                             inst.path_edges)
+        with pytest.raises(ValueError, match="non-finite instance data"):
+            pop_mod.solve_instance(bad, SolveConfig(k=4),
+                                   ExecConfig(solver_kw=KW))
+
+    def test_solve_full_ex_rejects_nan_demand(self):
+        inst = _traffic()
+        bad = TrafficProblem(inst.topo, inst.pairs,
+                             np.where(np.arange(len(inst.demand)) == 3,
+                                      np.inf, inst.demand),
+                             inst.path_edges)
+        with pytest.raises(ValueError, match="non-finite instance data"):
+            pop_mod.solve_full_ex(bad, exec_cfg=ExecConfig(solver_kw=KW))
+
+    def test_error_names_the_field(self):
+        inst = _traffic()
+        bad = TrafficProblem(inst.topo, inst.pairs,
+                             np.full_like(inst.demand, np.nan),
+                             inst.path_edges)
+        with pytest.raises(ValueError, match="field"):
+            pop_mod.solve_instance(bad, SolveConfig(k=4),
+                                   ExecConfig(solver_kw=KW))
+
+
+# ---------------------------------------------------------------------------
+# seed() validation (warm-state type vs mode)
+# ---------------------------------------------------------------------------
+
+class TestSeedValidation:
+    def test_unknown_mode_rejected(self):
+        svc = _service()
+        sess = svc.session("t", domain="traffic")
+        with pytest.raises(ValueError, match="unknown mode"):
+            sess.seed(object(), mode="warm")
+
+    def test_pop_mode_needs_popresult(self):
+        svc = _service()
+        sess = _warmed(svc)
+        full = pop_mod.solve_full_ex(_traffic(),
+                                     exec_cfg=ExecConfig(solver_kw=KW))
+        with pytest.raises(TypeError, match="needs a POPResult"):
+            sess.seed(full, mode="pop")
+
+    def test_full_mode_needs_solveresult(self):
+        svc = _service()
+        sess = _warmed(svc)
+        res = sess._warm      # a POPResult
+        with pytest.raises(TypeError, match="FullResult or SolveResult"):
+            sess.seed(res, mode="full")
+
+    def test_pop_mode_needs_iterates(self):
+        svc = _service()
+        sess = _warmed(svc)
+        import dataclasses
+        hollow = dataclasses.replace(sess._warm, x=None, y=None)
+        with pytest.raises(ValueError, match="no solver"):
+            sess.seed(hollow, mode="pop")
+
+
+# ---------------------------------------------------------------------------
+# the whole table, one sweep: no fault class crashes or emits non-finite data
+# ---------------------------------------------------------------------------
+
+class TestChaosSweep:
+    @pytest.mark.parametrize("name", ["poison-warm", "drop-warm-plan",
+                                      "mismatch-warm", "inflate-rates"])
+    def test_session_faults_never_crash(self, name):
+        svc = _service()
+        sess = _warmed(svc)
+        if name == "inflate-rates":
+            fj.FAULTS[name](svc, 1e6)
+            alloc = sess.step(_traffic(scale=1.3), deadline_s=0.5)
+            assert alloc.status == "fallback"
+        else:
+            fj.FAULTS[name](sess)
+            alloc = sess.step(_traffic(scale=1.3))
+            assert alloc.status == "recovered"
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()
+        assert alloc.faults
+        s = svc.stats()
+        assert s["faults"] >= 1
+        assert s["recovered_steps"] + s["fallback_steps"] == 1
+
+    @pytest.mark.parametrize("name", ["truncate-checkpoint",
+                                      "corrupt-checkpoint"])
+    def test_checkpoint_faults_degrade_to_cold(self, name):
+        svc = _service()
+        _warmed(svc)
+        blob = svc.checkpoint()
+        damaged = fj.FAULTS[name](blob)
+        fresh = _service()
+        report = fresh.restore(damaged)
+        assert report["restored"] == []
+        assert report["errors"]
+        assert fresh.stats()["checkpoint_failures"] == 1
+        # the service still serves — cold
+        sess = fresh.session("t", domain="traffic")
+        alloc = sess.step(_traffic())
+        assert alloc.status == "ok"
+        assert np.isfinite(np.asarray(alloc.alloc, float)).all()

@@ -27,6 +27,7 @@ CASES = [
     ("dtype-promotion", "kernels/dtype_bad.py", "kernels/dtype_good.py", 4),
     ("registry-contract", "registry_bad.py", "registry_good.py", 3),
     ("config-hashability", "confighash_bad.py", "confighash_good.py", 3),
+    ("silent-except", "silent_except_bad.py", "silent_except_good.py", 3),
 ]
 
 

@@ -1,0 +1,238 @@
+"""Session checkpoint/restore: byte-format integrity, service round trips,
+degrade-to-cold on damage, and a cross-process restore (the rolling
+restart docs/ROBUSTNESS.md promises)."""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _subproc import repro_env
+from repro.checkpoint import (CheckpointError, config_digest, pack_state,
+                              unpack_state)
+from repro.core import ExecConfig, SolveConfig
+from repro.problems.traffic_engineering import (TrafficProblem,
+                                                k_shortest_paths,
+                                                make_demands, make_topology)
+from repro.service import PopService
+
+KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+
+
+def _traffic(n=24, seed=0, scale=1.0):
+    topo = make_topology(20, 40, seed=seed)
+    pairs, dem = make_demands(topo, n, seed=seed)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=seed)
+    return TrafficProblem(topo, pairs, dem * scale, pe)
+
+
+def _service(k=4):
+    return PopService(solve=SolveConfig(k=k), exec=ExecConfig(solver_kw=KW))
+
+
+# ---------------------------------------------------------------------------
+# the byte format
+# ---------------------------------------------------------------------------
+
+class TestByteFormat:
+    def test_round_trip(self):
+        meta = {"tenants": {"a": {"mode": "pop", "steps": 3}}}
+        arrays = {"t0/x": np.arange(12.0).reshape(3, 4),
+                  "t0/idx": np.arange(6).reshape(2, 3)}
+        blob = pack_state(meta, arrays)
+        m2, a2 = unpack_state(blob)
+        assert m2 == meta
+        for k in arrays:
+            np.testing.assert_array_equal(a2[k], arrays[k])
+
+    def test_not_bytes(self):
+        with pytest.raises(CheckpointError, match="must be bytes"):
+            unpack_state("not bytes")
+
+    def test_bad_magic(self):
+        blob = pack_state({}, {})
+        with pytest.raises(CheckpointError, match="magic"):
+            unpack_state(b"NOTMAGIC" + blob[8:])
+
+    def test_truncated_header(self):
+        with pytest.raises(CheckpointError, match="truncated"):
+            unpack_state(pack_state({}, {})[:10])
+
+    def test_truncated_payload(self):
+        blob = pack_state({}, {"t0/x": np.zeros(8)})
+        with pytest.raises(CheckpointError, match="truncated"):
+            unpack_state(blob[:-20])
+
+    def test_flipped_payload_byte(self):
+        blob = pack_state({}, {"t0/x": np.zeros(8)})
+        bad = bytearray(blob)
+        bad[-5] ^= 0xFF
+        with pytest.raises(CheckpointError, match="hash mismatch"):
+            unpack_state(bytes(bad))
+
+    def test_version_pinned(self):
+        blob = pack_state({}, {})
+        meta_start = 8 + 8
+        raw = blob[meta_start:].split(b"}", 1)
+        tampered = blob.replace(b'"version": 1', b'"version": 9')
+        assert raw is not None   # keep the slice honest
+        with pytest.raises(CheckpointError, match="version"):
+            unpack_state(tampered)
+
+    def test_config_digest_tracks_configs(self):
+        a = config_digest(SolveConfig(k=4), ExecConfig(solver_kw=KW))
+        b = config_digest(SolveConfig(k=4), ExecConfig(solver_kw=KW))
+        c = config_digest(SolveConfig(k=8), ExecConfig(solver_kw=KW))
+        assert a == b != c
+
+
+# ---------------------------------------------------------------------------
+# service round trips
+# ---------------------------------------------------------------------------
+
+class TestServiceRoundTrip:
+    def test_pop_path_restores_warm(self):
+        svc = _service()
+        inst = _traffic()
+        sess = svc.session("a", inst)
+        sess.step(inst)
+        sess.step(_traffic(scale=1.1))
+        blob = svc.checkpoint()
+
+        fresh = _service()
+        report = fresh.restore(blob)
+        assert report == {"restored": ["a"], "cold": [], "errors": {}}
+        assert fresh.stats()["checkpoint_restores"] == 1
+        restored = fresh.session("a", domain="traffic")
+        assert restored.steps == sess.steps
+
+        nxt = _traffic(scale=1.2)
+        a_fresh = restored.step(nxt)
+        a_cont = sess.step(nxt)
+        assert a_fresh.warm_fraction and a_fresh.warm_fraction > 0
+        assert a_fresh.plan_cache == "hit"
+        np.testing.assert_allclose(a_fresh.alloc, a_cont.alloc)
+
+    def test_full_path_restores_warm(self):
+        svc = PopService(solve=SolveConfig(k=1),
+                         exec=ExecConfig(solver_kw=KW))
+        inst = _traffic()
+        sess = svc.session("a", inst)
+        sess.step(inst)
+        blob = svc.checkpoint()
+
+        fresh = PopService(solve=SolveConfig(k=1),
+                           exec=ExecConfig(solver_kw=KW))
+        report = fresh.restore(blob)
+        assert report["restored"] == ["a"]
+        alloc = fresh.session("a", domain="traffic").step(
+            _traffic(scale=1.05))
+        assert alloc.warm_fraction == 1.0
+        assert alloc.plan_cache == "full"
+
+    def test_cold_session_round_trips(self):
+        svc = _service()
+        svc.session("idle", domain="traffic")
+        report = _service_restore(svc)
+        assert report["cold"] == ["idle"] and not report["errors"]
+
+    def test_multi_tenant(self):
+        svc = _service()
+        for t in ("a", "b"):
+            inst = _traffic(seed=0 if t == "a" else 1)
+            svc.session(t, inst).step(inst)
+        fresh = _service()
+        report = fresh.restore(svc.checkpoint())
+        assert sorted(report["restored"]) == ["a", "b"]
+
+    def test_stale_digest_degrades_to_cold(self):
+        svc = _service()
+        inst = _traffic()
+        svc.session("a", inst).step(inst)
+        meta, arrays = unpack_state(svc.checkpoint())
+        meta["tenants"]["a"]["digest"] = "0" * 16
+        fresh = _service()
+        report = fresh.restore(pack_state(meta, arrays))
+        assert report["cold"] == ["a"]
+        assert "digest mismatch" in report["errors"]["a"]
+        assert fresh.stats()["checkpoint_failures"] == 1
+
+    def test_missing_array_degrades_to_cold(self):
+        svc = _service()
+        inst = _traffic()
+        svc.session("a", inst).step(inst)
+        meta, arrays = unpack_state(svc.checkpoint())
+        arrays = {k: v for k, v in arrays.items() if not k.endswith("/x")}
+        fresh = _service()
+        report = fresh.restore(pack_state(meta, arrays))
+        assert report["cold"] == ["a"]
+        assert "missing array" in report["errors"]["a"]
+
+    def test_strict_restore_raises(self):
+        fresh = _service()
+        with pytest.raises(CheckpointError):
+            fresh.restore(b"garbage-bytes-here", strict=True)
+
+    def test_garbage_blob_never_crashes(self):
+        fresh = _service()
+        report = fresh.restore(b"\x00" * 64)
+        assert report["restored"] == [] and report["errors"]
+        assert fresh.stats()["checkpoint_failures"] == 1
+
+
+def _service_restore(svc):
+    fresh = _service()
+    return fresh.restore(svc.checkpoint())
+
+
+# ---------------------------------------------------------------------------
+# cross-process restore: the actual rolling-restart scenario
+# ---------------------------------------------------------------------------
+
+CHILD = textwrap.dedent("""
+    import sys
+    import numpy as np
+    from repro.core import ExecConfig, SolveConfig
+    from repro.problems.traffic_engineering import (TrafficProblem,
+        k_shortest_paths, make_demands, make_topology)
+    from repro.service import PopService
+
+    KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+    topo = make_topology(20, 40, seed=0)
+    pairs, dem = make_demands(topo, 24, seed=0)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=0)
+    nxt = TrafficProblem(topo, pairs, dem * 1.2, pe)
+
+    svc = PopService(solve=SolveConfig(k=4), exec=ExecConfig(solver_kw=KW))
+    report = svc.restore(open(sys.argv[1], "rb").read(), strict=True)
+    assert report["restored"] == ["a"], report
+    alloc = svc.session("a", domain="traffic").step(nxt)
+    assert alloc.warm_fraction is not None and alloc.warm_fraction > 0, \\
+        alloc.warm_fraction
+    assert alloc.plan_cache == "hit", alloc.plan_cache
+    np.save(sys.argv[2], np.asarray(alloc.alloc, dtype=np.float64))
+""")
+
+
+class TestCrossProcessRestore:
+    def test_restore_in_fresh_process_matches_uninterrupted(self, tmp_path):
+        svc = _service()
+        inst = _traffic()
+        sess = svc.session("a", inst)
+        sess.step(inst)
+        sess.step(_traffic(scale=1.1))
+        blob_path = tmp_path / "session.ckpt"
+        blob_path.write_bytes(svc.checkpoint())
+
+        out_path = tmp_path / "alloc.npy"
+        proc = subprocess.run(
+            [sys.executable, "-c", CHILD, str(blob_path), str(out_path)],
+            env=repro_env(), capture_output=True, text=True, timeout=300)
+        assert proc.returncode == 0, proc.stderr
+
+        # the uninterrupted session, same next instance
+        cont = sess.step(_traffic(scale=1.2))
+        child_alloc = np.load(out_path)
+        np.testing.assert_allclose(child_alloc, cont.alloc, rtol=1e-6)
