@@ -173,6 +173,54 @@ def kkt_sweep(k: int = 8, n: int = 150, mi: int = 90, check_every: int = 10,
                  iters=budget * k) for m, t in best.items()]
 
 
+def full_engine_sweep(n_demands: int = 30_000, n_jobs: int = 1_000,
+                      max_iters: int = 2_000, seed: int = 0) -> list:
+    """Paper-scale FULL-problem rows (``--full``): the M-blocked streaming
+    engine vs the matvec reference on the unpartitioned baseline — traffic
+    at 30k demands and cluster scheduling at 1k jobs, the scale where
+    ``engine="auto"`` switches ``solve_full`` onto
+    ``fused_structured_full``.  One timed solve per cell at a fixed
+    iteration budget (these are minutes-scale solves; min-of-N would just
+    repeat the wait), after per-engine compile warmup.  Returns rows
+    [{domain, engine, solve_s, iters}, ...]."""
+    from repro.problems.traffic_engineering import (TrafficProblem,
+                                                    k_shortest_paths,
+                                                    make_demands,
+                                                    make_topology)
+    topo = make_topology(754, 1790, seed=seed)
+    pairs, dem = make_demands(topo, n_demands, seed=seed + 1)
+    pe = k_shortest_paths(topo, pairs, n_paths=4, max_len=64, seed=seed + 2)
+    wl = make_cluster_workload(n_jobs, num_workers=(256, 256, 256),
+                               seed=seed)
+    cases = {
+        "traffic": TrafficProblem(topo, pairs, dem, pe),
+        # singleton combos: only the no-space-sharing operator carries the
+        # structured metadata the blocked-full engine needs
+        "cluster": GavelProblem(wl, space_sharing=False),
+    }
+    kw = dict(max_iters=max_iters, check_every=200,
+              tol_primal=0.0, tol_gap=0.0)
+    rows = []
+    for domain, prob in cases.items():
+        t_by_engine = {}
+        for engine in ("matvec", "fused_structured_full"):
+            cfg = ExecConfig(engine=engine, solver_kw=kw)
+            pop.solve_full_ex(prob, exec_cfg=ExecConfig(
+                engine=engine, solver_kw=dict(kw, max_iters=1)))  # warmup
+            fr = pop.solve_full_ex(prob, exec_cfg=cfg)
+            assert fr.engine == engine, fr.engine
+            iters = int(np.asarray(fr.res.iterations).sum())
+            t_by_engine[engine] = fr.solve_time_s
+            rows.append(dict(domain=domain, engine=engine,
+                             solve_s=fr.solve_time_s, iters=iters))
+            emit(f"pop_full_{domain}_{engine}", fr.solve_time_s * 1e6,
+                 f"iters={iters}")
+        emit(f"pop_full_{domain}_speedup", 0.0,
+             f"full_{t_by_engine['matvec'] / t_by_engine['fused_structured_full']:.2f}"
+             "x_vs_matvec")
+    return rows
+
+
 def run(n_jobs: int = 512, ks=DEFAULT_KS, seed: int = 0,
         backends=DEFAULT_BACKENDS, engines: bool = True) -> dict:
     wl = make_cluster_workload(n_jobs, num_workers=(128, 128, 128), seed=seed)
@@ -273,7 +321,15 @@ def main(argv=None):
                          "what `make bench-smoke` uses)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for the engine sweep")
+    ap.add_argument("--full", action="store_true",
+                    help="run ONLY the paper-scale full-problem rows "
+                         "(30k-demand traffic / 1k-job cluster; "
+                         "fused_structured_full vs matvec — minutes-scale)")
     args = ap.parse_args(argv)
+    if args.full:
+        rows = full_engine_sweep()
+        save_json("pop_full_engine", {"rows": rows})
+        return
     if args.engine_sweep:
         if args.smoke:
             engine_sweep(ks=(1, 2, 4), n=60, mi=40, repeats=2,

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Host launch preset for benchmarks and long solves (see docs/API.md):
+#
+#   scripts/launch.sh python -m benchmarks.run --fast
+#   POP_HOST_DEVICES=8 scripts/launch.sh python -m benchmarks.bench_pop_scaling
+#
+# * LD_PRELOADs gperftools' tcmalloc when installed (thread-caching
+#   allocator; host-side ELL packing and pytree staging are malloc-heavy)
+#   and silences its large-alloc warnings — skipped cleanly when absent.
+# * Forces N host XLA devices (--xla_force_host_platform_device_count) so
+#   the shard_map/pmap map backends are exercised — and timed — on a
+#   many-core CPU host instead of collapsing to one device.  N defaults
+#   to the core count; override with POP_HOST_DEVICES.  An existing
+#   XLA_FLAGS setting for the flag is respected.
+# * Quiets TF/XLA C++ logging so benchmark CSV output stays parseable.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+tcmalloc="$(PYTHONPATH="${repo_root}/src" python -m benchmarks.common)"
+if [[ -n "${tcmalloc}" ]]; then
+    export LD_PRELOAD="${tcmalloc}${LD_PRELOAD:+:${LD_PRELOAD}}"
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
+    n="${POP_HOST_DEVICES:-$(nproc)}"
+    export XLA_FLAGS="${XLA_FLAGS:+${XLA_FLAGS} }--xla_force_host_platform_device_count=${n}"
+fi
+
+export PYTHONPATH="${repo_root}/src${PYTHONPATH:+:${PYTHONPATH}}"
+
+exec "$@"

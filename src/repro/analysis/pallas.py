@@ -2,12 +2,17 @@
 
 ``pallas-vmem-budget``
     Sum the statically-resolvable BlockSpec block shapes of every
-    ``pl.pallas_call`` (4 bytes/element — the kernels are f32) and flag
-    launches whose resident blocks exceed the ~16 MiB/core TPU VMEM
-    budget.  Dims that resolve through module constants and keyword
-    defaults (``BLOCK_M``/``BLOCK_N``) are counted; data-dependent dims
-    (the structured kernels' per-lane ``s.row_idx.shape[1:]`` blocks) are
-    skipped — their bound is the padding contract, not a literal.
+    ``pl.pallas_call`` (4 bytes/element — the kernels accumulate f32) and
+    flag launches whose resident blocks exceed the ~16 MiB/core TPU VMEM
+    budget.  Dims resolve through module constants, keyword defaults
+    (``BLOCK_M``/``FULL_BLOCK_*``), integer arithmetic (``+ - * // %``)
+    and ``min(...)``/``max(...)`` over resolvable operands — which is how
+    the M-blocked streaming kernels' shrink-to-extent tiles
+    (``min(block_m, ...)``) are bounded by their keyword defaults.
+    ``scratch_shapes=[pltpu.VMEM((dims), dtype)]`` entries are counted
+    too, at the dtype's width.  Data-dependent dims (the structured
+    kernels' per-lane ``s.row_idx.shape[1:]`` blocks) are skipped —
+    their bound is the padding contract, not a literal.
 
 ``pallas-block-align``
     Constant block dims must respect the f32 TPU tiling: the last dim a
@@ -71,12 +76,12 @@ class _Resolver:
             defaults = args.defaults
             params = args.args[len(args.args) - len(defaults):]
             for p, d in zip(params, defaults):
-                v = self._resolve_via_tables(d)
+                v = self.resolve(d)
                 if v is not None:
                     self.consts.setdefault(p.arg, v)
             for p, d in zip(args.kwonlyargs, args.kw_defaults):
                 if d is not None:
-                    v = self._resolve_via_tables(d)
+                    v = self.resolve(d)
                     if v is not None:
                         self.consts.setdefault(p.arg, v)
 
@@ -99,8 +104,39 @@ class _Resolver:
             return None
         return None
 
+    _BINOPS = {
+        ast.Add: lambda a, b: a + b,
+        ast.Sub: lambda a, b: a - b,
+        ast.Mult: lambda a, b: a * b,
+        ast.FloorDiv: lambda a, b: a // b if b else None,
+        ast.Mod: lambda a, b: a % b if b else None,
+    }
+
     def resolve(self, node: ast.AST) -> Optional[int]:
-        return self._resolve_via_tables(node)
+        v = self._resolve_via_tables(node)
+        if v is not None:
+            return v
+        if isinstance(node, ast.BinOp):
+            op = self._BINOPS.get(type(node.op))
+            left = self.resolve(node.left)
+            right = self.resolve(node.right)
+            if op is not None and left is not None and right is not None:
+                return op(left, right)
+            return None
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self.resolve(node.operand)
+            return -v if v is not None else None
+        # min/max over fully-resolvable operands (the shrink-to-extent
+        # tile pattern: min(block_m, padded_extent) is bounded by either
+        # arm, so full resolvability is required for an exact value)
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("min", "max") \
+                and node.args and not node.keywords:
+            vals = [self.resolve(a) for a in node.args]
+            if any(v is None for v in vals):
+                return None
+            return min(vals) if node.func.id == "min" else max(vals)
+        return None
 
     def resolve_tuple(self, node: ast.AST) -> Optional[Tuple[int, ...]]:
         if not isinstance(node, ast.Tuple):
@@ -112,6 +148,39 @@ class _Resolver:
                 return None
             dims.append(v)
         return tuple(dims)
+
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
+
+
+def _scratch_bytes(call: ast.Call, res: _Resolver) -> Optional[int]:
+    """Byte size of a ``pltpu.VMEM((dims), dtype)`` scratch allocation,
+    if the dims tuple resolves.  SMEM scratch is counted too — it is a
+    different (smaller) memory, but an unresolvable/huge SMEM block is
+    just as much a bug."""
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else \
+        f.id if isinstance(f, ast.Name) else ""
+    if name not in ("VMEM", "SMEM") or not call.args:
+        return None
+    dims = res.resolve_tuple(call.args[0])
+    if dims is None:
+        return None
+    bytes_per = BYTES_PER_ELEM
+    if len(call.args) > 1:
+        d = call.args[1]
+        dname = d.attr if isinstance(d, ast.Attribute) else \
+            d.id if isinstance(d, ast.Name) else ""
+        bytes_per = _DTYPE_BYTES.get(dname, BYTES_PER_ELEM)
+    elems = 1
+    for dim in dims:
+        elems *= dim
+    return elems * bytes_per
 
 
 def _blockspec_shape(call: ast.Call, res: _Resolver) \
@@ -136,6 +205,23 @@ def _enclosing_fn(node: ast.AST, ctx: FileContext) -> Optional[ast.FunctionDef]:
     return best
 
 
+def _iter_spec_exprs(node: ast.AST):
+    """Flatten a specs expression into its element expressions: plain
+    list/tuple literals, ``+``-concatenations of them, and ``list * n``
+    repetitions (counted once — the repeated blocks are the pinned
+    scalar/vector blocks; counting one of each is the resolvable floor)."""
+    if isinstance(node, (ast.List, ast.Tuple)):
+        yield from node.elts
+    elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        yield from _iter_spec_exprs(node.left)
+        yield from _iter_spec_exprs(node.right)
+    elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        yield from _iter_spec_exprs(node.left)
+        yield from _iter_spec_exprs(node.right)
+    else:
+        yield node
+
+
 def _iter_pallas_calls(ctx: FileContext):
     for node in ast.walk(ctx.tree):
         if isinstance(node, ast.Call):
@@ -156,18 +242,23 @@ def check_vmem(project: Project) -> List[Finding]:
             res = _Resolver(project, ctx, _enclosing_fn(call, ctx))
             total = 0
             for kw in call.keywords:
-                if kw.arg not in ("in_specs", "out_specs"):
+                if kw.arg not in ("in_specs", "out_specs",
+                                  "scratch_shapes"):
                     continue
-                specs = kw.value.elts if isinstance(
-                    kw.value, (ast.List, ast.Tuple)) else [kw.value]
-                for spec in specs:
-                    if isinstance(spec, ast.Call):
-                        shape = _blockspec_shape(spec, res)
-                        if shape:
-                            elems = 1
-                            for d in shape:
-                                elems *= d
-                            total += elems * BYTES_PER_ELEM
+                for spec in _iter_spec_exprs(kw.value):
+                    if not isinstance(spec, ast.Call):
+                        continue
+                    if kw.arg == "scratch_shapes":
+                        nbytes = _scratch_bytes(spec, res)
+                        if nbytes is not None:
+                            total += nbytes
+                        continue
+                    shape = _blockspec_shape(spec, res)
+                    if shape:
+                        elems = 1
+                        for d in shape:
+                            elems *= d
+                        total += elems * BYTES_PER_ELEM
             if total > VMEM_BUDGET_BYTES:
                 findings.append(Finding(
                     "pallas-vmem-budget", ctx.rel, call.lineno,

@@ -5,8 +5,9 @@ from .pdhg import (
     OperatorLP, SolveResult, solve, solve_stacked, solve_dense, solve_batched,
     dense_ops, dense_K_mv, dense_KT_mv, ruiz_equilibrate,
     StepEngine, matvec_engine, fused_dense_engine, fused_structured_engine,
-    select_engine,
+    fused_structured_full_engine, select_engine,
     StructuredOperator, structured_from_coo, structured_to_dense, stack_ops,
+    quantize_structured, dequantize_structured,
     scale_operator, unscale_solution,
 )
 from .partition import (
@@ -32,9 +33,10 @@ __all__ = [
     "solve_batched",
     "dense_ops", "dense_K_mv", "dense_KT_mv", "ruiz_equilibrate",
     "StepEngine", "matvec_engine", "fused_dense_engine",
-    "fused_structured_engine", "select_engine",
+    "fused_structured_engine", "fused_structured_full_engine",
+    "select_engine",
     "StructuredOperator", "structured_from_coo", "structured_to_dense",
-    "stack_ops",
+    "stack_ops", "quantize_structured", "dequantize_structured",
     "scale_operator", "unscale_solution",
     "random_partition", "stratified_partition", "stratified_partition_multidim",
     "clustered_partition", "skewed_partition", "similarity_report",

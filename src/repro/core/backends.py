@@ -15,16 +15,22 @@ the same code path as cold ones).  The result carries the same leading
 axis.  Backends differ only in scheduling, never in math — every backend
 must match ``vmap`` to float tolerance (``tests/test_backends.py``).
 
-Three *step engines* (see ``core/pdhg.py``) plug into every backend:
+Four *step engines* (see ``core/pdhg.py``) plug into every backend:
 ``engine="matvec"`` vmaps the per-problem operator matvecs (any structured
 LP), ``engine="fused"`` hands the whole stacked batch to the fused Pallas
 matmul kernels in one launch per half-step (dense LPs; compiled on TPU,
-XLA-fused reference elsewhere), and ``engine="fused_structured"`` does the
+XLA-fused reference elsewhere), ``engine="fused_structured"`` does the
 same through batched gather/segment-reduce kernels for operators carrying
 :class:`~repro.core.pdhg.StructuredOperator` index metadata (the
-segment-sum matvecs of the structured paper domains).  ``engine="auto"``
-picks per :func:`repro.core.pdhg.select_engine` — structured-fused
-whenever index metadata is present.
+segment-sum matvecs of the structured paper domains), and
+``engine="fused_structured_full"`` is the M-blocked streaming variant for
+the single-lane unpartitioned problem (the ``solve_full`` baseline at
+paper scale).  ``engine="auto"`` picks per
+:func:`repro.core.pdhg.select_engine` — structured-fused whenever index
+metadata is present, the streaming full engine when additionally
+single-lane with large wide buckets.  :func:`resolve_exec` resolves specs
+*outside* jit with concrete operators, which is what lets the full
+engine's static ragged wide-block plan be computed from values.
 
 Registered backends:
 

@@ -43,7 +43,7 @@ matvec for the extrapolated point) followed by the adjoint product
 ``K^T y+``.  Per iteration that is exactly one K and one K^T application —
 the same operator work as classic PDHG — but the products now flow OUT of
 the half-steps, which is what makes the in-loop KKT check free (below).
-Three engines ship:
+Four engines ship:
 
 ``matvec`` (:func:`matvec_engine`)
     Wraps the user's ``K_mv``/``KT_mv`` callables with ``jax.vmap`` and
@@ -67,11 +67,23 @@ Three engines ship:
     ``take_along_axis`` gathers — no scatters anywhere, unlike the
     ``segment_sum`` scatter-adds inside typical domain matvecs.
 
+``fused_structured_full`` (:func:`fused_structured_full_engine`)
+    The M-blocked streaming variant for the **single-lane full problem**
+    (the k=1 quality baseline POP is judged against).  Tiles the nnz-major
+    ELL arrays into VMEM-sized M-blocks, streams partial gather/reduces,
+    folds wide-bucket contributions across blocks through the fold map
+    (a gather, not a one-hot einsum), and slices the descending-sorted
+    wide bucket by a static ragged block plan so padded work stays ~nnz.
+    Supports int8/bf16 coefficient storage (:func:`quantize_structured`)
+    with in-kernel dequantization and f32 accumulation.
+
 ``engine="auto"`` (:func:`select_engine`) picks ``fused`` for dense
-operator data on TPU, ``fused_structured`` when index metadata is present,
-and ``matvec`` otherwise.  Engines differ only in scheduling/fusion, never
-in math — ``tests/test_engine_conformance.py`` pins all engines x all map
-backends x the three paper domains to 1e-5 on fixed iteration budgets.
+operator data on TPU, ``fused_structured`` when index metadata is present
+(``fused_structured_full`` when additionally single-lane with large wide
+buckets), and ``matvec`` otherwise.  Engines differ only in
+scheduling/fusion, never in math — ``tests/test_engine_conformance.py``
+pins all engines x all map backends x the three paper domains to 1e-5 on
+fixed iteration budgets.
 
 In-loop KKT (free convergence checks)
 -------------------------------------
@@ -154,21 +166,51 @@ class StructuredOperator(NamedTuple):
     (row, col) entries simply sum — segment-sum semantics — and empty wide
     buckets are a single zero column feeding segment 0 with 0.0.
 
+    Wide bucket columns are kept **sorted by descending width** and each
+    side carries a *fold map* (``row_fold [M]`` / ``col_fold [N]``): the
+    inverse of ``w*_ids``, sending every segment to its bucket column —
+    or to the one-past-the-end zero slot ``D`` when the segment is
+    narrow.  The fold map turns the wide-bucket add-back into a single
+    gather (``out + wide_padded[fold]``) instead of a one-hot einsum, and
+    the descending sort is what lets the M-blocked full-problem engine
+    (``fused_structured_full``) slice the wide arrays into contiguous
+    ragged blocks with monotone widths (sliced-ELL style) so padded work
+    stays ~nnz even when one bucket column is 10x wider than the median.
+
+    Coefficient arrays default to f32 but may be stored **quantized**
+    (:func:`quantize_structured`): ``bfloat16``, or ``int8`` with a
+    symmetric per-bucket scale factor in ``*_scale`` ([1] f32, ``None``
+    = unscaled).  Engines dequantize in-kernel and accumulate in f32.
+
     All leaves batch over a leading ``[k]`` sub-problem axis like every
     other ``OperatorLP`` field; :func:`stack_ops` pads per-lane
-    widths/bucket sizes to the stack maximum before stacking.
+    widths/bucket sizes to the stack maximum before stacking (fold maps
+    stay lane-correct: a lane's zero slot is a padded zero column of the
+    stacked wide arrays).
     """
 
     row_idx: jnp.ndarray    # [..., Wr, M] int32 column ids feeding each row
-    row_val: jnp.ndarray    # [..., Wr, M] f32 coefficients
+    row_val: jnp.ndarray    # [..., Wr, M] coefficients (f32/bf16/int8)
     wrow_idx: jnp.ndarray   # [..., Ww, Dr] wide-row bucket column ids
     wrow_val: jnp.ndarray   # [..., Ww, Dr]
     wrow_ids: jnp.ndarray   # [..., Dr] int32 row fed by each bucket column
     col_idx: jnp.ndarray    # [..., Wc, N] int32 row ids feeding each column
-    col_val: jnp.ndarray    # [..., Wc, N] f32 coefficients
+    col_val: jnp.ndarray    # [..., Wc, N] coefficients (f32/bf16/int8)
     wcol_idx: jnp.ndarray   # [..., Wv, Dc] wide-column bucket row ids
     wcol_val: jnp.ndarray   # [..., Wv, Dc]
     wcol_ids: jnp.ndarray   # [..., Dc] int32 column fed by each bucket column
+    row_fold: Optional[jnp.ndarray] = None   # [..., M] int32 bucket col or Dr
+    col_fold: Optional[jnp.ndarray] = None   # [..., N] int32 bucket col or Dc
+    row_scale: Optional[jnp.ndarray] = None   # [..., 1] f32 dequant scales
+    wrow_scale: Optional[jnp.ndarray] = None
+    col_scale: Optional[jnp.ndarray] = None
+    wcol_scale: Optional[jnp.ndarray] = None
+
+    @property
+    def coef_dtype(self) -> str:
+        """Storage dtype of the coefficient payload ("float32", "bfloat16"
+        or "int8" — see :func:`quantize_structured`)."""
+        return str(jnp.dtype(self.row_val.dtype))
 
 
 def _pack_ell(seg: np.ndarray, other: np.ndarray, vals: np.ndarray,
@@ -195,7 +237,12 @@ def _pack_side(seg: np.ndarray, other: np.ndarray, vals: np.ndarray,
                n_seg: int):
     """One gather side (rows or columns) as the two-bucket ELL: segments
     wider than ``max(16, 4 * median nonzero width)`` split into the wide
-    bucket.  Returns (idx, val, widx, wval, wids)."""
+    bucket, whose columns are sorted by DESCENDING width so contiguous
+    column ranges have monotone widths (what the M-blocked full engine's
+    ragged wide-block plan slices).  Returns
+    (idx, val, widx, wval, wids, fold) where ``fold [n_seg]`` maps every
+    segment to its bucket column, or to the zero slot ``d`` (one past the
+    stored bucket) when narrow."""
     seg = seg.astype(np.int64)
     counts = np.bincount(seg, minlength=n_seg) if seg.size \
         else np.zeros(n_seg, np.int64)
@@ -203,6 +250,7 @@ def _pack_side(seg: np.ndarray, other: np.ndarray, vals: np.ndarray,
     med = int(np.median(nz)) if nz.size else 1
     cap = max(16, 4 * (-(-med // 8) * 8))
     wide = np.flatnonzero(counts > cap)
+    wide = wide[np.argsort(-counts[wide], kind="stable")]
     is_wide = np.isin(seg, wide)
     idx, val = _pack_ell(seg[~is_wide], other[~is_wide], vals[~is_wide],
                          n_seg)
@@ -213,31 +261,101 @@ def _pack_side(seg: np.ndarray, other: np.ndarray, vals: np.ndarray,
                            vals[is_wide], d)
     wids = np.zeros(d, np.int32)
     wids[: wide.size] = wide
-    return idx, val, widx, wval, wids
+    fold = np.full(n_seg, d, np.int32)
+    fold[wide] = np.arange(wide.size)
+    return idx, val, widx, wval, wids, fold
 
 
-def structured_from_coo(rows, cols, vals, n_rows: int,
-                        n_cols: int) -> StructuredOperator:
+def structured_from_coo(rows, cols, vals, n_rows: int, n_cols: int,
+                        coef_dtype: str = "float32") -> StructuredOperator:
     """Build a :class:`StructuredOperator` from COO triplets (numpy, at
     problem build time).  Entries may repeat (they sum) and may carry zero
-    values (kept — structural zeros give shape-stable widths)."""
+    values (kept — structural zeros give shape-stable widths).
+    ``coef_dtype`` selects the coefficient storage
+    (:func:`quantize_structured`): "float32" (default), "bfloat16", or
+    "int8" with per-bucket scale factors."""
     rows = np.asarray(rows).ravel()
     cols = np.asarray(cols).ravel()
     vals = np.asarray(vals, np.float32).ravel()
-    ri, rv, wri, wrv, wrids = _pack_side(rows, cols, vals, n_rows)
-    ci, cv, wci, wcv, wcids = _pack_side(cols, rows, vals, n_cols)
+    ri, rv, wri, wrv, wrids, rfold = _pack_side(rows, cols, vals, n_rows)
+    ci, cv, wci, wcv, wcids, cfold = _pack_side(cols, rows, vals, n_cols)
     j = jnp.asarray
-    return StructuredOperator(
+    s = StructuredOperator(
         row_idx=j(ri), row_val=j(rv),
         wrow_idx=j(wri), wrow_val=j(wrv), wrow_ids=j(wrids),
         col_idx=j(ci), col_val=j(cv),
-        wcol_idx=j(wci), wcol_val=j(wcv), wcol_ids=j(wcids))
+        wcol_idx=j(wci), wcol_val=j(wcv), wcol_ids=j(wcids),
+        row_fold=j(rfold), col_fold=j(cfold))
+    return quantize_structured(s, coef_dtype)
+
+
+# coefficient storage dtypes quantize_structured accepts
+COEF_DTYPES = ("float32", "bfloat16", "int8")
+
+
+def _quantize_val(val: jnp.ndarray, dtype: str):
+    """(stored, scale) for one coefficient bucket: bf16 is a plain cast
+    (scale None), int8 is symmetric per-bucket — scale = max|v| / 127."""
+    v = jnp.asarray(val, jnp.float32)
+    if dtype == "bfloat16":
+        return v.astype(jnp.bfloat16), None
+    m = jnp.max(jnp.abs(v), axis=(-2, -1))
+    scale = jnp.maximum(m, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(v / scale[..., None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, jnp.reshape(scale, v.shape[:-2] + (1,))
+
+
+def quantize_structured(s: StructuredOperator,
+                        coef_dtype: str = "int8") -> StructuredOperator:
+    """Mixed-precision ELL coefficient storage (build time): re-store the
+    four value arrays as ``coef_dtype`` — "bfloat16" (plain cast) or
+    "int8" (symmetric per-bucket quantization, dequant scale in the
+    ``*_scale`` fields) — halving / quartering the memory-bound payload
+    the step kernels stream.  Engines dequantize in-kernel and accumulate
+    in f32; "float32" is the identity.  Quantize from an f32 operator
+    (re-quantizing a quantized one raises)."""
+    if coef_dtype not in COEF_DTYPES:
+        raise ValueError(f"unknown coef_dtype {coef_dtype!r}; "
+                         f"expected one of {COEF_DTYPES}")
+    if coef_dtype == "float32":
+        return s
+    if s.coef_dtype != "float32":
+        raise ValueError(f"operator already stores {s.coef_dtype} "
+                         "coefficients; dequantize_structured first")
+    rv, rs = _quantize_val(s.row_val, coef_dtype)
+    wrv, wrs = _quantize_val(s.wrow_val, coef_dtype)
+    cv, cs = _quantize_val(s.col_val, coef_dtype)
+    wcv, wcs = _quantize_val(s.wcol_val, coef_dtype)
+    return s._replace(row_val=rv, wrow_val=wrv, col_val=cv, wcol_val=wcv,
+                      row_scale=rs, wrow_scale=wrs,
+                      col_scale=cs, wcol_scale=wcs)
+
+
+def _dequantize_val(val: jnp.ndarray, scale: Optional[jnp.ndarray]):
+    v = jnp.asarray(val, jnp.float32)
+    return v if scale is None else v * scale[..., None]
+
+
+def dequantize_structured(s: StructuredOperator) -> StructuredOperator:
+    """Back to plain f32 coefficient storage (scales folded in, scale
+    fields cleared).  Identity for f32 operators."""
+    if s.coef_dtype == "float32" and s.row_scale is None:
+        return s
+    return s._replace(
+        row_val=_dequantize_val(s.row_val, s.row_scale),
+        wrow_val=_dequantize_val(s.wrow_val, s.wrow_scale),
+        col_val=_dequantize_val(s.col_val, s.col_scale),
+        wcol_val=_dequantize_val(s.wcol_val, s.wcol_scale),
+        row_scale=None, wrow_scale=None, col_scale=None, wcol_scale=None)
 
 
 def structured_to_dense(s: StructuredOperator) -> jnp.ndarray:
     """Materialise the dense K ([..., M, N]) a StructuredOperator encodes
     — from the row-side layout alone, which fully represents K (tests +
     the conformance matrix; never used on the solve path)."""
+    s = dequantize_structured(s)
+
     def one(ri, rv, wri, wrv, wrids, n_cols):
         m = ri.shape[1]
         rows = jnp.broadcast_to(jnp.arange(m)[None, :], ri.shape)
@@ -257,8 +375,13 @@ def structured_to_dense(s: StructuredOperator) -> jnp.ndarray:
 def scale_structured(s: StructuredOperator, d_r: jnp.ndarray,
                      d_c: jnp.ndarray) -> StructuredOperator:
     """K~ = D_r K D_c applied to the ELL payload (batched: d_r [k, M],
-    d_c [k, N]).  Padded entries stay zero (0 * anything)."""
+    d_c [k, N]).  Padded entries stay zero (0 * anything), so fold maps
+    and the wide-block plan stay valid.  Quantized storage is dequantized
+    first — equilibration products are not representable in int8, so the
+    scaled operator degrades to f32 coefficients (the quantized payload
+    is a memory-bandwidth format, not an arithmetic one)."""
     from ..kernels.ref import _bgather as bgather
+    s = dequantize_structured(s)
     return s._replace(
         row_val=s.row_val * d_r[:, None, :] * bgather(d_c, s.row_idx),
         wrow_val=(s.wrow_val * bgather(d_r, s.wrow_ids)[:, None, :]
@@ -311,18 +434,24 @@ def stack_ops(subs: Sequence[OperatorLP]) -> OperatorLP:
     ops = jax.tree.map(lambda *xs: jnp.stack(xs), *bare)
     if any(st is None for st in structs):
         return ops
-    shapes = {f: tuple(max(getattr(st, f).shape[d] for st in structs)
-                       for d in range(getattr(structs[0], f).ndim))
-              for f in StructuredOperator._fields}
+    # mixed coefficient storage cannot stack (int8 next to f32); degrade
+    # the whole stack to f32 — lanes normally share one coef_dtype anyway
+    if len({st.coef_dtype for st in structs}) > 1:
+        structs = [dequantize_structured(st) for st in structs]
 
     def padto(a, shape):
         return jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, shape)])
 
-    padded = [StructuredOperator(
-        **{f: padto(getattr(st, f), shapes[f]) for f in st._fields})
-        for st in structs]
-    return ops._replace(
-        structured=jax.tree.map(lambda *xs: jnp.stack(xs), *padded))
+    stacked = {}
+    for f in StructuredOperator._fields:
+        vals = [getattr(st, f) for st in structs]
+        if any(v is None for v in vals):
+            stacked[f] = None
+            continue
+        shape = tuple(max(v.shape[d] for v in vals)
+                      for d in range(vals[0].ndim))
+        stacked[f] = jnp.stack([padto(v, shape) for v in vals])
+    return ops._replace(structured=StructuredOperator(**stacked))
 
 
 class SolveResult(NamedTuple):
@@ -461,10 +590,108 @@ def fused_structured_engine(
                                              kx_new, kx_prev, **kw)
 
     def prep(op: OperatorLP) -> OperatorLP:
-        return op._replace(data=op.structured, structured=None)
+        # the lane kernels have no dequant path — quantized payloads
+        # degrade to f32 here (only fused_structured_full streams them)
+        return op._replace(data=dequantize_structured(op.structured),
+                           structured=None)
 
     return StepEngine("fused_structured", K, KT, forward, backward,
                       scale_structured, prep)
+
+
+@functools.lru_cache(maxsize=16)
+def fused_structured_full_engine(
+        kernel_backend: Optional[str] = None,
+        row_plan: tuple = (), col_plan: tuple = ()) -> StepEngine:
+    """Single-lane M-blocked streaming engine for the **full** problem
+    (``kernels/structured_pdhg_step.py`` full-kernel family via
+    ``kernels/ops.py`` dispatch).  The lane kernels assume a whole lane's
+    ELL payload fits in VMEM; this engine tiles the nnz-major ``[W, M]``
+    arrays into VMEM-sized M-blocks, streams partial gather/reduces per
+    block and folds wide-bucket contributions across blocks through the
+    fold map — so the unpartitioned k=1 baseline runs the same no-scatter
+    path as POP lanes.
+
+    ``row_plan`` / ``col_plan`` are static ragged wide-block plans: tuples
+    of ``(c0, c1, wb)`` — slice bucket columns ``[c0, c1)`` at width
+    ``wb`` — computed by :func:`resolve_engine` from the *concrete*
+    operator (outside jit) against the descending-width sort
+    ``_pack_side`` guarantees.  The slices view the one uniform wide
+    array, so equilibration scaling composes with the plan for free.
+    ``prep`` moves ``op.structured`` into ``op.data`` (quantized payloads
+    flow through — the full kernels dequantize in-kernel)."""
+    from ..kernels import ops as kops
+
+    kw: dict = dict(backend=kernel_backend)
+
+    def K(data, x):
+        return kops.smatvec_full(data, x, plan=row_plan)
+
+    def KT(data, y):
+        return kops.smatvec_t_full(data, y, plan=col_plan)
+
+    def forward(data, x, c, l, u, tau, kty):
+        return kops.structured_full_forward_step(
+            data, x, c, l, u, tau, kty, plan=row_plan, **kw)
+
+    def backward(data, y, q, sigma, ineq_mask, kx_new, kx_prev):
+        return kops.structured_full_backward_step(
+            data, y, q, sigma, ineq_mask, kx_new, kx_prev,
+            plan=col_plan, **kw)
+
+    def prep(op: OperatorLP) -> OperatorLP:
+        return op._replace(data=op.structured, structured=None)
+
+    return StepEngine("fused_structured_full", K, KT, forward, backward,
+                      scale_structured, prep)
+
+
+# auto picks fused_structured_full only above this many stored wide-bucket
+# elements: below it the one-hot fold is cheap and the lane kernels win
+FULL_ENGINE_MIN_WIDE_ELEMS = 65_536
+# column chunk the ragged wide-block plan is quantised to
+WIDE_BLOCK_COLS = 128
+
+
+def _is_single_lane(op: OperatorLP) -> bool:
+    return op.c.ndim == 1 or op.c.shape[0] == 1
+
+
+def _wide_elems(s: StructuredOperator) -> int:
+    return (s.wrow_idx.shape[-2] * s.wrow_idx.shape[-1]
+            + s.wcol_idx.shape[-2] * s.wcol_idx.shape[-1])
+
+
+def _wide_block_plan(wval) -> tuple:
+    """Static ragged plan ``((c0, c1, wb), ...)`` over a wide bucket's
+    descending-width columns: chunks of :data:`WIDE_BLOCK_COLS` columns,
+    each sliced to its own max effective width (from ``val != 0`` —
+    exact, since zero coefficients contribute nothing) rounded up to the
+    f32 sublane multiple.  Needs a concrete array; on tracers (a user
+    jitting ``solve_stacked`` around resolution) falls back to one
+    full-width block — correct, just unsliced."""
+    if isinstance(wval, jax.core.Tracer):
+        ww = wval.shape[-2]
+        return ((0, wval.shape[-1], ww),)
+    # deliberately host-side: the plan must be static (baked into the
+    # lru-cached engine), and the Tracer guard above already routed any
+    # traced value away — what reaches here is concrete by construction
+    v = np.asarray(wval)  # popcheck: disable=host-sync-in-hot-path
+    if v.ndim == 3:
+        v = v[0]
+    ww, d = v.shape
+    nz = v != 0.0
+    # per-column effective width: index of last nonzero + 1 (0 if empty)
+    counts = np.where(nz.any(axis=0),
+                      ww - np.argmax(nz[::-1, :], axis=0), 0)
+    plan = []
+    for c0 in range(0, d, WIDE_BLOCK_COLS):
+        c1 = min(c0 + WIDE_BLOCK_COLS, d)
+        wmax = (int(counts[c0:c1].max())  # popcheck: disable=host-sync-in-hot-path
+                if c1 > c0 else 0)
+        wb = min(max(8, -(-wmax // 8) * 8), ww)
+        plan.append((c0, c1, wb))
+    return tuple(plan) if plan else ((0, d, ww),)
 
 
 def is_dense_ops(op: OperatorLP) -> bool:
@@ -490,7 +717,13 @@ def select_engine(op: OperatorLP, K_mv: Callable = dense_K_mv,
     :class:`StructuredOperator` index metadata take the structured-fused
     engine (gather/segment-reduce, no scatters, one launch per half-step —
     measured 2-18x over vmapped segment-sum matvecs on the gather-shaped
-    domains); everything else takes ``matvec``."""
+    domains); **single-lane** structured operators whose wide buckets are
+    large (>= :data:`FULL_ENGINE_MIN_WIDE_ELEMS` stored elements) take the
+    M-blocked streaming ``fused_structured_full`` engine instead — the
+    ``solve_full`` baseline at paper scale, where the lane path's
+    uniform-width padding and one-hot fold dominate (measured 13x on the
+    traffic matvec pair at 3000 demands); everything else takes
+    ``matvec``."""
     pref = getattr(K_mv, "preferred_engine", None)
     if pref is not None:
         return pref
@@ -498,13 +731,18 @@ def select_engine(op: OperatorLP, K_mv: Callable = dense_K_mv,
     if dense and jax.default_backend() == "tpu":
         return "fused"
     if op.structured is not None:
+        s = op.structured
+        if (_is_single_lane(op) and s.row_fold is not None
+                and _wide_elems(s) >= FULL_ENGINE_MIN_WIDE_ELEMS):
+            return "fused_structured_full"
         return "fused_structured"
     return "matvec"
 
 
 # the engine spec strings resolve_engine accepts (besides a StepEngine
 # object) — what ExecConfig validates at construction
-ENGINE_NAMES = ("auto", "matvec", "fused", "fused_structured")
+ENGINE_NAMES = ("auto", "matvec", "fused", "fused_structured",
+                "fused_structured_full")
 
 
 def engine_name(engine: Union[str, "StepEngine"]) -> str:
@@ -516,7 +754,10 @@ def resolve_engine(engine: Union[None, str, StepEngine], op: OperatorLP,
                    K_mv: Callable = dense_K_mv,
                    KT_mv: Callable = dense_KT_mv) -> StepEngine:
     """Normalise an engine spec (None/"auto"/"matvec"/"fused"/
-    "fused_structured"/StepEngine)."""
+    "fused_structured"/"fused_structured_full"/StepEngine).  For the full
+    engine this is also where the static ragged wide-block plans are
+    computed — call it with a *concrete* operator (``backends.resolve_exec``
+    does, before anything is jitted) so the plan can inspect values."""
     if isinstance(engine, StepEngine):
         return engine
     if engine is None or engine == "auto":
@@ -538,8 +779,24 @@ def resolve_engine(engine: Union[None, str, StepEngine], op: OperatorLP,
                 "problem's build_sub); operators without it use "
                 "engine='matvec'")
         return fused_structured_engine()
+    if engine == "fused_structured_full":
+        s = op.structured
+        if s is None or s.row_fold is None:
+            raise ValueError(
+                "engine='fused_structured_full' needs op.structured with "
+                "fold maps (operators built by structured_from_coo); "
+                "operators without it use engine='matvec'")
+        if not _is_single_lane(op):
+            raise ValueError(
+                "engine='fused_structured_full' streams the single-lane "
+                "full problem (k=1); stacked sub-problems use "
+                "engine='fused_structured'")
+        return fused_structured_full_engine(
+            row_plan=_wide_block_plan(s.wrow_val),
+            col_plan=_wide_block_plan(s.wcol_val))
     raise ValueError(f"unknown engine {engine!r}; expected 'auto', "
-                     "'matvec', 'fused', 'fused_structured', or a StepEngine")
+                     "'matvec', 'fused', 'fused_structured', "
+                     "'fused_structured_full', or a StepEngine")
 
 
 # --------------------------------------------------------------------------

@@ -30,6 +30,16 @@ Two kernel families back the step engines in ``core/pdhg.py``:
   pure ``take_along_axis`` gathers — no scatter, unlike the
   ``segment_sum`` scatter-adds in typical domain matvecs.
 
+A third family streams the **single-lane full problem**
+(``structured_full_forward_step`` / ``structured_full_backward_step`` +
+``smatvec_full``/``smatvec_t_full``): M-blocked phased-grid kernels whose
+VMEM residency is bounded by the ``FULL_BLOCK_*`` tile sizes, with the
+wide-bucket add-back as a fold-map gather and optional int8/bf16
+coefficient storage dequantized in-kernel.  The ``plan`` keyword is the
+static ragged wide-block plan from ``core/pdhg._wide_block_plan`` — the
+XLA reference applies it in full; the Pallas path uses it to trim the
+streamed wide width to the plan maximum.
+
 A solver constructed once picks the right kernel per platform at trace
 time.
 """
@@ -206,4 +216,109 @@ def structured_backward_step(s, y, q, sigma, ineq_mask, kx_new, kx_prev, *,
         _pad_col_side(s), pad_vec(y), pad_vec(q), pad_vec(ineq_mask),
         pad_vec(kx_new), pad_vec(kx_prev), sigma,
         interpret=mode == "interpret")
+    return yn[:, :M], kty[:, :N]
+
+
+# --------------------------------------------------------------------------
+# streaming full-problem (single-lane, M-blocked) family
+# --------------------------------------------------------------------------
+
+def smatvec_full(s, x, *, plan=()):
+    """kx = K x for the single-lane full problem: fold-map wide add-back
+    + ragged wide-block plan.  Like ``smatvec``, the XLA form is the fast
+    path for the out-of-loop uses on every platform."""
+    return _ref.smatvec_full(s, x, plan)
+
+
+def smatvec_t_full(s, y, *, plan=()):
+    """kty = K^T y through the column-side full layout."""
+    return _ref.smatvec_t_full(s, y, plan)
+
+
+def _sublane(dtype) -> int:
+    """Sublane multiple for a coefficient dtype (8 f32 / 16 bf16 /
+    32 int8 — second-minor tiling is 32 bytes)."""
+    return 32 // jnp.dtype(dtype).itemsize
+
+
+def _pad_full_side(idx, val, scale, widx, wval, wscale, fold, plan,
+                   block_m, block_w, block_d):
+    """Pad one gather side for the streaming kernels: narrow [1, W, S]
+    to (sublane-mult, block-mult) tiles, wide [1, Ww, D] trimmed to the
+    plan's max effective width then tiled, D padded PAST the bucket end
+    so the fold map's zero slot lands in an all-padding (exact-zero)
+    column.  Block sizes shrink to the padded extent on small problems
+    so the grid never over-runs the data."""
+    sub = _sublane(val.dtype)
+    idx = _pad_to(idx, 1, sub)
+    val = _pad_to(val, 1, sub)
+    bm = min(block_m, -(-idx.shape[2] // STRUCT_ALIGN) * STRUCT_ALIGN)
+    idx = _pad_to(idx, 2, bm)
+    val = _pad_to(val, 2, bm)
+    fold = _pad_to(fold, 1, bm)
+    if plan:
+        weff = min(widx.shape[1], max(wb for _, _, wb in plan))
+        widx = widx[:, :weff, :]
+        wval = wval[:, :weff, :]
+    bw = min(block_w, -(-widx.shape[1] // sub) * sub)
+    widx = _pad_to(widx, 1, bw)
+    wval = _pad_to(wval, 1, bw)
+    d = widx.shape[2]
+    bd = min(block_d, -(-(d + 1) // STRUCT_ALIGN) * STRUCT_ALIGN)
+    widx = _pad_to(jnp.pad(widx, ((0, 0), (0, 0), (0, 1))), 2, bd)
+    wval = _pad_to(jnp.pad(wval, ((0, 0), (0, 0), (0, 1))), 2, bd)
+    ones = jnp.ones((1, 1), jnp.float32)
+    mk_scale = lambda sc: ones if sc is None else sc.reshape(1, 1)
+    return (idx, val, mk_scale(scale), widx, wval, mk_scale(wscale),
+            fold, bm, bw, bd)
+
+
+def structured_full_forward_step(s, x, c, l, u, tau, kty, *, plan=(),
+                                 backend: str | None = None,
+                                 block_m: int = _structured.FULL_BLOCK_M,
+                                 block_w: int = _structured.FULL_BLOCK_W,
+                                 block_d: int = _structured.FULL_BLOCK_D):
+    """(x_new, kx) for the single-lane full problem: one M-blocked
+    streaming launch (Pallas on TPU/interpret, ragged-plan XLA reference
+    elsewhere)."""
+    mode = _resolve_mode(backend)
+    if mode == "xla" or s.row_idx.shape[0] != 1:
+        return _ref.structured_full_forward_step(s, x, c, l, u,
+                                                 tau[:, None], kty, plan)
+    M = s.row_idx.shape[-1]
+    N = x.shape[1]
+    ri, rv, rs, wri, wrv, wrs, fold, bm, bw, bd = _pad_full_side(
+        s.row_idx, s.row_val, s.row_scale, s.wrow_idx, s.wrow_val,
+        s.wrow_scale, s.row_fold, plan, block_m, block_w, block_d)
+    pad_vec = lambda v: _pad_to(v, 1, STRUCT_ALIGN)
+    xn, kx = _structured.structured_full_forward_step(
+        ri, rv, rs, wri, wrv, wrs, fold,
+        pad_vec(x), pad_vec(c), pad_vec(l), pad_vec(u), pad_vec(kty),
+        tau[:, None], block_m=bm, block_w=bw, block_d=bd,
+        interpret=mode == "interpret")
+    return xn[:, :N], kx[:, :M]
+
+
+def structured_full_backward_step(s, y, q, sigma, ineq_mask, kx_new,
+                                  kx_prev, *, plan=(),
+                                  backend: str | None = None,
+                                  block_m: int = _structured.FULL_BLOCK_M,
+                                  block_w: int = _structured.FULL_BLOCK_W,
+                                  block_d: int = _structured.FULL_BLOCK_D):
+    """(y_new, kty) for the single-lane full problem (column side)."""
+    mode = _resolve_mode(backend)
+    if mode == "xla" or s.col_idx.shape[0] != 1:
+        return _ref.structured_full_backward_step(
+            s, y, q, sigma[:, None], ineq_mask, kx_new, kx_prev, plan)
+    N = s.col_idx.shape[-1]
+    M = y.shape[1]
+    ci, cv, cs, wci, wcv, wcs, fold, bm, bw, bd = _pad_full_side(
+        s.col_idx, s.col_val, s.col_scale, s.wcol_idx, s.wcol_val,
+        s.wcol_scale, s.col_fold, plan, block_m, block_w, block_d)
+    pad_vec = lambda v: _pad_to(v, 1, STRUCT_ALIGN)
+    yn, kty = _structured.structured_full_backward_step(
+        ci, cv, cs, wci, wcv, wcs, fold,
+        pad_vec(y), pad_vec(q), pad_vec(ineq_mask), pad_vec(kx_new),
+        pad_vec(kx_prev), sigma[:, None], block_m=bm, block_w=bw,
+        block_d=bd, interpret=mode == "interpret")
     return yn[:, :M], kty[:, :N]

@@ -100,3 +100,73 @@ def structured_backward_step(s, y, q, sigma, ineq_mask, kx_new, kx_prev):
     y_new = y + sigma * (2.0 * kx_new - kx_prev - q)
     y_new = jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
     return y_new, smatvec_t(s, y_new)
+
+
+# --------------------------------------------------------------------------
+# full-problem (single-lane, M-blocked) oracles — the fused_structured_full
+# engine's semantics: fold-map wide add-back instead of the one-hot einsum,
+# ragged wide-block plan over the descending-sorted bucket, and in-graph
+# dequantization of int8/bf16 coefficient storage (f32 accumulation)
+# --------------------------------------------------------------------------
+
+def _deq(val, scale):
+    """Coefficients to f32: cast, then fold in the per-bucket dequant
+    scale when the payload is int8-quantized (scale [k, 1] or None)."""
+    v = val.astype(jnp.float32)
+    return v if scale is None else v * scale[..., None]
+
+
+def _gather_wide_sorted(widx, wval, wscale, fold, v, plan):
+    """Wide-bucket reduce + fold-map add-back:
+
+        wide[d] = sum_w wval[:, w, d] * v[widx[:, w, d]]     per plan block
+        out     = pad(wide, 1)[fold]                          (a gather)
+
+    ``plan`` is the static ragged block plan ``((c0, c1, wb), ...)`` from
+    ``pdhg._wide_block_plan``: bucket columns are sorted by descending
+    width, so slicing block ``[c0, c1)`` at its own max width ``wb`` skips
+    the padding a uniform-width reduce would burn.  The fold map sends
+    narrow segments to the one-past-the-end zero slot, hence the pad.
+    """
+    if not plan:
+        plan = ((0, wval.shape[-1], wval.shape[-2]),)
+    parts = [
+        jnp.sum(_deq(wval[:, :wb, c0:c1], wscale)
+                * _bgather(v, widx[:, :wb, c0:c1]), axis=-2)
+        for (c0, c1, wb) in plan]
+    wide = jnp.concatenate(parts, axis=-1)            # [k, D]
+    wide = jnp.pad(wide, ((0, 0), (0, 1)))            # zero slot at D
+    return _bgather(wide, fold)
+
+
+def smatvec_full(s, x, plan=()):
+    """kx = K x for the single-lane full problem: narrow ELL reduce plus
+    the fold-map wide add-back (no one-hot einsum — at paper scale the
+    one-hot materialises ~n_segments * D elements per matvec)."""
+    narrow = jnp.sum(_deq(s.row_val, s.row_scale)
+                     * _bgather(x, s.row_idx), axis=-2)
+    return narrow + _gather_wide_sorted(
+        s.wrow_idx, s.wrow_val, s.wrow_scale, s.row_fold, x, plan)
+
+
+def smatvec_t_full(s, y, plan=()):
+    """kty = K^T y through the column-side layout (see smatvec_full)."""
+    narrow = jnp.sum(_deq(s.col_val, s.col_scale)
+                     * _bgather(y, s.col_idx), axis=-2)
+    return narrow + _gather_wide_sorted(
+        s.wcol_idx, s.wcol_val, s.wcol_scale, s.col_fold, y, plan)
+
+
+def structured_full_forward_step(s, x, c, l, u, tau, kty, plan=()):
+    """Full-problem forward half-step: element-wise tail fused in front
+    of the blocked row-side matvec."""
+    x_new = jnp.clip(x - tau * (c + kty), l, u)
+    return x_new, smatvec_full(s, x_new, plan)
+
+
+def structured_full_backward_step(s, y, q, sigma, ineq_mask, kx_new,
+                                  kx_prev, plan=()):
+    """Full-problem backward half-step (column side)."""
+    y_new = y + sigma * (2.0 * kx_new - kx_prev - q)
+    y_new = jnp.where(ineq_mask, jnp.maximum(y_new, 0.0), y_new)
+    return y_new, smatvec_t_full(s, y_new, plan)

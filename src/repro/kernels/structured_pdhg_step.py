@@ -23,12 +23,35 @@ and the matvec that consumes it:
 Grid is ``(k,)``: each program owns one lane, whose vectors live entirely
 in VMEM (POP sub-problems are small by construction — the k^2 variable
 reduction is the paper's point — so a lane's [N] + [W, M] blocks fit
-comfortably; the FULL unpartitioned problem at paper scale would not, and
-takes the XLA reference path via ``kernels/ops.py`` dispatch instead).
-The nnz axis rides the sublanes (arrays are [W, M] nnz-major) so the
-reduce is a sublane reduction and rows/cols stay on the 128-wide lane
-axis.  Scalars (tau, sigma) ride in (1, 1) blocks so the kernel stays
-shape-polymorphic over the POP batch.
+comfortably).  The nnz axis rides the sublanes (arrays are [W, M]
+nnz-major) so the reduce is a sublane reduction and rows/cols stay on the
+128-wide lane axis.  Scalars (tau, sigma) ride in (1, 1) blocks so the
+kernel stays shape-polymorphic over the POP batch.
+
+The FULL unpartitioned problem at paper scale does NOT fit a lane in
+VMEM; it takes the **M-blocked streaming family** below
+(``structured_full_forward_step`` / ``structured_full_backward_step``):
+a phased 1-D grid ``(1 + num_wide_blocks + num_m_blocks,)`` per
+half-step —
+
+  phase 0                  element-wise tail into a pinned full-vector
+                           output block (readable by later phases);
+  wide phases              stream ``(FULL_BLOCK_W, FULL_BLOCK_D)`` tiles
+                           of the wide bucket, accumulating partial
+                           reduces into a pinned ``[1, D]`` accumulator
+                           output (flushed only once, at the end);
+  narrow phases            stream ``(W, FULL_BLOCK_M)`` tiles of the
+                           narrow ELL, each emitting one output block =
+                           narrow reduce + ``accum[fold]`` — the
+                           wide-bucket add-back is a gather through the
+                           fold map, not a one-hot einsum.
+
+Coefficient tiles may be int8/bf16 (``core/pdhg.quantize_structured``);
+they are dequantized in-register (``* scale``) and accumulated in f32.
+Each tile is <= FULL_BLOCK_W x FULL_BLOCK_M x 4 B, so VMEM stays bounded
+regardless of problem size; off-TPU the dispatch in ``kernels/ops.py``
+takes the XLA reference (``ref.smatvec_full``), which additionally
+applies the fully ragged wide-block plan.
 """
 
 from __future__ import annotations
@@ -142,3 +165,180 @@ def structured_backward_step(s, y, q, ineq_mask, kx_new, kx_prev, sigma, *,
         interpret=interpret,
     )(s.col_idx, s.col_val, s.wcol_idx, s.wcol_val, s.wcol_ids,
       y, q, ineq_mask, kx_new, kx_prev, sigma[:, None])
+
+
+# --------------------------------------------------------------------------
+# M-blocked streaming family: the single-lane FULL problem
+# --------------------------------------------------------------------------
+
+# per-tile block sizes for the streaming full kernels; every VMEM-resident
+# tile is bounded by these regardless of problem size (popcheck's
+# pallas-vmem-budget rule resolves them through the keyword defaults below)
+FULL_BLOCK_M = 512   # output-segment lane-axis tile (kx rows / kty cols)
+FULL_BLOCK_W = 512   # wide-bucket nnz (sublane) tile
+FULL_BLOCK_D = 512   # wide-bucket column (lane) tile
+
+
+def _full_forward_kernel(ri_ref, rv_ref, rs_ref, wri_ref, wrv_ref, wrs_ref,
+                         fold_ref, x_ref, c_ref, l_ref, u_ref, kty_ref,
+                         tau_ref, xn_ref, ws_ref, kx_ref, *,
+                         nwv: int, nww: int):
+    """Phased grid (1 + nwv + nm,): tail, then nwv wide tiles
+    (nww sublane-tiles per column-tile), then the M-blocked narrow
+    phases.  ``xn`` and ``ws`` are pinned outputs that double as
+    cross-phase VMEM state (their block index never changes, so they are
+    flushed exactly once)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _tail():
+        tau = tau_ref[0, 0]
+        xn_ref[0, :] = jnp.clip(
+            x_ref[0] - tau * (c_ref[0] + kty_ref[0]), l_ref[0], u_ref[0])
+
+    @pl.when((i >= 1) & (i < 1 + nwv))
+    def _wide():
+        p = i - 1
+        wb = p % nww
+        db = p // nww
+        wv = wrv_ref[0].astype(jnp.float32) * wrs_ref[0, 0]
+        part = jnp.sum(wv * jnp.take(xn_ref[0], wri_ref[0], axis=0), axis=0)
+        bd = part.shape[0]
+        sl = pl.ds(db * bd, bd)
+        prev = jnp.where(wb == 0, jnp.zeros_like(part), ws_ref[0, sl])
+        ws_ref[0, sl] = prev + part
+
+    @pl.when(i >= 1 + nwv)
+    def _narrow():
+        rv = rv_ref[0].astype(jnp.float32) * rs_ref[0, 0]
+        out = jnp.sum(rv * jnp.take(xn_ref[0], ri_ref[0], axis=0), axis=0)
+        kx_ref[0, :] = out + jnp.take(ws_ref[0], fold_ref[0], axis=0)
+
+
+def _full_backward_kernel(ci_ref, cv_ref, cs_ref, wci_ref, wcv_ref, wcs_ref,
+                          fold_ref, y_ref, q_ref, mask_ref, kxn_ref, kxp_ref,
+                          sig_ref, yn_ref, ws_ref, kty_ref, *,
+                          nwv: int, nww: int):
+    """Backward mirror: dual tail, column-side wide tiles, N-blocked
+    narrow phases."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _tail():
+        sigma = sig_ref[0, 0]
+        y_new = y_ref[0] + sigma * (2.0 * kxn_ref[0] - kxp_ref[0] - q_ref[0])
+        yn_ref[0, :] = jnp.where(mask_ref[0], jnp.maximum(y_new, 0.0), y_new)
+
+    @pl.when((i >= 1) & (i < 1 + nwv))
+    def _wide():
+        p = i - 1
+        wb = p % nww
+        db = p // nww
+        wv = wcv_ref[0].astype(jnp.float32) * wcs_ref[0, 0]
+        part = jnp.sum(wv * jnp.take(yn_ref[0], wci_ref[0], axis=0), axis=0)
+        bd = part.shape[0]
+        sl = pl.ds(db * bd, bd)
+        prev = jnp.where(wb == 0, jnp.zeros_like(part), ws_ref[0, sl])
+        ws_ref[0, sl] = prev + part
+
+    @pl.when(i >= 1 + nwv)
+    def _narrow():
+        cv = cv_ref[0].astype(jnp.float32) * cs_ref[0, 0]
+        out = jnp.sum(cv * jnp.take(yn_ref[0], ci_ref[0], axis=0), axis=0)
+        kty_ref[0, :] = out + jnp.take(ws_ref[0], fold_ref[0], axis=0)
+
+
+def _pin(b):
+    """BlockSpec for a block pinned at the origin for every phase."""
+    return pl.BlockSpec(b, lambda i: (0,) * len(b))
+
+
+def _full_call(kernel, narrow, wide, fold, vectors, scalars,
+               bm=FULL_BLOCK_M, bw=FULL_BLOCK_W, bd=FULL_BLOCK_D,
+               interpret=False):
+    """Shared launcher for the streaming full kernels.
+
+    ``narrow`` = (idx, val, scale) [1, W, S]-shaped (S = blocked output
+    segments), ``wide`` = (widx, wval, wscale) [1, Ww, D]-shaped,
+    ``vectors`` = the [1, V] tail operands, ``scalars`` = the (1, 1)
+    step-size blocks.  Grid = (1 + nwv + nm,) with all index maps
+    clip-pinned so a block only moves (and is only re-copied / flushed)
+    in the phases that use it."""
+    _, wr, s_pad = narrow[0].shape
+    _, ww, d_pad = wide[0].shape
+    nv_shape = vectors[0].shape[1]
+    nm = s_pad // bm
+    nww = ww // bw
+    nd = d_pad // bd
+    nwv = nww * nd
+
+    def wide_map(i):
+        p = jnp.clip(i - 1, 0, nwv - 1)
+        return (0, p % nww, p // nww)
+
+    def narrow_map3(i):
+        return (0, 0, jnp.clip(i - 1 - nwv, 0, nm - 1))
+
+    def narrow_map2(i):
+        return (0, jnp.clip(i - 1 - nwv, 0, nm - 1))
+
+    out = [jax.ShapeDtypeStruct((1, nv_shape), jnp.float32),
+           jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+           jax.ShapeDtypeStruct((1, s_pad), jnp.float32)]
+    res = pl.pallas_call(
+        functools.partial(kernel, nwv=nwv, nww=nww),
+        grid=(1 + nwv + nm,),
+        in_specs=[
+            pl.BlockSpec((1, wr, bm), narrow_map3),
+            pl.BlockSpec((1, wr, bm), narrow_map3),
+            _pin((1, 1)),
+            pl.BlockSpec((1, bw, bd), wide_map),
+            pl.BlockSpec((1, bw, bd), wide_map),
+            _pin((1, 1)),
+            pl.BlockSpec((1, bm), narrow_map2),
+        ] + [_pin((1, nv_shape))] * len(vectors)
+          + [_pin((1, 1))] * len(scalars),
+        out_specs=[_pin((1, nv_shape)), _pin((1, d_pad)),
+                   pl.BlockSpec((1, bm), narrow_map2)],
+        out_shape=out,
+        interpret=interpret,
+    )(*narrow, *wide, fold, *vectors, *scalars)
+    xn, _, kx = res
+    return xn, kx
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_w",
+                                             "block_d", "interpret"))
+def structured_full_forward_step(ri, rv, rs, wri, wrv, wrs, fold,
+                                 x, c, l, u, kty, tau, *,
+                                 block_m: int = FULL_BLOCK_M,
+                                 block_w: int = FULL_BLOCK_W,
+                                 block_d: int = FULL_BLOCK_D,
+                                 interpret: bool = False):
+    """Streaming full forward half-step.  Returns (x_new, kx).
+
+    Row-side inputs are pre-padded by ``kernels/ops.py``: ``ri/rv``
+    [1, Wr, M_pad] with M_pad a ``block_m`` multiple, ``wri/wrv``
+    [1, Ww_pad, D_pad] with Ww_pad / D_pad multiples of
+    ``block_w`` / ``block_d`` and D_pad > D (the fold map's zero slot
+    lands in an all-padding column), ``fold`` [1, M_pad], vectors
+    [1, N_pad], scales / tau (1, 1).  ``rv``/``wrv`` may be f32, bf16 or
+    int8 — dequantized in-register against the scale blocks."""
+    return _full_call(_full_forward_kernel, (ri, rv, rs), (wri, wrv, wrs),
+                      fold, (x, c, l, u, kty), (tau,),
+                      block_m, block_w, block_d, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_w",
+                                             "block_d", "interpret"))
+def structured_full_backward_step(ci, cv, cs, wci, wcv, wcs, fold,
+                                  y, q, ineq_mask, kx_new, kx_prev, sigma, *,
+                                  block_m: int = FULL_BLOCK_M,
+                                  block_w: int = FULL_BLOCK_W,
+                                  block_d: int = FULL_BLOCK_D,
+                                  interpret: bool = False):
+    """Streaming full backward half-step (column side; ``block_m`` tiles
+    the N output segments).  Returns (y_new, kty)."""
+    return _full_call(_full_backward_kernel, (ci, cv, cs), (wci, wcv, wcs),
+                      fold, (y, q, ineq_mask, kx_new, kx_prev), (sigma,),
+                      block_m, block_w, block_d, interpret)

@@ -138,11 +138,14 @@ class GavelProblem(POPProblem):
     KT_mv = staticmethod(_kt_mv)
 
     def __init__(self, wl: ClusterWorkload, space_sharing: bool = False,
-                 leftover_bonus: float = 0.05):
+                 leftover_bonus: float = 0.05, coef_dtype: str = "float32"):
         self.wl = wl
         self.space_sharing = space_sharing
         self.n_entities = wl.T.shape[0]
         self.n_types = wl.T.shape[1]
+        # ELL coefficient storage for the structured metadata
+        # (core/pdhg.quantize_structured: "float32"/"bfloat16"/"int8")
+        self.coef_dtype = coef_dtype
         self.scale = 1.0 / (wl.w * wl.T.max(axis=1))
         # secondary water-filling term: after the min is maximised, spend
         # leftover capacity on mean throughput (objective stays linear)
@@ -221,7 +224,7 @@ class GavelProblem(POPProblem):
         vals.append(np.broadcast_to(z[:, None], (C, R))[live])
         return structured_from_coo(
             np.concatenate(rows), np.concatenate(cols), np.concatenate(vals),
-            2 * n + R, C * R + 1)
+            2 * n + R, C * R + 1, coef_dtype=self.coef_dtype)
 
     def _build(self, combos_global: np.ndarray, local_of, n_local: int,
                frac: float, scale_vec: Optional[np.ndarray]) -> OperatorLP:

@@ -155,7 +155,8 @@ class LoadBalanceProblem:
                   n_pad: int, s_pad: int,
                   L_target: Optional[float] = None,
                   eps_eff: Optional[float] = None,
-                  structured: bool = False) -> OperatorLP:
+                  structured: bool = False,
+                  coef_dtype: str = "float32") -> OperatorLP:
         """LP relaxation over (shard subset x server subset), padded.
 
         ``structured=True`` additionally attaches the ELL index metadata —
@@ -208,7 +209,8 @@ class LoadBalanceProblem:
                                    np.ones(ii.shape[0])])
             structured_op = structured_from_coo(rows, cols, vals,
                                                 3 * s_pad + n_pad,
-                                                n_pad * s_pad)
+                                                n_pad * s_pad,
+                                                coef_dtype=coef_dtype)
         return OperatorLP(
             c=jnp.asarray(cost.reshape(-1), jnp.float32),
             q=jnp.asarray(q, jnp.float32),

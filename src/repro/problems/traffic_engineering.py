@@ -172,12 +172,16 @@ class TrafficProblem(POPProblem):
     KT_mv = staticmethod(_kt_mv)
 
     def __init__(self, topo: Topology, pairs: np.ndarray, demand: np.ndarray,
-                 path_edges: np.ndarray):
+                 path_edges: np.ndarray, coef_dtype: str = "float32"):
         self.topo = topo
         self.pairs = pairs
         self.demand = demand
         self.path_edges = path_edges                       # [n, P, L]
         self.n_entities = pairs.shape[0]
+        # ELL coefficient storage ("float32"/"bfloat16"/"int8" — see
+        # core/pdhg.quantize_structured); TE coefficients are all 1.0, so
+        # even int8 is exact here and just shrinks the streamed payload
+        self.coef_dtype = coef_dtype
 
     # --- partitioning hooks ---------------------------------------------------
     def entity_attrs(self):
@@ -242,7 +246,8 @@ class TrafficProblem(POPProblem):
         cols = np.concatenate([np.arange(n_local * P), fcol[on_edge]])
         vals = np.ones(rows.shape[0])
         structured = structured_from_coo(rows, cols, vals,
-                                         n_local + E, n_var)
+                                         n_local + E, n_var,
+                                         coef_dtype=self.coef_dtype)
         return OperatorLP(
             c=jnp.asarray(c, jnp.float32), q=jnp.asarray(q, jnp.float32),
             l=jnp.asarray(l, jnp.float32), u=jnp.asarray(u, jnp.float32),

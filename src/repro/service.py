@@ -121,7 +121,10 @@ def _zeros() -> dict:
             # total faults recorded, checkpoint restore outcomes
             "degraded_steps": 0, "recovered_steps": 0, "fallback_steps": 0,
             "quarantined_lanes": 0, "faults": 0,
-            "checkpoint_restores": 0, "checkpoint_failures": 0}
+            "checkpoint_restores": 0, "checkpoint_failures": 0,
+            # resolved step-engine observability: engine name -> steps
+            # that actually ran it ("auto" already resolved)
+            "engines": {}}
 
 
 def _tally(stats: dict, alloc: Allocation) -> None:
@@ -136,6 +139,9 @@ def _tally(stats: dict, alloc: Allocation) -> None:
         stats[alloc.status + "_steps"] += 1
     stats["faults"] += len(alloc.faults)
     stats["solve_time_s"] += alloc.solve_time_s
+    if alloc.engine:
+        eng = stats["engines"]
+        eng[alloc.engine] = eng.get(alloc.engine, 0) + 1
     if alloc.warm_fraction is not None:
         stats["warm_fraction_sum"] += alloc.warm_fraction
         stats["warm_steps"] += 1
@@ -901,10 +907,12 @@ class PopService:
 
     def stats(self) -> dict:
         """Service-wide observability: step counts, plan-cache hit rates,
-        aggregate solve time, mean warm fraction, and the fault-tolerance
-        counters (degraded/recovered/fallback steps, quarantined lanes,
-        checkpoint restore outcomes)."""
+        aggregate solve time, mean warm fraction, per-engine step counts
+        (``engines``: the resolved engine that actually ran each step),
+        and the fault-tolerance counters (degraded/recovered/fallback
+        steps, quarantined lanes, checkpoint restore outcomes)."""
         s = dict(self._stats)
+        s["engines"] = dict(s["engines"])
         steps = max(s["steps"], 1)
         s["plan_hit_rate"] = s["plan_hits"] / steps
         s["warm_fraction_mean"] = (s["warm_fraction_sum"] / s["warm_steps"]

@@ -1,5 +1,7 @@
 """Known-bad fixture: BlockSpec tiles that cannot fit VMEM."""
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 4096
 
@@ -12,4 +14,18 @@ def launch(kernel, a, out_shape):
         in_specs=[pl.BlockSpec((1, BLOCK, BLOCK), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((1, BLOCK, BLOCK), lambda i: (i, 0, 0)),
         out_shape=out_shape,
+    )(a)
+
+
+def launch_blocked(kernel, a, out_shape, block=max(BLOCK, 2048)):
+    # the M-blocked pattern: tile dims behind min/max + arithmetic, plus
+    # a VMEM scratch accumulator.  block resolves to 4096, the specs to
+    # (1, 4096, 8192) = 128 MiB each, the scratch adds another 128 MiB.
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((1, block, BLOCK * 2), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, block, BLOCK * 2), lambda i: (i, 0, 0)),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block, BLOCK * 2), jnp.float32)],
     )(a)

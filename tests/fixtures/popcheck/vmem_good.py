@@ -1,5 +1,7 @@
 """Good twin: tiled blocks, comfortably VMEM-resident."""
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 256
 
@@ -11,4 +13,17 @@ def launch(kernel, a, out_shape):
         in_specs=[pl.BlockSpec((1, BLOCK, BLOCK), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((1, BLOCK, BLOCK), lambda i: (i, 0, 0)),
         out_shape=out_shape,
+    )(a)
+
+
+def launch_blocked(kernel, a, out_shape, block=min(BLOCK * 2, 4096)):
+    # shrink-to-extent tiles: block resolves to 512 -> (1, 512, 512)
+    # blocks (1 MiB each) + a 1 MiB f32 scratch, well inside the budget
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((1, block, block), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, block, block), lambda i: (i, 0, 0)),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
     )(a)

@@ -300,3 +300,222 @@ def test_reported_execution_resolves_auto():
     full = pop.solve_full_ex(prob, exec_cfg=_EC(solver_kw=dict(FIXED_KW)))
     assert full.backend in backends_mod.MAP_BACKENDS
     assert full.engine == "fused_structured"
+
+
+# ---------------------------------------------------------------------------
+# blocked-full engine (fused_structured_full) + mixed-precision ELL storage
+# ---------------------------------------------------------------------------
+
+def _full_case(domain):
+    """Single-lane FULL op (fold maps attached) + the domain callables."""
+    if domain == "cluster":
+        wl = make_cluster_workload(16, num_workers=(6, 6, 6), seed=3)
+        prob = GavelProblem(wl, space_sharing=False)
+        return prob.build_full(), prob.K_mv, prob.KT_mv
+    if domain == "traffic":
+        topo = make_topology(24, 48, seed=1)
+        pairs, dem = make_demands(topo, 14, seed=1)
+        pe = k_shortest_paths(topo, pairs, n_paths=3, max_len=12, seed=1)
+        prob = TrafficProblem(topo, pairs, dem, pe)
+        return prob.build_full(), prob.K_mv, prob.KT_mv
+    wl = make_shard_workload(18, 6, seed=2)
+    prob = LoadBalanceProblem(wl)
+    op = prob._relax_op(np.arange(18), np.arange(6), 18, 6, structured=True)
+    return op, lb_k_mv, lb_kt_mv
+
+
+@pytest.fixture(scope="module")
+def full_cells():
+    out = {}
+    for name in DOMAINS:
+        op, k_mv, kt_mv = _full_case(name)
+        assert op.structured is not None, name
+        assert op.structured.row_fold is not None, name
+        ref, _, eng = backends_mod.solve_one_ex(op, k_mv, kt_mv, FIXED_KW,
+                                                backend="vmap",
+                                                engine="matvec")
+        assert eng == "matvec"
+        out[name] = (op, k_mv, kt_mv, ref)
+    return out
+
+
+@pytest.mark.parametrize("domain", DOMAINS)
+def test_full_engine_matches_matvec(domain, full_cells):
+    """ISSUE acceptance: the M-blocked streaming engine agrees with the
+    domain matvec reference to 1e-5 at the fixed budget, on the full
+    (single-lane, unpartitioned) problem of all three structured
+    domains."""
+    op, k_mv, kt_mv, ref = full_cells[domain]
+    r, _, eng = backends_mod.solve_one_ex(op, k_mv, kt_mv, FIXED_KW,
+                                          backend="vmap",
+                                          engine="fused_structured_full")
+    assert eng == "fused_structured_full"
+    np.testing.assert_allclose(np.asarray(r.x), np.asarray(ref.x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r.y), np.asarray(ref.y),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r.iterations),
+                                  np.asarray(ref.iterations))
+
+
+def test_full_engine_auto_threshold(full_cells, monkeypatch):
+    """auto takes the blocked-full engine exactly when the operator is
+    single-lane, carries fold maps, and its wide buckets store >=
+    FULL_ENGINE_MIN_WIDE_ELEMS elements."""
+    op, k_mv, kt_mv, _ = full_cells["traffic"]
+    opb = jax.tree.map(lambda a: jnp.asarray(a)[None], op)
+    # small problem: below the threshold -> lane engine
+    assert pdhg.select_engine(opb, k_mv, kt_mv) == "fused_structured"
+    # force the threshold down: the same op now takes the streaming engine
+    monkeypatch.setattr(pdhg, "FULL_ENGINE_MIN_WIDE_ELEMS", 1)
+    assert pdhg.select_engine(opb, k_mv, kt_mv) == "fused_structured_full"
+    # a k=3 stack is never eligible, whatever its size
+    ops3 = jax.tree.map(lambda a: jnp.concatenate([a[None]] * 3), op)
+    assert pdhg.select_engine(ops3, k_mv, kt_mv) == "fused_structured"
+    # and the engine refuses an operator without fold maps
+    bare = opb._replace(structured=opb.structured._replace(
+        row_fold=None, col_fold=None))
+    assert pdhg.select_engine(bare, k_mv, kt_mv) == "fused_structured"
+    with pytest.raises(ValueError, match="fold"):
+        pdhg.resolve_engine("fused_structured_full", bare)
+
+
+@pytest.mark.parametrize("coef_dtype", ("float32", "bfloat16", "int8"))
+def test_full_kernel_interpret_matches_ref(coef_dtype, full_cells):
+    """The Pallas kernel bodies (interpret mode — runs the real kernels on
+    CPU) match the ragged XLA reference, with deliberately small block
+    overrides so the traffic case exercises multiple narrow/wide phases
+    and the ragged last-block padding of every grid axis."""
+    from repro.kernels import ops as kops
+    op, _, _, _ = full_cells["traffic"]
+    s = op.structured
+    if coef_dtype != "float32":
+        s = pdhg.quantize_structured(s, coef_dtype)
+    sb = jax.tree.map(lambda a: jnp.asarray(a)[None], s)
+    plan = pdhg._wide_block_plan(s.wrow_val)
+    cplan = pdhg._wide_block_plan(s.wcol_val)
+    M, N = s.row_idx.shape[-1], s.col_idx.shape[-1]
+    rng = np.random.default_rng(7)
+    f = lambda shape: jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    x, c, kty = f((1, N)), f((1, N)), f((1, N))
+    l, u = jnp.zeros((1, N)), jnp.full((1, N), 10.0)
+    tau = jnp.full((1,), 0.3)
+    kw = dict(block_m=128, block_w=8, block_d=128)
+    xn_i, kx_i = kops.structured_full_forward_step(
+        sb, x, c, l, u, tau, kty, plan=plan, backend="interpret", **kw)
+    xn_r, kx_r = kops.structured_full_forward_step(
+        sb, x, c, l, u, tau, kty, plan=plan, backend="xla")
+    np.testing.assert_allclose(np.asarray(xn_i), np.asarray(xn_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kx_i), np.asarray(kx_r),
+                               rtol=1e-5, atol=1e-5)
+    y, q = f((1, M)), f((1, M))
+    kxn, kxp = f((1, M)), f((1, M))
+    mask = jnp.ones((1, M), jnp.float32)
+    sigma = jnp.full((1,), 0.2)
+    yn_i, kty_i = kops.structured_full_backward_step(
+        sb, y, q, sigma, mask, kxn, kxp, plan=cplan, backend="interpret",
+        **kw)
+    yn_r, kty_r = kops.structured_full_backward_step(
+        sb, y, q, sigma, mask, kxn, kxp, plan=cplan, backend="xla")
+    np.testing.assert_allclose(np.asarray(yn_i), np.asarray(yn_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kty_i), np.asarray(kty_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- mixed-precision ELL storage ------------------------------------------
+
+@pytest.mark.parametrize("coef_dtype,tol", (("bfloat16", 1e-2),
+                                            ("int8", 1e-2)))
+def test_quantize_roundtrip(coef_dtype, tol, full_cells):
+    """quantize -> dequantize reproduces the f32 coefficients within the
+    documented storage tolerance (bf16: 8-bit mantissa ~ 0.4% rel; int8:
+    symmetric per-bucket scale ~ 0.4% of the bucket max)."""
+    op, _, _, _ = full_cells["cluster"]
+    s = op.structured
+    q = pdhg.quantize_structured(s, coef_dtype)
+    assert q.coef_dtype == coef_dtype
+    back = pdhg.dequantize_structured(q)
+    assert back.coef_dtype == "float32" and back.row_scale is None
+    for a, b in ((s.row_val, back.row_val), (s.wrow_val, back.wrow_val),
+                 (s.col_val, back.col_val), (s.wcol_val, back.wcol_val)):
+        scale = max(float(jnp.max(jnp.abs(a))), 1e-30)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=tol * scale)
+    with pytest.raises(ValueError, match="already stores"):
+        pdhg.quantize_structured(q, "int8")
+
+
+@pytest.mark.parametrize("coef_dtype,tol", (("bfloat16", 1e-2),
+                                            ("int8", 1e-2)))
+def test_quantized_matvec_within_tolerance(coef_dtype, tol, full_cells):
+    """Both full-path matvec directions through quantized storage agree
+    with f32 storage to the documented relative tolerance."""
+    from repro.kernels import ops as kops
+    op, _, _, _ = full_cells["cluster"]
+    s = op.structured
+    sb = jax.tree.map(lambda a: jnp.asarray(a)[None], s)
+    qb = jax.tree.map(lambda a: jnp.asarray(a)[None],
+                      pdhg.quantize_structured(s, coef_dtype))
+    M, N = s.row_idx.shape[-1], s.col_idx.shape[-1]
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((1, N)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((1, M)), jnp.float32)
+    kx_f, kx_q = kops.smatvec_full(sb, x), kops.smatvec_full(qb, x)
+    kty_f, kty_q = kops.smatvec_t_full(sb, y), kops.smatvec_t_full(qb, y)
+    ref_scale = float(jnp.max(jnp.abs(kx_f))) + 1e-30
+    np.testing.assert_allclose(np.asarray(kx_q), np.asarray(kx_f),
+                               atol=tol * ref_scale)
+    ref_scale = float(jnp.max(jnp.abs(kty_f))) + 1e-30
+    np.testing.assert_allclose(np.asarray(kty_q), np.asarray(kty_f),
+                               atol=tol * ref_scale)
+
+
+def test_int8_exact_for_uniform_coefficients(full_cells):
+    """Traffic coefficients are all 1.0 (path-on-edge indicators), so int8
+    storage is EXACT: the full-engine solve trajectory matches f32 storage
+    bit-for-bit on the fixed budget."""
+    op, k_mv, kt_mv, _ = full_cells["traffic"]
+    q = op._replace(structured=pdhg.quantize_structured(op.structured,
+                                                        "int8"))
+    r_f, _, _ = backends_mod.solve_one_ex(op, k_mv, kt_mv, FIXED_KW,
+                                          backend="vmap",
+                                          engine="fused_structured_full")
+    r_q, _, eng = backends_mod.solve_one_ex(q, k_mv, kt_mv, FIXED_KW,
+                                            backend="vmap",
+                                            engine="fused_structured_full")
+    assert eng == "fused_structured_full"
+    np.testing.assert_array_equal(np.asarray(r_q.x), np.asarray(r_f.x))
+    np.testing.assert_array_equal(np.asarray(r_q.y), np.asarray(r_f.y))
+
+
+def test_scale_structured_dequantizes_first(full_cells):
+    """Equilibration on quantized storage degrades to f32 (scaled products
+    are not int8-representable) and matches scaling the dequantized
+    operator exactly — the scales round-trip, they never compose with
+    the diagonal scaling."""
+    op, _, _, _ = full_cells["cluster"]
+    sb = jax.tree.map(lambda a: jnp.asarray(a)[None], op.structured)
+    qb = jax.tree.map(lambda a: jnp.asarray(a)[None],
+                      pdhg.quantize_structured(op.structured, "int8"))
+    M, N = op.structured.row_idx.shape[-1], op.structured.col_idx.shape[-1]
+    rng = np.random.default_rng(5)
+    d_r = jnp.asarray(rng.uniform(0.5, 2.0, (1, M)), jnp.float32)
+    d_c = jnp.asarray(rng.uniform(0.5, 2.0, (1, N)), jnp.float32)
+    scaled_q = pdhg.scale_structured(qb, d_r, d_c)
+    scaled_f = pdhg.scale_structured(
+        jax.tree.map(lambda a: a, pdhg.dequantize_structured(qb)), d_r, d_c)
+    assert scaled_q.coef_dtype == "float32"
+    assert scaled_q.row_scale is None
+    np.testing.assert_array_equal(np.asarray(scaled_q.row_val),
+                                  np.asarray(scaled_f.row_val))
+    np.testing.assert_array_equal(np.asarray(scaled_q.wcol_val),
+                                  np.asarray(scaled_f.wcol_val))
+    # and the scaled-from-quantized operator stays close to scaling the
+    # ORIGINAL f32 payload (within the storage tolerance)
+    scaled_orig = pdhg.scale_structured(sb, d_r, d_c)
+    ref_scale = float(jnp.max(jnp.abs(scaled_orig.row_val))) + 1e-30
+    np.testing.assert_allclose(np.asarray(scaled_q.row_val),
+                               np.asarray(scaled_orig.row_val),
+                               atol=1e-2 * ref_scale)

@@ -19,7 +19,7 @@ FIXTURES = REPO_ROOT / "tests" / "fixtures" / "popcheck"
 CASES = [
     ("host-sync-in-hot-path", "host_sync_bad.py", "host_sync_good.py", 6),
     ("retrace-hazard", "retrace_bad.py", "retrace_good.py", 3),
-    ("pallas-vmem-budget", "vmem_bad.py", "vmem_good.py", 1),
+    ("pallas-vmem-budget", "vmem_bad.py", "vmem_good.py", 2),
     ("pallas-block-align", "align_bad.py", "align_good.py", 2),
     ("pallas-no-scatter", "kernels/scatter_bad.py",
      "kernels/scatter_good.py", 2),
