@@ -6,8 +6,8 @@
 #   make bench-backends  POP scaling sweep across map-step backends
 #   make bench-smoke     seconds-scale bench sanity: tiny step-engine A/B
 #                        (fused vs matvec) + tiny warm-vs-cold online
-#                        re-solve — catches perf-path breakage without the
-#                        full suite
+#                        re-solve + a 200-tenant dispatcher/paging sweep —
+#                        catches perf-path breakage without the full suite
 #   make bench-snapshot  full --fast suite -> BENCH_pop.json (the committed
 #                        PR-over-PR perf baseline)
 #   make bench-check     full --fast suite compared against the committed
@@ -71,6 +71,7 @@ bench-backends:
 bench-smoke:
 	$(PY) -m benchmarks.bench_pop_scaling --engine-sweep --smoke
 	$(PY) -m benchmarks.bench_online_resolve --fast
+	$(PY) -m benchmarks.bench_serve_scale --fast --tenants 200
 
 bench-snapshot:
 	$(PY) -m benchmarks.run --fast --emit BENCH_pop.json

@@ -65,8 +65,8 @@ def main() -> None:
     from . import (bench_churn, bench_cluster_scheduling,
                    bench_load_balancing, bench_moe_placement,
                    bench_online_resolve, bench_pop_scaling,
-                   bench_replication, bench_session, bench_skewed_splits,
-                   bench_traffic_engineering)
+                   bench_replication, bench_serve_scale, bench_session,
+                   bench_skewed_splits, bench_traffic_engineering)
 
     suite = {
         # paper Fig. 3
@@ -98,6 +98,9 @@ def main() -> None:
         # multi-tenant PopService session throughput (plan-cache hit rate,
         # warm fraction, steps/sec under interleaved tenants)
         "session": lambda: bench_session.run(fast=args.fast),
+        # fleet scale: 10k tenants (1k fast) through the micro-batched
+        # dispatcher — batching ratio, paged-cache hit rate, p50/p99
+        "serve_scale": lambda: bench_serve_scale.run(fast=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -35,6 +35,7 @@ import contextlib
 import dataclasses
 import functools
 import logging
+import threading
 from typing import Iterator, Optional
 
 import jax
@@ -110,47 +111,107 @@ def _is_device_array(x) -> bool:
     return isinstance(x, jax.Array)
 
 
+class _TripwireRegistry:
+    """Shared state for :func:`host_sync_tripwire` — THREAD-SCOPED arming.
+
+    The guards patch process-global doors (np.asarray, np.array,
+    jax.block_until_ready, jax.device_get), but a serving dispatcher runs
+    the guarded hot region on a worker thread WHILE client threads
+    legitimately read results back (finish/extract).  So the patches
+    install once (refcounted across nested/concurrent guards) and deny
+    only on threads that are currently inside a tripwire block; every
+    other thread falls through to the originals."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.depth = 0
+        self.armed: dict = {}            # thread ident -> nesting depth
+        self.origs = None
+
+    def active(self) -> bool:
+        return threading.get_ident() in self.armed
+
+    def enter(self) -> None:
+        with self.lock:
+            if self.depth == 0:
+                self._install()
+            self.depth += 1
+            ident = threading.get_ident()
+            self.armed[ident] = self.armed.get(ident, 0) + 1
+
+    def exit(self) -> None:
+        with self.lock:
+            ident = threading.get_ident()
+            n = self.armed.get(ident, 1) - 1
+            if n <= 0:
+                self.armed.pop(ident, None)
+            else:
+                self.armed[ident] = n
+            self.depth -= 1
+            if self.depth == 0:
+                self._restore()
+
+    def _install(self) -> None:
+        def deny(what: str):
+            raise HostSyncError(
+                f"{what} inside the guarded hot region forces a "
+                "device->host sync; keep the hot path on-device (jnp) and "
+                "read back only at the map-step boundary")
+
+        orig_asarray, orig_array = np.asarray, np.array
+        orig_block, orig_get = jax.block_until_ready, jax.device_get
+        self.origs = (orig_asarray, orig_array, orig_block, orig_get)
+
+        @functools.wraps(orig_asarray)
+        def guarded_asarray(a, *args, **kw):
+            if self.active() and _is_device_array(a):
+                deny("np.asarray(jax.Array)")
+            return orig_asarray(a, *args, **kw)
+
+        @functools.wraps(orig_array)
+        def guarded_array(a, *args, **kw):
+            if self.active() and _is_device_array(a):
+                deny("np.array(jax.Array)")
+            return orig_array(a, *args, **kw)
+
+        def guarded_block(x):
+            if self.active():
+                deny("jax.block_until_ready")
+            return orig_block(x)
+
+        def guarded_get(x):
+            if self.active():
+                deny("jax.device_get")
+            return orig_get(x)
+
+        np.asarray, np.array = guarded_asarray, guarded_array
+        jax.block_until_ready, jax.device_get = guarded_block, guarded_get
+
+    def _restore(self) -> None:
+        (np.asarray, np.array,
+         jax.block_until_ready, jax.device_get) = self.origs
+        self.origs = None
+
+
+_TRIPWIRE = _TripwireRegistry()
+
+
 @contextlib.contextmanager
 def host_sync_tripwire() -> Iterator[None]:
-    """Block device->host readbacks for the duration of the block."""
-
-    def deny(what: str):
-        raise HostSyncError(
-            f"{what} inside the guarded hot region forces a device->host "
-            "sync; keep the hot path on-device (jnp) and read back only "
-            "at the map-step boundary")
-
-    orig_asarray, orig_array = np.asarray, np.array
-    orig_block, orig_get = jax.block_until_ready, jax.device_get
-
-    @functools.wraps(orig_asarray)
-    def guarded_asarray(a, *args, **kw):
-        if _is_device_array(a):
-            deny("np.asarray(jax.Array)")
-        return orig_asarray(a, *args, **kw)
-
-    @functools.wraps(orig_array)
-    def guarded_array(a, *args, **kw):
-        if _is_device_array(a):
-            deny("np.array(jax.Array)")
-        return orig_array(a, *args, **kw)
-
-    def guarded_block(x):
-        deny("jax.block_until_ready")
-
-    def guarded_get(x):
-        deny("jax.device_get")
-
-    np.asarray, np.array = guarded_asarray, guarded_array
-    jax.block_until_ready, jax.device_get = guarded_block, guarded_get
+    """Block device->host readbacks on the CURRENT thread for the duration
+    of the block.  Arming is per-thread and composes across concurrent
+    guards (see :class:`_TripwireRegistry`): the dispatcher thread's hot
+    launch stays guarded while other threads' legitimate post-solve
+    readbacks pass through."""
+    _TRIPWIRE.enter()
     try:
-        # authoritative on accelerator platforms; on CPU, committed arrays
-        # are host-resident so the np patches above do the catching
+        # authoritative on accelerator platforms (and itself thread-local);
+        # on CPU, committed arrays are host-resident so the np patches in
+        # the registry do the catching
         with jax.transfer_guard_device_to_host("disallow"):
             yield
     finally:
-        np.asarray, np.array = orig_asarray, orig_array
-        jax.block_until_ready, jax.device_get = orig_block, orig_get
+        _TRIPWIRE.exit()
 
 
 @contextlib.contextmanager

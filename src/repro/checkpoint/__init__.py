@@ -1,4 +1,6 @@
-"""Sharded, atomic, async checkpointing + session-state byte format."""
+"""Sharded, atomic, async checkpointing + session-state byte format +
+the host-memory page store for evicted serving tenants."""
 from .checkpointer import Checkpointer
+from .paged import PagedSessionStore
 from .session_state import (CheckpointError, config_digest, pack_state,
                             unpack_state)

@@ -407,6 +407,94 @@ def _resolve_warm(ops: OperatorLP, warm) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return wx, wy
 
 
+def make_batch(ops: OperatorLP, warm=None):
+    """The ``(ops, warm_x, warm_y)`` batch a map backend consumes, with
+    cold lanes materialised (see :func:`_resolve_warm`).  This is the
+    exact batch :func:`solve_map` builds — exposed so the serving
+    dispatcher can assemble per-tenant batches on the caller thread and
+    hand the map-step launch to a shared worker."""
+    return (ops, *_resolve_warm(ops, warm))
+
+
+# --------------------------------------------------------------------------
+# cross-tenant coalescing: shared launches over concatenated batches
+# --------------------------------------------------------------------------
+
+def coalesce_key(ops: OperatorLP, K_mv, KT_mv, backend: str,
+                 engine: EngineSpec, solver_kw: dict, opts: dict):
+    """Hashable compatibility key for sharing one map-step launch across
+    prepared batches — the jit-cache key contract under shared launches:
+    two batches with EQUAL keys run the same compiled solver
+    (``_cached_solver`` keys on the same matvecs / solver_kw / engine) and
+    may be lane-concatenated into one call without changing any lane's
+    trajectory.
+
+    Per-lane array layouts must match exactly EXCEPT structured ELL
+    widths and wide-bucket counts, which :func:`~repro.core.pdhg.
+    concat_stacks` pads to the group maximum (so the key records only
+    their ndim/dtype).  Returns ``None`` — never coalesce — for the
+    single-lane streaming engine (``fused_structured_full`` rejects
+    multi-lane stacks by design) and for unhashable configs/matvecs
+    (which would retrace per call anyway)."""
+    kw_items, hashable = _freeze_kw(solver_kw)
+    if not hashable:
+        return None
+    try:
+        opt_items = tuple(sorted(opts.items()))
+        hash((opt_items, K_mv, KT_mv, engine))
+    except TypeError:
+        return None
+    if isinstance(engine, StepEngine) and engine.name == "fused_structured_full":
+        return None
+    bare = ops._replace(structured=None)
+    leaves, treedef = jax.tree.flatten(bare)
+    lane_shapes = tuple((l.shape[1:], jnp.asarray(l).dtype.name)
+                        for l in leaves)
+    s = ops.structured
+    skey = None if s is None else tuple(
+        None if v is None else (v.ndim, jnp.asarray(v).dtype.name)
+        for v in s)
+    return (treedef, lane_shapes, skey, K_mv, KT_mv, backend, engine,
+            kw_items, opt_items)
+
+
+def concat_batches(batches):
+    """Concatenate per-tenant ``(ops, warm_x, warm_y)`` batches on the lane
+    axis into one launch-sized batch (ops via
+    :func:`~repro.core.pdhg.concat_stacks`, which pads structured ELL
+    widths across tenants).  Returns ``(batch, sizes)`` — undo with
+    :func:`split_result`."""
+    sizes = tuple(batch_size(b) for b in batches)
+    ops = pdhg.concat_stacks([b[0] for b in batches])
+    wx = jnp.concatenate([b[1] for b in batches])
+    wy = jnp.concatenate([b[2] for b in batches])
+    return (ops, wx, wy), sizes
+
+
+def split_result(res: SolveResult, sizes) -> list:
+    """Slice a concatenated launch's SolveResult back into per-tenant
+    results (lane ranges in submission order)."""
+    outs, start = [], 0
+    for s in sizes:
+        outs.append(jax.tree.map(
+            lambda a, i0=start, i1=start + s: a[i0:i1], res))
+        start += s
+    return outs
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def pad_lanes_pow2(batch):
+    """Pad a coalesced batch's lane count up to the next power of two by
+    repeating lane 0 (see :func:`pad_to_multiple` — dummy lanes cannot
+    perturb real ones), so variable group sizes compile O(log) distinct
+    lane counts instead of one per arrival pattern.  Returns
+    ``(padded, k)`` with the original k; slice results ``[:k]``."""
+    return pad_to_multiple(batch, next_pow2(batch_size(batch)))
+
+
 def solve_one_ex(op: OperatorLP, K_mv, KT_mv,
                  solver_kw: Optional[dict] = None,
                  backend: str = "auto", engine: EngineSpec = "auto",
@@ -490,6 +578,6 @@ def solve_map(ops: OperatorLP, K_mv, KT_mv, solver_kw: Optional[dict] = None,
     solver_kw = dict(solver_kw or {})
     backend, engine, opts = resolve_exec(ops, K_mv, KT_mv, backend, engine,
                                          opts)
-    batch = (ops, *_resolve_warm(ops, warm))
+    batch = make_batch(ops, warm)
     return get_backend(backend)(batch, K_mv, KT_mv, solver_kw,
                                 engine=engine, **opts)

@@ -454,6 +454,53 @@ def stack_ops(subs: Sequence[OperatorLP]) -> OperatorLP:
     return ops._replace(structured=StructuredOperator(**stacked))
 
 
+def concat_stacks(stacks: Sequence[OperatorLP]) -> OperatorLP:
+    """Concatenate already-STACKED OperatorLPs (leading ``[k_i]`` axes) into
+    one ``[sum k_i]`` stack — the cross-tenant analogue of
+    :func:`stack_ops`' cross-lane stacking, used by the serving dispatcher
+    to coalesce concurrent tenants' sub-problem stacks into one launch.
+
+    Structured ELL widths and wide-bucket counts (data-dependent per
+    tenant) are padded to the maximum across stacks before concatenating,
+    exactly like :func:`stack_ops` pads per-lane widths: padding entries
+    carry ``idx 0, val 0.0`` (harmless in a gather-multiply-add) and each
+    lane's fold map keeps pointing at its own zero slot, which remains a
+    zero column of the widened wide arrays.  Lanes are independent in
+    :func:`solve_stacked` (per-lane step sizes, restarts, termination), so
+    every lane's trajectory is unchanged by who it shares a launch with.
+    If any stack lacks structured metadata the result drops it; mixed
+    coefficient storage dequantizes to f32 first (both mirror
+    :func:`stack_ops` — the dispatcher's compatibility key never mixes
+    them in practice)."""
+    stacks = list(stacks)
+    if len(stacks) == 1:
+        return stacks[0]
+    structs = [s.structured for s in stacks]
+    bare = [s._replace(structured=None) for s in stacks]
+    ops = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *bare)
+    if any(st is None for st in structs):
+        return ops
+    if len({st.coef_dtype for st in structs}) > 1:
+        structs = [dequantize_structured(st) for st in structs]
+
+    def padto(a, shape):
+        return jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, shape)])
+
+    merged = {}
+    for f in StructuredOperator._fields:
+        vals = [getattr(st, f) for st in structs]
+        if any(v is None for v in vals):
+            merged[f] = None
+            continue
+        # trailing dims (ELL widths / wide-bucket counts) pad to the max
+        # across stacks; the leading [k_i] axis concatenates as-is
+        trail = tuple(max(v.shape[d] for v in vals)
+                      for d in range(1, vals[0].ndim))
+        merged[f] = jnp.concatenate(
+            [padto(v, (v.shape[0],) + trail) for v in vals])
+    return ops._replace(structured=StructuredOperator(**merged))
+
+
 class SolveResult(NamedTuple):
     x: jnp.ndarray
     y: jnp.ndarray
@@ -515,12 +562,28 @@ def _engine_from_matvecs(name: str, bK: Callable, bKT: Callable,
     return StepEngine(name, bK, bKT, forward, backward, scale_data, prep)
 
 
+@functools.lru_cache(maxsize=64)
+def _matvec_engine_cached(K_mv: Callable, KT_mv: Callable) -> StepEngine:
+    return _engine_from_matvecs(
+        "matvec", jax.vmap(K_mv, in_axes=(0, 0)),
+        jax.vmap(KT_mv, in_axes=(0, 0)))
+
+
 def matvec_engine(K_mv: Callable = dense_K_mv,
                   KT_mv: Callable = dense_KT_mv) -> StepEngine:
     """Generic operator engine: vmap the per-problem matvecs over the
-    sub-problem axis.  Works for any structured ``data`` pytree."""
-    return _engine_from_matvecs(
-        "matvec", jax.vmap(K_mv, in_axes=(0, 0)), jax.vmap(KT_mv, in_axes=(0, 0)))
+    sub-problem axis.  Works for any structured ``data`` pytree.
+    Memoized on matvec identity so repeated resolution returns ONE engine
+    object per matvec pair — keeping downstream jit caches and the
+    serving dispatcher's coalesce keys stable across tenants."""
+    try:
+        return _matvec_engine_cached(K_mv, KT_mv)
+    except TypeError:
+        # unhashable matvecs cannot memoize: fresh engine per call (such
+        # configs never share jit caches or coalesce anyway)
+        return _engine_from_matvecs(
+            "matvec", jax.vmap(K_mv, in_axes=(0, 0)),
+            jax.vmap(KT_mv, in_axes=(0, 0)))
 
 
 @functools.lru_cache(maxsize=16)

@@ -373,7 +373,33 @@ def _plan_of(warm) -> Optional[PopPlan]:
                    entity_of_slot=ent, replication=rep)
 
 
-def solve_instance(
+@dataclasses.dataclass
+class PreparedSolve:
+    """Stages plan+build of the pipeline, stopped at the map-step boundary.
+
+    :func:`prepare_instance` produces one (plan resolved, sub-LPs built
+    and stacked, warm start remapped, ``"auto"`` backend/engine resolved);
+    the map-step launch itself — ``backends.get_backend(backend)(batch,
+    ...)`` on ``backends.make_batch(ops, warm)`` — can then run anywhere
+    (inline, or coalesced with other tenants' prepared solves by the
+    serving dispatcher), and :func:`finish_prepared` turns the launch's
+    :class:`SolveResult` back into a :class:`POPResult`.
+    ``solve_instance`` is exactly ``prepare -> launch -> finish``."""
+
+    problem: POPProblem
+    plan: Optional[PopPlan]
+    ops: OperatorLP
+    warm: object                 # None | (x, y) | WarmStart
+    warm_stats: Optional[dict]
+    plan_source: str
+    backend: str
+    engine: object               # "matvec" | StepEngine
+    opts: dict
+    solver_kw: dict
+    build_time_s: float
+
+
+def prepare_instance(
     problem: POPProblem,
     solve_cfg: SolveConfig = SolveConfig(),
     exec_cfg: ExecConfig = ExecConfig(),
@@ -384,35 +410,13 @@ def solve_instance(
     partition_idx: Optional[np.ndarray] = None,
     entity_ids: Optional[np.ndarray] = None,
     cold_lanes: Optional[np.ndarray] = None,
-) -> POPResult:
-    """Run POP on ``problem``: :func:`plan` -> :func:`build` ->
-    :func:`solve` -> :func:`reduce` in one call, configured by the two
-    frozen config dataclasses (``core/config.py``): :class:`SolveConfig`
-    says how to split (k, strategy, replication), :class:`ExecConfig` how
-    to execute (backend, engine, solver keywords).  This is the canonical
-    pipeline entry — :class:`~repro.service.PopService` sessions call it
-    per step, and the legacy :func:`pop_solve` kwarg surface forwards
-    here.
-
-    ``warm`` re-solves an UPDATED instance from a previous
-    :class:`POPResult`.  While the instance shape is unchanged the previous
-    plan is reused and every lane continues from its previous (x, y)
-    iterates; across entity arrivals/departures, k changes or forced
-    re-planning (``replan=True`` / explicit ``plan=``) the old iterates
-    are remapped onto the new plan (see module docstring).  ``entity_ids``
-    names entities stably across instances for that matching;
-    ``partition_idx`` overrides the strategy with an explicit split.
-
-    The result reports the backend/engine that ACTUALLY ran (``"auto"``
-    resolved) and where its plan came from (``plan_source``: "reused" /
-    "repaired" / "fresh" / "provided") — the observability the service
-    plan cache and the benchmarks aggregate.
-
-    ``cold_lanes`` ([k] bool) forces those lanes to start cold even when a
-    warm start is supplied — the divergence-quarantine retry path:
-    ``PopSession.step`` re-solves with ``plan=prev.plan`` and
-    ``cold_lanes=prev.diverged`` so only the poisoned lanes restart while
-    healthy lanes keep their iterates."""
+) -> PreparedSolve:
+    """Everything :func:`solve_instance` does BEFORE the map-step launch:
+    plan resolution (reuse / repair / fresh), sub-LP build + stack, warm
+    start resolution (remap, quarantine masking), and ``"auto"``
+    backend/engine resolution — returning a :class:`PreparedSolve` whose
+    launch the caller owns.  See :func:`solve_instance` for the parameter
+    semantics."""
     # honour the SolveConfig.min_per_sub promise HERE (the canonical
     # entry), not in each caller; without min_per_sub the requested k is
     # used verbatim (the historical pop_solve semantics)
@@ -502,27 +506,87 @@ def solve_instance(
     backend_name, engine_run, opts = backends_mod.resolve_exec(
         ops, problem.K_mv, problem.KT_mv, exec_cfg.backend, exec_cfg.engine,
         exec_cfg.opts_dict())
-    t1 = time.perf_counter()
-    res = solve(problem, p, ops, backend=backend_name, engine=engine_run,
-                solver_kw=solver_kw, backend_opts=opts, warm=warm_in)
-    solve_time = time.perf_counter() - t1
+    return PreparedSolve(
+        problem=problem, plan=p, ops=ops, warm=warm_in,
+        warm_stats=warm_stats, plan_source=source, backend=backend_name,
+        engine=engine_run, opts=opts, solver_kw=solver_kw,
+        build_time_s=build_time)
 
-    alloc = reduce(problem, p, ops, res)
+
+def finish_prepared(prep: PreparedSolve, res: SolveResult,
+                    solve_time_s: float) -> POPResult:
+    """Stage 4 for a :class:`PreparedSolve` whose launch already ran:
+    reduce per-lane allocations and assemble the :class:`POPResult`."""
+    p = prep.plan
+    alloc = reduce(prep.problem, p, prep.ops, res)
     return POPResult(
         alloc=alloc, idx=p.idx,
-        solve_time_s=solve_time, build_time_s=build_time,
+        solve_time_s=solve_time_s, build_time_s=prep.build_time_s,
         iterations=np.asarray(res.iterations),
         converged=np.asarray(res.converged),
         similarity=p.similarity or {},
         sub_objectives=np.asarray(res.primal_obj),
         replication=p.replication,
         x=np.asarray(res.x), y=np.asarray(res.y),
-        plan=p, warm_stats=warm_stats,
-        backend=backend_name, engine=pdhg.engine_name(engine_run),
-        plan_source=source,
+        plan=p, warm_stats=prep.warm_stats,
+        backend=prep.backend, engine=pdhg.engine_name(prep.engine),
+        plan_source=prep.plan_source,
         diverged=(None if res.diverged is None
                   else np.asarray(res.diverged)),
     )
+
+
+def solve_instance(
+    problem: POPProblem,
+    solve_cfg: SolveConfig = SolveConfig(),
+    exec_cfg: ExecConfig = ExecConfig(),
+    *,
+    warm: Optional[POPResult] = None,
+    plan: Optional[PopPlan] = None,
+    replan: bool = False,
+    partition_idx: Optional[np.ndarray] = None,
+    entity_ids: Optional[np.ndarray] = None,
+    cold_lanes: Optional[np.ndarray] = None,
+) -> POPResult:
+    """Run POP on ``problem``: :func:`plan` -> :func:`build` ->
+    :func:`solve` -> :func:`reduce` in one call, configured by the two
+    frozen config dataclasses (``core/config.py``): :class:`SolveConfig`
+    says how to split (k, strategy, replication), :class:`ExecConfig` how
+    to execute (backend, engine, solver keywords).  This is the canonical
+    pipeline entry — :class:`~repro.service.PopService` sessions call it
+    per step, and the legacy :func:`pop_solve` kwarg surface forwards
+    here.  (Internally it is :func:`prepare_instance` -> the map-step
+    launch -> :func:`finish_prepared`; the serving dispatcher drives those
+    stages separately to coalesce concurrent tenants into one launch.)
+
+    ``warm`` re-solves an UPDATED instance from a previous
+    :class:`POPResult`.  While the instance shape is unchanged the previous
+    plan is reused and every lane continues from its previous (x, y)
+    iterates; across entity arrivals/departures, k changes or forced
+    re-planning (``replan=True`` / explicit ``plan=``) the old iterates
+    are remapped onto the new plan (see module docstring).  ``entity_ids``
+    names entities stably across instances for that matching;
+    ``partition_idx`` overrides the strategy with an explicit split.
+
+    The result reports the backend/engine that ACTUALLY ran (``"auto"``
+    resolved) and where its plan came from (``plan_source``: "reused" /
+    "repaired" / "fresh" / "provided") — the observability the service
+    plan cache and the benchmarks aggregate.
+
+    ``cold_lanes`` ([k] bool) forces those lanes to start cold even when a
+    warm start is supplied — the divergence-quarantine retry path:
+    ``PopSession.step`` re-solves with ``plan=prev.plan`` and
+    ``cold_lanes=prev.diverged`` so only the poisoned lanes restart while
+    healthy lanes keep their iterates."""
+    prep = prepare_instance(
+        problem, solve_cfg, exec_cfg, warm=warm, plan=plan, replan=replan,
+        partition_idx=partition_idx, entity_ids=entity_ids,
+        cold_lanes=cold_lanes)
+    t1 = time.perf_counter()
+    res = solve(problem, prep.plan, prep.ops, backend=prep.backend,
+                engine=prep.engine, solver_kw=prep.solver_kw,
+                backend_opts=prep.opts, warm=prep.warm)
+    return finish_prepared(prep, res, time.perf_counter() - t1)
 
 
 def pop_solve(
@@ -579,6 +643,48 @@ class FullResult:
     engine: Optional[str] = None
 
 
+def prepare_full(problem: POPProblem, *,
+                 warm: Optional[SolveResult] = None,
+                 exec_cfg: Optional[ExecConfig] = None) -> PreparedSolve:
+    """The pre-launch half of :func:`solve_full_ex`: build the full LP as
+    a k=1 stack, resolve ``"auto"`` backend/engine on it, and batch the
+    warm iterates — returning a :class:`PreparedSolve` (``plan=None``,
+    ``plan_source="full"``) whose single-lane launch the caller owns (the
+    serving dispatcher coalesces compatible k=1 stacks from concurrent
+    tenants into one multi-lane launch)."""
+    exec_cfg = exec_cfg or ExecConfig()
+    solver_kw = exec_cfg.solver_dict()
+    t0 = time.perf_counter()
+    op = problem.build_full()
+    _require_finite_ops(op, "solve_full_ex")
+    build_time = time.perf_counter() - t0
+    opb = jax.tree.map(lambda a: jnp.asarray(a)[None], op)
+    backend_name, engine_run, opts = backends_mod.resolve_exec(
+        opb, problem.K_mv, problem.KT_mv, exec_cfg.backend, exec_cfg.engine,
+        exec_cfg.opts_dict())
+    if warm is not None:
+        if hasattr(warm, "x") and hasattr(warm, "y"):
+            warm = (warm.x, warm.y)
+        warm = tuple(jnp.asarray(w)[None] for w in warm)
+    return PreparedSolve(
+        problem=problem, plan=None, ops=opb, warm=warm, warm_stats=None,
+        plan_source="full", backend=backend_name, engine=engine_run,
+        opts=opts, solver_kw=solver_kw, build_time_s=build_time)
+
+
+def finish_full(prep: PreparedSolve, res: SolveResult,
+                solve_time_s: float) -> FullResult:
+    """Unbatch a :func:`prepare_full` launch's k=1 result and extract the
+    allocation — the post-launch half of :func:`solve_full_ex`."""
+    res1 = jax.tree.map(lambda a: a[0], res)
+    op = jax.tree.map(lambda a: a[0], prep.ops)
+    idx = np.arange(prep.problem.n_entities)
+    alloc = np.asarray(prep.problem.extract(op, np.asarray(res1.x), idx))
+    return FullResult(alloc=alloc, res=res1, solve_time_s=solve_time_s,
+                      build_time_s=prep.build_time_s, backend=prep.backend,
+                      engine=pdhg.engine_name(prep.engine))
+
+
 def solve_full_ex(problem: POPProblem, *,
                   warm: Optional[SolveResult] = None,
                   exec_cfg: Optional[ExecConfig] = None) -> FullResult:
@@ -589,23 +695,14 @@ def solve_full_ex(problem: POPProblem, *,
     execution (including ``solver_kw``) comes from ``exec_cfg``; ``warm``
     re-solves from a previous full-problem :class:`SolveResult`.  Returns
     a :class:`FullResult` reporting the resolved backend/engine."""
-    exec_cfg = exec_cfg or ExecConfig()
-    solver_kw = exec_cfg.solver_dict()
-    t0 = time.perf_counter()
-    op = problem.build_full()
-    _require_finite_ops(op, "solve_full_ex")
-    build_time = time.perf_counter() - t0
+    prep = prepare_full(problem, warm=warm, exec_cfg=exec_cfg)
     t1 = time.perf_counter()
-    res, backend_name, engine_name = backends_mod.solve_one_ex(
-        op, problem.K_mv, problem.KT_mv, solver_kw,
-        backend=exec_cfg.backend, engine=exec_cfg.engine, warm=warm,
-        **exec_cfg.opts_dict())
-    solve_time = time.perf_counter() - t1
-    idx = np.arange(problem.n_entities)
-    alloc = np.asarray(problem.extract(op, np.asarray(res.x), idx))
-    return FullResult(alloc=alloc, res=res, solve_time_s=solve_time,
-                      build_time_s=build_time, backend=backend_name,
-                      engine=engine_name)
+    res = backends_mod.solve_map(
+        prep.ops, problem.K_mv, problem.KT_mv, prep.solver_kw,
+        backend=prep.backend, engine=prep.engine, warm=prep.warm,
+        **prep.opts)
+    jax.block_until_ready(res.x)
+    return finish_full(prep, res, time.perf_counter() - t1)
 
 
 def solve_full(problem: POPProblem, solver_kw: Optional[dict] = None,

@@ -42,6 +42,19 @@ rung taken (``ok``/``degraded``/``recovered``/``fallback``).
 tenant's warm state to bytes (``repro.checkpoint.session_state``) for
 rolling restarts — corrupt or stale blobs degrade to cold starts.
 
+Serving at fleet scale (docs/SERVING.md): a service constructed with
+``dispatch=`` runs every session's map-step launch through a
+**micro-batching dispatcher** that coalesces concurrent tenants'
+same-shape sub-problem stacks into ONE ``solve_stacked`` launch
+(``core/backends.py:coalesce_key`` decides compatibility,
+``pdhg.concat_stacks`` pads structured ELL widths across tenants), and
+``max_resident=`` bounds how many tenants keep live warm state — cold
+tenants page out to a host-memory blob store
+(``repro.checkpoint.paged``) and restore transparently on ``session()``
+re-entry.  ``PopSession.step_async`` is the concurrent entry point;
+results are bit-identical per tenant to the synchronous path because
+solver lanes are independent by construction.
+
 Domains enter through the declarative registry (``repro.domains``) — the
 legacy doors (``pop_solve``, ``GavelScheduler``, ``balance_requests``)
 forward here and warn.
@@ -49,21 +62,61 @@ forward here and warn.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import json
+import queue
+import threading
 import time
-from typing import Any, Dict, Optional
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Union
 
+import jax
 import numpy as np
 
+from .checkpoint import paged as paged_mod
 from .checkpoint import session_state as ckpt_mod
+from .core import backends as backends_mod
 from .core import pop as pop_mod
 from .core.config import ExecConfig, SolveConfig
 from .core.pdhg import SolveResult
 from .core.plan import PopPlan
 from .domains import DomainSpec, StepOutcome, registry as registry_mod
 
-__all__ = ["Allocation", "PopService", "PopSession"]
+__all__ = ["Allocation", "DispatchConfig", "MicroBatchDispatcher",
+           "PopService", "PopSession"]
+
+# default cap on the deadline ladder's per-(path, domain, config, shape)
+# rate/overhead EMA maps — diverse instance shapes would otherwise grow
+# them without bound (each key is a few hundred bytes, but a fleet churns
+# through shapes forever)
+RATE_CACHE_SIZE = 4096
+
+
+class _BoundedLRU(OrderedDict):
+    """Bounded LRU mapping for the rate/overhead EMA caches: reads and
+    writes refresh recency, inserts beyond ``maxsize`` evict the coldest
+    key and count it.  NOT itself thread-safe — PopService holds its lock
+    around every access."""
+
+    def __init__(self, maxsize: int):
+        super().__init__()
+        self.maxsize = int(maxsize)
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        if key in self:
+            super().move_to_end(key)
+            return super().__getitem__(key)
+        return default
+
+    def __setitem__(self, key, value):
+        if key in self:
+            super().move_to_end(key)
+        super().__setitem__(key, value)
+        while len(self) > self.maxsize:
+            super().popitem(last=False)
+            self.evictions += 1
 
 
 @dataclasses.dataclass
@@ -178,6 +231,249 @@ def _count_diverged(res) -> int:
     return 0 if div is None else int(np.asarray(div).sum())
 
 
+# --------------------------------------------------------------------------
+# the micro-batching dispatcher: cross-tenant coalesced map-step launches
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Tuning for :class:`MicroBatchDispatcher`.
+
+    ``max_lanes`` caps a coalesced launch's total lane count (sum of the
+    grouped tenants' k); ``max_wait_ms`` is the micro-batch window —
+    measured from the first ticket's arrival, the dispatcher collects
+    company until the window closes or ``max_lanes`` fills (a saturated
+    queue fills the group with zero added wait, so the window only costs
+    latency under sparse traffic); ``pad_pow2`` pads each coalesced
+    launch's lane
+    count up to the next power of two with replica lanes so variable
+    group sizes compile O(log max_lanes) distinct solvers instead of one
+    per arrival pattern; ``workers`` sizes the service's
+    ``step_async`` thread pool."""
+
+    max_lanes: int = 64
+    max_wait_ms: float = 2.0
+    pad_pow2: bool = True
+    workers: int = 8
+
+
+class _Ticket:
+    """One tenant's prepared map-step launch, queued for dispatch."""
+
+    __slots__ = ("key", "batch", "prep", "K_mv", "KT_mv", "future")
+
+    def __init__(self, key, batch, prep, K_mv, KT_mv, future):
+        self.key = key
+        self.batch = batch
+        self.prep = prep
+        self.K_mv = K_mv
+        self.KT_mv = KT_mv
+        self.future = future
+
+
+class MicroBatchDispatcher:
+    """Coalesces concurrent tenants' prepared map-step launches.
+
+    Sessions prepare their solves on their own threads
+    (``pop.prepare_instance`` / ``pop.prepare_full``) and submit the
+    launch here; a single worker thread drains the queue, groups tickets
+    by :func:`repro.core.backends.coalesce_key` (same matvecs, resolved
+    backend/engine, solver config and per-lane layout — structured ELL
+    widths may differ; ``pdhg.concat_stacks`` pads them), runs ONE map
+    backend call per group, and slices per-tenant results back out.
+    Lanes are independent in ``solve_stacked``, so each tenant's result
+    is bit-identical to a solo launch; warm chains, plan provenance and
+    the degradation ladder all live in the session layer above and never
+    see the sharing.
+
+    A failed group launch falls back to per-ticket solo launches, so one
+    tenant's pathological batch cannot fail its peers — only its own
+    caller sees the exception (which the session ladder then handles)."""
+
+    def __init__(self, cfg: Optional[DispatchConfig] = None):
+        self.cfg = cfg or DispatchConfig()
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._gate = threading.Event()
+        self._gate.set()
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._counts = {
+            "requests": 0, "launches": 0, "lanes": 0,
+            "coalesced_launches": 0, "coalesced_requests": 0,
+            "solo_launches": 0, "group_fallbacks": 0, "max_group": 0}
+        self._thread = threading.Thread(target=self._loop,
+                                        name="pop-dispatch", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- client --
+    def solve_prepared(self, prep, K_mv, KT_mv):
+        """Run one :class:`~repro.core.pop.PreparedSolve`'s map-step
+        launch, blocking until its :class:`SolveResult` is ready.
+        Returns ``(result, solve_time_s)`` where the time is this
+        tenant's lane-weighted share of the launch wall time.
+        Launches that cannot share (single-lane streaming engine,
+        unhashable configs) run inline on the calling thread."""
+        batch = backends_mod.make_batch(prep.ops, prep.warm)
+        key = backends_mod.coalesce_key(prep.ops, K_mv, KT_mv, prep.backend,
+                                        prep.engine, prep.solver_kw,
+                                        prep.opts)
+        with self._lock:
+            self._counts["requests"] += 1
+        if key is None or not self._thread.is_alive():
+            tk = _Ticket(None, batch, prep, K_mv, KT_mv, None)
+            t1 = time.perf_counter()
+            res = self._launch(batch, tk)
+            wall = time.perf_counter() - t1
+            with self._lock:
+                self._counts["launches"] += 1
+                self._counts["solo_launches"] += 1
+                self._counts["lanes"] += backends_mod.batch_size(batch)
+            return res, wall
+        fut: "concurrent.futures.Future" = concurrent.futures.Future()
+        self._q.put(_Ticket(key, batch, prep, K_mv, KT_mv, fut))
+        return fut.result()
+
+    def hold(self):
+        """Context manager pausing batch collection: requests queue up
+        while held and dispatch in one sweep on release — deterministic
+        maximal coalescing for tests and benchmarks."""
+        dispatcher = self
+
+        class _Hold:
+            def __enter__(self):
+                dispatcher._gate.clear()
+                return dispatcher
+
+            def __exit__(self, *exc):
+                dispatcher._gate.set()
+                return False
+
+        return _Hold()
+
+    def stats(self) -> dict:
+        """Observability counters + derived ratios.  ``batching_ratio``
+        is served requests per device launch (> 1 means coalescing is
+        happening); ``lanes_per_launch`` the mean stacked lane count."""
+        with self._lock:
+            s = dict(self._counts)
+        served = s["coalesced_requests"] + s["solo_launches"]
+        s["batching_ratio"] = served / max(s["launches"], 1)
+        s["lanes_per_launch"] = s["lanes"] / max(s["launches"], 1)
+        return s
+
+    def close(self) -> None:
+        self._stop.set()
+        self._gate.set()
+        self._q.put(None)
+        self._thread.join(timeout=5.0)
+
+    # ------------------------------------------------------------- worker --
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._gate.wait(timeout=0.25)
+            if not self._gate.is_set():
+                continue
+            try:
+                first = self._q.get(timeout=0.25)
+            except queue.Empty:
+                continue
+            if first is None:
+                continue
+            # a hold() that began while we were blocked in get(): keep the
+            # ticket and wait the hold out so it joins the released sweep
+            while not self._gate.is_set() and not self._stop.is_set():
+                self._gate.wait(timeout=0.25)
+            tickets = [first]
+            lanes = backends_mod.batch_size(first.batch)
+            lanes = self._drain(tickets, lanes)
+            if lanes < self.cfg.max_lanes and self.cfg.max_wait_ms > 0:
+                # micro-batch window: from first-ticket arrival, collect
+                # company until the window closes or the lane budget fills.
+                # A saturated queue fills the group with zero added wait;
+                # the window only costs latency when traffic is sparse.
+                deadline = time.perf_counter() + self.cfg.max_wait_ms / 1e3
+                while lanes < self.cfg.max_lanes:
+                    rem = deadline - time.perf_counter()
+                    if rem <= 0:
+                        break
+                    try:
+                        t = self._q.get(timeout=rem)
+                    except queue.Empty:
+                        break
+                    if t is None:
+                        continue
+                    tickets.append(t)
+                    lanes += backends_mod.batch_size(t.batch)
+                    lanes = self._drain(tickets, lanes)
+            groups: "OrderedDict[tuple, list]" = OrderedDict()
+            for t in tickets:
+                groups.setdefault(t.key, []).append(t)
+            for grp in groups.values():
+                self._run_group(grp)
+
+    def _drain(self, tickets: list, lanes: int) -> int:
+        while lanes < self.cfg.max_lanes:
+            try:
+                t = self._q.get_nowait()
+            except queue.Empty:
+                return lanes
+            if t is None:
+                continue
+            tickets.append(t)
+            lanes += backends_mod.batch_size(t.batch)
+        return lanes
+
+    def _launch(self, batch, tk):
+        prep = tk.prep
+        res = backends_mod.get_backend(prep.backend)(
+            batch, tk.K_mv, tk.KT_mv, dict(prep.solver_kw),
+            engine=prep.engine, **prep.opts)
+        jax.block_until_ready(res.x)
+        return res
+
+    def _run_group(self, grp: list) -> None:
+        if len(grp) > 1:
+            t1 = time.perf_counter()
+            try:
+                batch, sizes = backends_mod.concat_batches(
+                    [t.batch for t in grp])
+                total = sum(sizes)
+                if self.cfg.pad_pow2:
+                    batch, _ = backends_mod.pad_lanes_pow2(batch)
+                res = self._launch(batch, grp[0])
+                res = jax.tree.map(lambda a: a[:total], res)
+                parts = backends_mod.split_result(res, sizes)
+                wall = time.perf_counter() - t1
+                with self._lock:
+                    self._counts["launches"] += 1
+                    self._counts["lanes"] += total
+                    self._counts["coalesced_launches"] += 1
+                    self._counts["coalesced_requests"] += len(grp)
+                    self._counts["max_group"] = max(
+                        self._counts["max_group"], len(grp))
+                for tk, part, s in zip(grp, parts, sizes):
+                    tk.future.set_result((part, wall * (s / total)))
+                return
+            except Exception:
+                # a shared launch must not take peers down with one bad
+                # tenant: retry every ticket solo; only the bad tenant's
+                # caller sees its exception (handled by the session ladder)
+                with self._lock:
+                    self._counts["group_fallbacks"] += 1
+        for tk in grp:
+            t1 = time.perf_counter()
+            try:
+                res = self._launch(tk.batch, tk)
+                wall = time.perf_counter() - t1
+                with self._lock:
+                    self._counts["launches"] += 1
+                    self._counts["solo_launches"] += 1
+                    self._counts["lanes"] += backends_mod.batch_size(tk.batch)
+                tk.future.set_result((res, wall))
+            except BaseException as e:      # noqa: BLE001 — forwarded
+                tk.future.set_exception(e)
+
+
 class PopSession:
     """One tenant's stateful solving loop for one domain.
 
@@ -197,6 +493,11 @@ class PopSession:
         self.steps = 0
         self.last: Optional[Allocation] = None
         self.stats = _zeros()
+        # serializes step()/checkpoint/page-out for THIS tenant.  Lock
+        # order: a session lock may take the service lock (stats tally,
+        # rate notes) but NEVER the reverse — service-side paths that need
+        # both (eviction, checkpoint) release the service lock first
+        self._lock = threading.RLock()
         # warm state: a POPResult (pop path), a SolveResult (+ the ids it
         # is FOR, full path), or whatever a step_override domain carries
         self._warm: Any = None
@@ -279,17 +580,32 @@ class PopSession:
         the returned :class:`Allocation` reports the rung in ``status``.
         Without a deadline the fault-free path is byte-identical to the
         pre-deadline behavior (same jit cache keys, zero retraces)."""
-        t0 = time.perf_counter()
-        if self.spec.step_override is not None:
-            alloc = self._step_override(instance, deadline_s, t0)
-        else:
-            alloc = self._step_generic(instance, deadline_s, t0)
-        self.steps += 1
-        self._last_wall = time.perf_counter() - t0
-        _tally(self.stats, alloc)
-        _tally(self.service._stats, alloc)
-        self.last = alloc
+        with self._lock:
+            self.service._reattach(self)
+            t0 = time.perf_counter()
+            if self.spec.step_override is not None:
+                alloc = self._step_override(instance, deadline_s, t0)
+            else:
+                alloc = self._step_generic(instance, deadline_s, t0)
+            self.steps += 1
+            self._last_wall = time.perf_counter() - t0
+            _tally(self.stats, alloc)
+            with self.service._lock:
+                _tally(self.service._stats, alloc)
+            self.last = alloc
+        self.service._after_step(self)
         return alloc
+
+    def step_async(self, instance: Any, *,
+                   deadline_s: Optional[float] = None
+                   ) -> "concurrent.futures.Future":
+        """Submit :meth:`step` to the service's thread pool; returns a
+        ``Future[Allocation]``.  Steps of ONE session serialize on the
+        session lock (warm chains stay ordered); steps of DIFFERENT
+        sessions run concurrently, and when the service has a dispatcher
+        their map-step launches coalesce into shared device launches."""
+        return self.service._submit(self.step, instance,
+                                    deadline_s=deadline_s)
 
     # ------------------------------------------------- step_override domains --
     def _step_override(self, instance: Any, deadline_s: Optional[float],
@@ -359,8 +675,8 @@ class PopSession:
             faults.append(f"deadline:{rung}")
 
         def _solve(w, **kw):
-            return pop_mod.solve_instance(problem, scfg, exec_run, warm=w,
-                                          entity_ids=eids, **kw)
+            return self.service._solve_instance(problem, scfg, exec_run,
+                                                warm=w, entity_ids=eids, **kw)
 
         try:
             res = _solve(warm)
@@ -443,21 +759,21 @@ class PopSession:
             faults.append(f"deadline:{rung}")
 
         try:
-            fr = pop_mod.solve_full_ex(problem, warm=warm, exec_cfg=exec_run)
+            fr = self.service._solve_full(problem, warm, exec_run)
         except Exception as e:
             if warm is None:
                 raise
             faults.append(f"warm-solve-error:{type(e).__name__}")
             self._warm, self._mode = None, None
             warm = None
-            fr = pop_mod.solve_full_ex(problem, warm=None, exec_cfg=exec_run)
+            fr = self.service._solve_full(problem, None, exec_run)
         if _count_diverged(fr.res) and warm is not None:
             # k=1 has a single lane: quarantine == full cold restart
             faults.append("divergence:1")
             self._note_quarantine(1)
             self._warm, self._mode = None, None
             warm = None
-            fr = pop_mod.solve_full_ex(problem, warm=None, exec_cfg=exec_run)
+            fr = self.service._solve_full(problem, None, exec_run)
         if _count_diverged(fr.res):
             faults.append("cold-divergence:1")
             self._note_quarantine(1)
@@ -501,10 +817,11 @@ class PopSession:
         ever creates O(log) distinct solver compilations per config."""
         if deadline_s is None:
             return self.exec_cfg, None
-        rate = self.service._rates.get(rkey)
+        with self.service._lock:
+            rate = self.service._rates.get(rkey)
+            overhead = self.service._overheads.get(rkey, 0.0)
         if rate is None or rate <= 0.0:
             return self.exec_cfg, None     # no measurement yet: run full
-        overhead = self.service._overheads.get(rkey, 0.0)
         remaining = deadline_s - (time.perf_counter() - t0) - overhead
         kw = self.exec_cfg.solver_dict()
         max_it = int(kw.get("max_iters", 20_000))
@@ -531,18 +848,20 @@ class PopSession:
         for this (domain, ExecConfig, shape) — what _ladder budgets from."""
         if iters <= 0 or solve_time_s <= 0.0:
             return
-        rates = self.service._rates
-        r = solve_time_s / iters
-        old = rates.get(rkey)
-        rates[rkey] = r if old is None else 0.5 * old + 0.5 * r
-        overheads = self.service._overheads
-        ov = max(wall_s - solve_time_s, 0.0)
-        o = overheads.get(rkey)
-        overheads[rkey] = ov if o is None else 0.5 * o + 0.5 * ov
+        with self.service._lock:
+            rates = self.service._rates
+            r = solve_time_s / iters
+            old = rates.get(rkey)
+            rates[rkey] = r if old is None else 0.5 * old + 0.5 * r
+            overheads = self.service._overheads
+            ov = max(wall_s - solve_time_s, 0.0)
+            o = overheads.get(rkey)
+            overheads[rkey] = ov if o is None else 0.5 * o + 0.5 * ov
 
     def _note_quarantine(self, n: int) -> None:
         self.stats["quarantined_lanes"] += n
-        self.service._stats["quarantined_lanes"] += n
+        with self.service._lock:
+            self.service._stats["quarantined_lanes"] += n
 
     def _fallback(self, instance, faults: list, t0: float,
                   problem=None) -> Allocation:
@@ -734,24 +1053,89 @@ class PopService:
     Owns the default configs and the per-tenant sessions (warm state +
     plans); compiled solvers are shared across sessions whose
     :class:`ExecConfig` matches (the configs are hashable and key the jit
-    caches in ``core/backends.py``)."""
+    caches in ``core/backends.py``).
+
+    All shared state (the session table, stats, the deadline ladder's
+    rate maps, the LRU/pager bookkeeping) mutates under one service lock;
+    per-tenant warm state mutates under that tenant's session lock.
+    ``dispatch=`` turns on the cross-tenant micro-batching dispatcher,
+    ``max_resident=`` the host-memory paging of cold tenants — see the
+    module docstring and docs/SERVING.md."""
 
     def __init__(self, solve: Optional[SolveConfig] = None,
-                 exec: Optional[ExecConfig] = None):
+                 exec: Optional[ExecConfig] = None, *,
+                 dispatch: Union[bool, DispatchConfig, None] = None,
+                 max_resident: Optional[int] = None,
+                 rate_cache_size: int = RATE_CACHE_SIZE):
         # None means "not set" (domain defaults win); an explicit config —
         # even one equal to the library default — overrides them
         self._service_solve = solve
         self._service_exec = exec
         self.solve_cfg = solve or SolveConfig()
         self.exec_cfg = exec or ExecConfig()
+        self._lock = threading.RLock()
         self._sessions: Dict[str, PopSession] = {}
+        # tenant -> None, oldest-stepped first: the page-out victim order
+        self._lru: "OrderedDict[str, None]" = OrderedDict()
         self._stats = _zeros()
+        self._stats.update({"paged_out": 0, "paged_in": 0,
+                            "page_restore_failures": 0,
+                            "session_reentries": 0})
         # measured per-iteration solve rates + per-step overheads, keyed
         # (path, domain, ExecConfig, k, n_entities) — the deadline ladder's
-        # budget model, warmed by every fault-free step
-        self._rates: Dict[tuple, float] = {}
-        self._overheads: Dict[tuple, float] = {}
+        # budget model, warmed by every fault-free step; bounded so a
+        # fleet's shape churn cannot grow them without limit
+        self._rates: "_BoundedLRU" = _BoundedLRU(rate_cache_size)
+        self._overheads: "_BoundedLRU" = _BoundedLRU(rate_cache_size)
+        self._pager = paged_mod.PagedSessionStore()
+        self.max_resident = (None if max_resident is None
+                             else max(int(max_resident), 1))
+        if dispatch:
+            cfg = dispatch if isinstance(dispatch, DispatchConfig) else None
+            self.dispatcher: Optional[MicroBatchDispatcher] = \
+                MicroBatchDispatcher(cfg)
+        else:
+            self.dispatcher = None
+        self._executor: \
+            Optional[concurrent.futures.ThreadPoolExecutor] = None
         self.created = time.time()
+
+    # ------------------------------------------------------ solve funnels --
+    def _solve_instance(self, problem, scfg, exec_cfg, *, warm,
+                        entity_ids, **kw) -> "pop_mod.POPResult":
+        """Every session pop-path solve funnels through here: without a
+        dispatcher this IS the legacy call (same bytes, same jit keys);
+        with one, the pre/post stages run on the calling thread and only
+        the map-step launch goes through the dispatcher."""
+        if self.dispatcher is None:
+            return pop_mod.solve_instance(problem, scfg, exec_cfg,
+                                          warm=warm, entity_ids=entity_ids,
+                                          **kw)
+        prep = pop_mod.prepare_instance(problem, scfg, exec_cfg, warm=warm,
+                                        entity_ids=entity_ids, **kw)
+        res, solve_s = self.dispatcher.solve_prepared(
+            prep, problem.K_mv, problem.KT_mv)
+        return pop_mod.finish_prepared(prep, res, solve_s)
+
+    def _solve_full(self, problem, warm, exec_cfg) -> "pop_mod.FullResult":
+        """The k=1 counterpart of :meth:`_solve_instance`."""
+        if self.dispatcher is None:
+            return pop_mod.solve_full_ex(problem, warm=warm,
+                                         exec_cfg=exec_cfg)
+        prep = pop_mod.prepare_full(problem, warm=warm, exec_cfg=exec_cfg)
+        res, solve_s = self.dispatcher.solve_prepared(
+            prep, problem.K_mv, problem.KT_mv)
+        return pop_mod.finish_full(prep, res, solve_s)
+
+    def _submit(self, fn, *args, **kw) -> "concurrent.futures.Future":
+        with self._lock:
+            if self._executor is None:
+                workers = (self.dispatcher.cfg.workers if self.dispatcher
+                           else DispatchConfig.workers)
+                self._executor = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=workers, thread_name_prefix="pop-step")
+            ex = self._executor
+        return ex.submit(fn, *args, **kw)
 
     def session(self, tenant: str, instance: Any = None, *,
                 domain: Optional[str] = None,
@@ -766,55 +1150,206 @@ class PopService:
         service construction, then by ``solve=`` / ``exec=`` here.  An
         existing session is returned as-is (its configs are pinned at
         creation); asking for the same tenant with a DIFFERENT domain is
-        an error — tenants are per-domain state."""
-        sess = self._sessions.get(tenant)
-        if sess is not None:
-            # configs are pinned at creation: explicitly asking for a
-            # DIFFERENT one must not be silently ignored
-            if solve is not None and solve != sess.solve_cfg:
-                raise ValueError(
-                    f"tenant {tenant!r} session is pinned to "
-                    f"{sess.solve_cfg}; end_session() it to re-create with "
-                    f"{solve} (configs are set at session creation)")
-            if exec is not None and exec != sess.exec_cfg:
-                raise ValueError(
-                    f"tenant {tenant!r} session is pinned to "
-                    f"{sess.exec_cfg}; end_session() it to re-create with "
-                    f"{exec} (configs are set at session creation)")
-        if domain is not None:
-            spec = registry_mod.get(domain)
-        elif instance is not None:
-            spec = registry_mod.spec_for(instance)
-            if spec is None:
-                raise ValueError(
-                    f"no registered domain matches instance type "
-                    f"{type(instance).__name__!r}; register a DomainSpec "
-                    "with that instance_types or pass domain=")
-        elif sess is not None:
-            return sess                  # re-entry by tenant name alone
-        else:
-            raise ValueError("session() needs an instance (to infer the "
-                             "domain) or an explicit domain= name")
-        if sess is not None:
-            if sess.spec.name != spec.name:
-                raise ValueError(
-                    f"tenant {tenant!r} already has a {sess.spec.name!r} "
-                    f"session; one tenant cannot switch to {spec.name!r} "
-                    "(sessions are per-domain warm state)")
-            return sess
-        sess = PopSession(
-            self, tenant, spec,
-            solve or self._service_solve or spec.default_solve,
-            exec or self._service_exec or spec.default_exec)
-        self._sessions[tenant] = sess
+        an error — tenants are per-domain state.
+
+        A tenant whose session was paged out to host memory (see
+        ``max_resident=``) is restored transparently here: same warm
+        state, same step counter — callers cannot tell it was ever cold
+        (``stats()["paged_in"]`` can)."""
+        with self._lock:
+            sess = self._sessions.get(tenant)
+            if sess is None and tenant in self._pager:
+                sess = self._page_in(tenant)
+                if sess is not None:
+                    self._stats["session_reentries"] += 1
+            if sess is not None:
+                # configs are pinned at creation: explicitly asking for a
+                # DIFFERENT one must not be silently ignored
+                if solve is not None and solve != sess.solve_cfg:
+                    raise ValueError(
+                        f"tenant {tenant!r} session is pinned to "
+                        f"{sess.solve_cfg}; end_session() it to re-create "
+                        f"with {solve} (configs are set at session creation)")
+                if exec is not None and exec != sess.exec_cfg:
+                    raise ValueError(
+                        f"tenant {tenant!r} session is pinned to "
+                        f"{sess.exec_cfg}; end_session() it to re-create "
+                        f"with {exec} (configs are set at session creation)")
+            if domain is not None:
+                spec = registry_mod.get(domain)
+            elif instance is not None:
+                spec = registry_mod.spec_for(instance)
+                if spec is None:
+                    raise ValueError(
+                        f"no registered domain matches instance type "
+                        f"{type(instance).__name__!r}; register a DomainSpec "
+                        "with that instance_types or pass domain=")
+            elif sess is not None:
+                return sess              # re-entry by tenant name alone
+            else:
+                raise ValueError("session() needs an instance (to infer the "
+                                 "domain) or an explicit domain= name")
+            if sess is not None:
+                if sess.spec.name != spec.name:
+                    raise ValueError(
+                        f"tenant {tenant!r} already has a {sess.spec.name!r} "
+                        f"session; one tenant cannot switch to {spec.name!r} "
+                        "(sessions are per-domain warm state)")
+                return sess
+            sess = PopSession(
+                self, tenant, spec,
+                solve or self._service_solve or spec.default_solve,
+                exec or self._service_exec or spec.default_exec)
+            self._sessions[tenant] = sess
+            self._lru[tenant] = None
+        self._maybe_evict(keep=tenant)
         return sess
 
     def end_session(self, tenant: str) -> None:
-        """Drop a tenant's session (and its warm state / cached plan)."""
-        self._sessions.pop(tenant, None)
+        """Drop a tenant's session — live warm state, cached plan, LRU
+        slot AND any paged-out blob; the tenant is fully forgotten."""
+        with self._lock:
+            self._sessions.pop(tenant, None)
+            self._lru.pop(tenant, None)
+        self._pager.discard(tenant)
 
     def tenants(self) -> tuple:
-        return tuple(sorted(self._sessions))
+        """Every known tenant, resident or paged out."""
+        with self._lock:
+            names = set(self._sessions)
+        return tuple(sorted(names | set(self._pager.tenants())))
+
+    # ----------------------------------------------------- paging (LRU) --
+    def _page_in(self, tenant: str) -> Optional[PopSession]:
+        """Rebuild a resident session from the tenant's paged blob.
+        Called under the service lock.  A corrupt/unreadable blob counts
+        ``page_restore_failures`` and returns None (the caller then
+        creates a fresh cold session)."""
+        try:
+            got = self._pager.take(tenant)
+        except ckpt_mod.CheckpointError:
+            got = None
+        if got is None:
+            self._stats["page_restore_failures"] += 1
+            return None
+        tmeta, arrays = got
+        try:
+            spec = registry_mod.get(tmeta["domain"])
+            sess = PopSession(self, tenant, spec, self._cfg_solve(tmeta),
+                              self._cfg_exec(tmeta))
+        except Exception:
+            # unknown domain / mangled config meta: the blob cannot seed a
+            # session — fall back to fresh creation by the caller
+            self._stats["page_restore_failures"] += 1
+            return None
+        sess.steps = int(tmeta.get("steps", 0))
+        st = tmeta.get("stats")
+        if isinstance(st, dict):
+            sess.stats = {**_zeros(), **st}
+        try:
+            sess._restore_payload(tmeta, arrays)
+        except Exception:
+            # warm state didn't survive; the session itself did (cold)
+            self._stats["page_restore_failures"] += 1
+        self._sessions[tenant] = sess
+        self._lru[tenant] = None
+        self._stats["paged_in"] += 1
+        return sess
+
+    def _reattach(self, sess: PopSession) -> None:
+        """First thing every ``step`` does (under the session lock): make
+        sure this object IS the resident session.  A handle whose tenant
+        was paged out re-registers and reloads its warm state from the
+        blob; a handle that still carries live state just re-registers."""
+        with self._lock:
+            if self._sessions.get(sess.tenant) is sess:
+                return
+            self._sessions[sess.tenant] = sess
+            self._lru[sess.tenant] = None
+            self._lru.move_to_end(sess.tenant)
+        if sess._warm is not None:
+            # the handle still carries its own (newest) state; any blob is
+            # stale — drop it rather than resurrect old iterates later
+            self._pager.discard(sess.tenant)
+            return
+        try:
+            got = self._pager.take(sess.tenant)
+        except ckpt_mod.CheckpointError:
+            got = None
+            with self._lock:
+                self._stats["page_restore_failures"] += 1
+        if got is None:
+            return
+        tmeta, arrays = got
+        try:
+            sess._restore_payload(tmeta, arrays)
+            sess.steps = int(tmeta.get("steps", sess.steps))
+            with self._lock:
+                self._stats["paged_in"] += 1
+        except Exception:
+            with self._lock:
+                self._stats["page_restore_failures"] += 1
+
+    def _after_step(self, sess: PopSession) -> None:
+        with self._lock:
+            if sess.tenant in self._sessions:
+                self._lru[sess.tenant] = None
+                self._lru.move_to_end(sess.tenant)
+        self._maybe_evict(keep=sess.tenant)
+
+    def _maybe_evict(self, keep: Optional[str] = None) -> None:
+        """Page the coldest resident sessions out until at most
+        ``max_resident`` stay live.  One pass over the current LRU order:
+        victims busy in a step (non-blocking try-acquire — lock order
+        forbids waiting on a session lock from service paths) or carrying
+        unserializable warm state are skipped, so the cap is best-effort
+        under pathological loads, exact in steady state."""
+        if self.max_resident is None:
+            return
+        with self._lock:
+            over = len(self._sessions) - self.max_resident
+            if over <= 0:
+                return
+            candidates = [t for t in self._lru
+                          if t != keep and t in self._sessions]
+        for tenant in candidates:
+            if over <= 0:
+                return
+            with self._lock:
+                victim = self._sessions.get(tenant)
+            if victim is not None and self._page_out(victim):
+                over -= 1
+
+    def _page_out(self, sess: PopSession) -> bool:
+        """Move one resident session's state to the host-memory pager.
+        Returns False without side effects when the session is mid-step,
+        its warm state cannot serialize (step_override domains, replicated
+        plans — evicting those would DESTROY state), or the codec balks."""
+        if not sess._lock.acquire(blocking=False):
+            return False
+        try:
+            meta, arrays = sess._checkpoint_payload("t0")
+            if meta.get("mode") == "skipped":
+                return False
+            meta = {**meta, "stats": dict(sess.stats,
+                                          engines=dict(sess.stats["engines"]))}
+            try:
+                json.dumps(meta)
+                self._pager.put(sess.tenant, meta, arrays)
+            except (ckpt_mod.CheckpointError, TypeError, ValueError):
+                return False
+            # strip the object so its device arrays free even while the
+            # caller keeps a handle; a later step on the handle reloads
+            # from the blob (see _reattach)
+            sess._warm, sess._mode = None, None
+            sess.last = None
+            with self._lock:
+                self._sessions.pop(sess.tenant, None)
+                self._lru.pop(sess.tenant, None)
+                self._stats["paged_out"] += 1
+        finally:
+            sess._lock.release()
+        return True
 
     # --------------------------------------------------- checkpoint/restore --
     def checkpoint(self) -> bytes:
@@ -826,20 +1361,48 @@ class PopService:
         iterates + entity ids (pop path) or the flat iterates + id key
         (full path).  Warm state the format cannot express (replicated
         plans, step_override domains' opaque state) is recorded as
-        ``skipped`` and restores cold.  Round-trip with
+        ``skipped`` and restores cold.  Paged-out tenants are folded in
+        from their blobs WITHOUT touching device memory.  Safe mid-traffic
+        (each session snapshots under its own lock; the service lock is
+        never held while waiting on one).  Round-trip with
         :meth:`restore`."""
+        with self._lock:
+            resident = dict(self._sessions)
+        paged: Dict[str, tuple] = {}
+        for tenant in self._pager.tenants():
+            if tenant in resident:
+                continue
+            blob = self._pager.peek_packed(tenant)
+            if blob is None:
+                continue
+            try:
+                paged[tenant] = ckpt_mod.unpack_state(blob)
+            except ckpt_mod.CheckpointError:
+                with self._lock:
+                    self._stats["checkpoint_failures"] += 1
         tenants_meta: Dict[str, dict] = {}
         arrays: Dict[str, np.ndarray] = {}
-        for i, tenant in enumerate(sorted(self._sessions)):
-            sess = self._sessions[tenant]
-            meta, arrs = sess._checkpoint_payload(f"t{i}")
-            try:
-                json.dumps(meta)
-            except (TypeError, ValueError):
-                meta = {"prefix": f"t{i}", "domain": sess.spec.name,
-                        "mode": "skipped",
-                        "reason": "non-JSON-serializable session config"}
-                arrs = {}
+        for i, tenant in enumerate(sorted(set(resident) | set(paged))):
+            prefix = f"t{i}"
+            if tenant in resident:
+                sess = resident[tenant]
+                with sess._lock:
+                    meta, arrs = sess._checkpoint_payload(prefix)
+                try:
+                    json.dumps(meta)
+                except (TypeError, ValueError):
+                    meta = {"prefix": prefix, "domain": sess.spec.name,
+                            "mode": "skipped",
+                            "reason": "non-JSON-serializable session config"}
+                    arrs = {}
+            else:
+                # a paged blob is itself a single-tenant checkpoint under
+                # the "t0" prefix: remap keys onto this blob's slot
+                tmeta, tarrs = paged[tenant]
+                meta = {k: v for k, v in tmeta.items() if k != "stats"}
+                meta["prefix"] = prefix
+                arrs = {f"{prefix}/{k.split('/', 1)[1]}": v
+                        for k, v in tarrs.items()}
             tenants_meta[tenant] = meta
             arrays.update(arrs)
         return ckpt_mod.pack_state({"tenants": tenants_meta}, arrays)
@@ -862,7 +1425,8 @@ class PopService:
                 raise ckpt_mod.CheckpointError("manifest meta lacks a "
                                                "tenants table")
         except (ckpt_mod.CheckpointError, KeyError, TypeError) as e:
-            self._stats["checkpoint_failures"] += 1
+            with self._lock:
+                self._stats["checkpoint_failures"] += 1
             if strict:
                 raise
             report["errors"]["<checkpoint>"] = f"{type(e).__name__}: {e}"
@@ -879,16 +1443,19 @@ class PopService:
                         "config digest mismatch (stale checkpoint or "
                         "changed config schema)")
                 sess.steps = int(tmeta.get("steps", 0))
-                sess._restore_payload(tmeta, arrays)
+                with sess._lock:
+                    sess._restore_payload(tmeta, arrays)
             except Exception as e:
-                self._stats["checkpoint_failures"] += 1
+                with self._lock:
+                    self._stats["checkpoint_failures"] += 1
                 if strict:
                     raise
                 report["errors"][tenant] = f"{type(e).__name__}: {e}"
                 report["cold"].append(tenant)
                 continue
-            if self._sessions[tenant]._warm is not None:
-                self._stats["checkpoint_restores"] += 1
+            if sess._warm is not None:
+                with self._lock:
+                    self._stats["checkpoint_restores"] += 1
                 report["restored"].append(tenant)
             else:
                 report["cold"].append(tenant)
@@ -910,12 +1477,47 @@ class PopService:
         aggregate solve time, mean warm fraction, per-engine step counts
         (``engines``: the resolved engine that actually ran each step),
         and the fault-tolerance counters (degraded/recovered/fallback
-        steps, quarantined lanes, checkpoint restore outcomes)."""
-        s = dict(self._stats)
-        s["engines"] = dict(s["engines"])
+        steps, quarantined lanes, checkpoint restore outcomes).
+
+        Fleet-scale additions: ``resident_sessions`` / ``paged_tenants``
+        / ``paged_bytes`` (the paging tier), ``paged_out`` / ``paged_in``
+        / ``page_restore_failures`` / ``session_reentries`` (its
+        traffic), ``rate_evictions`` / ``rate_keys`` (the bounded ladder
+        caches), and — when the service has a dispatcher — a
+        ``dispatch`` sub-dict (:meth:`MicroBatchDispatcher.stats`)."""
+        with self._lock:
+            s = dict(self._stats)
+            s["engines"] = dict(s["engines"])
+            s["rate_evictions"] = (self._rates.evictions
+                                   + self._overheads.evictions)
+            s["rate_keys"] = len(self._rates) + len(self._overheads)
+            resident = len(self._sessions)
         steps = max(s["steps"], 1)
         s["plan_hit_rate"] = s["plan_hits"] / steps
         s["warm_fraction_mean"] = (s["warm_fraction_sum"] / s["warm_steps"]
                                    if s["warm_steps"] else None)
-        s["n_sessions"] = len(self._sessions)
+        s["resident_sessions"] = resident
+        s["paged_tenants"] = len(self._pager)
+        s["paged_bytes"] = self._pager.nbytes()
+        s["n_sessions"] = resident + s["paged_tenants"]
+        if self.dispatcher is not None:
+            s["dispatch"] = self.dispatcher.stats()
         return s
+
+    def close(self) -> None:
+        """Shut down the dispatcher thread and the ``step_async`` pool
+        (idempotent).  Sessions, paged blobs and stats stay readable;
+        later synchronous steps fall back to inline launches."""
+        with self._lock:
+            ex, self._executor = self._executor, None
+        if ex is not None:
+            ex.shutdown(wait=True)
+        if self.dispatcher is not None:
+            self.dispatcher.close()
+
+    def __enter__(self) -> "PopService":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

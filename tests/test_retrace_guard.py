@@ -116,3 +116,63 @@ class TestSteadyStateSession:
         # the guard really covered the hot path: every tick went through
         # a wrapped MAP_BACKENDS entry at least once
         assert stats.hot_backend_calls >= 8
+
+
+class TestSteadyStateDispatcher:
+    """The serving dispatcher's steady state: a coalesced multi-tenant
+    step must compile NOTHING and perform zero host syncs inside the map
+    backends.  Power-of-two lane padding is what makes this assertable —
+    every coalesced launch of the 4-tenant group lands on the same padded
+    lane count, so the warm-up sweeps compile every shape the steady
+    rounds will see."""
+
+    def test_coalesced_multi_tenant_step_is_clean(self):
+        import time
+
+        from repro.problems.traffic_engineering import (TrafficProblem,
+                                                        k_shortest_paths,
+                                                        make_demands,
+                                                        make_topology)
+
+        def traffic(seed, scale=1.0):
+            topo = make_topology(20, 40, seed=seed)
+            pairs, dem = make_demands(topo, 24, seed=seed)
+            pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10,
+                                  seed=seed)
+            return TrafficProblem(topo, pairs, dem * scale, pe)
+
+        svc = PopService(dispatch=True)
+        seeds = range(4)
+        sessions = {s: svc.session(f"t{s}", traffic(s),
+                                   solve=SolveConfig(k=2),
+                                   exec=ExecConfig(solver_kw=KW))
+                    for s in seeds}
+        try:
+            def sweep(scale):
+                # the hold gate makes the group deterministic: all four
+                # tenants' tickets queue, then dispatch as ONE launch
+                with svc.dispatcher.hold():
+                    futs = [sessions[s].step_async(traffic(s, scale))
+                            for s in seeds]
+                    time.sleep(0.5)
+                return [f.result(timeout=300) for f in futs]
+
+            # warm-up outside the guard: the cold coalesced launch, then
+            # the warm-started (plan hit) coalesced launch — between them
+            # every solver variant the steady rounds exercise
+            sweep(1.0)
+            sweep(1.02)
+
+            with steady_state_guard(max_retraces=0) as stats:
+                for rnd in range(3):
+                    allocs = sweep(1.04 + 0.02 * rnd)
+                    assert all(a.status == "ok" for a in allocs)
+                    assert all(a.plan_cache == "hit" for a in allocs)
+
+            assert stats.compiles == 0, stats.compiled_names
+            assert stats.hot_backend_calls >= 3
+            d = svc.dispatcher.stats()
+            assert d["coalesced_launches"] >= 5
+            assert d["batching_ratio"] > 1.0
+        finally:
+            svc.close()

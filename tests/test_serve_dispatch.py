@@ -1,0 +1,353 @@
+"""Fleet-scale serving core: the cross-tenant micro-batching dispatcher,
+the host-memory paging tier, and the shared-state concurrency fixes.
+
+The acceptance claims pinned here:
+
+- concurrent dispatcher steps are BIT-IDENTICAL per tenant to the
+  synchronous single-tenant path (lane independence in ``solve_stacked``
+  + the replica-lane padding precedent make sharing invisible);
+- no stats are lost under concurrent steps (the service lock sweep);
+- a mid-traffic ``checkpoint()`` restores cleanly;
+- 1k create/end session cycles hold memory flat (no leaked sessions,
+  LRU slots or paged blobs);
+- evicted tenants restore transparently warm on ``session()`` re-entry;
+- the deadline ladder's rate caches are bounded LRUs.
+"""
+
+import gc
+import threading
+import time
+import weakref
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExecConfig, SolveConfig
+from repro.core import backends as backends_mod
+from repro.core import pdhg
+from repro.problems.traffic_engineering import (TrafficProblem,
+                                                k_shortest_paths,
+                                                make_demands, make_topology)
+from repro.service import (DispatchConfig, MicroBatchDispatcher, PopService,
+                           _BoundedLRU)
+
+KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+SOLVE = SolveConfig(k=3)
+EXEC = ExecConfig(solver_kw=KW)
+
+
+def _traffic(n=24, seed=0, scale=1.0):
+    topo = make_topology(20, 40, seed=seed)
+    pairs, dem = make_demands(topo, n, seed=seed)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=seed)
+    return TrafficProblem(topo, pairs, dem * scale, pe)
+
+
+def _sync_reference(seeds, scales):
+    """Per-tenant allocations from isolated synchronous services."""
+    ref = {}
+    for seed in seeds:
+        svc = PopService()
+        sess = svc.session(f"t{seed}", _traffic(seed=seed),
+                           solve=SOLVE, exec=EXEC)
+        ref[seed] = [np.asarray(sess.step(_traffic(seed=seed,
+                                                   scale=sc)).alloc)
+                     for sc in scales]
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# the tentpole claim: coalesced concurrent solves are bit-identical
+# ---------------------------------------------------------------------------
+
+class TestDispatchBitIdentity:
+    def test_concurrent_steps_match_sync_bit_for_bit(self):
+        seeds, scales = range(4), [1.0, 1.03, 1.07]
+        ref = _sync_reference(seeds, scales)
+        svc = PopService(dispatch=True)
+        sessions = {s: svc.session(f"t{s}", _traffic(seed=s),
+                                   solve=SOLVE, exec=EXEC) for s in seeds}
+        try:
+            for rnd, sc in enumerate(scales):
+                futs = {s: sessions[s].step_async(
+                            _traffic(seed=s, scale=sc)) for s in seeds}
+                for s, f in futs.items():
+                    a = f.result(timeout=300)
+                    assert a.status == "ok"
+                    assert np.array_equal(np.asarray(a.alloc), ref[s][rnd]), \
+                        f"tenant {s} round {rnd} diverged from sync path"
+            d = svc.dispatcher.stats()
+            # warm chains stayed per-tenant: round 2+ are plan hits
+            assert all(sessions[s].last.plan_cache == "hit" for s in seeds)
+            assert d["requests"] == len(list(seeds)) * len(scales)
+        finally:
+            svc.close()
+
+    def test_held_dispatcher_coalesces_deterministically(self):
+        # queue 4 compatible tenants while the dispatcher gate is held:
+        # release must produce ONE coalesced launch serving all 4
+        seeds = range(4)
+        svc = PopService(dispatch=True)
+        sessions = {s: svc.session(f"t{s}", _traffic(seed=s),
+                                   solve=SOLVE, exec=EXEC) for s in seeds}
+        try:
+            for s in seeds:                      # warm + compile, solo
+                sessions[s].step(_traffic(seed=s))
+            before = svc.dispatcher.stats()
+            with svc.dispatcher.hold():
+                futs = [sessions[s].step_async(_traffic(seed=s, scale=1.05))
+                        for s in seeds]
+                time.sleep(0.5)                  # let all 4 enqueue
+            for f in futs:
+                assert f.result(timeout=300).status == "ok"
+            after = svc.dispatcher.stats()
+            assert after["coalesced_requests"] - before["coalesced_requests"] == 4
+            assert after["launches"] - before["launches"] == 1
+            assert after["max_group"] >= 4
+            assert after["batching_ratio"] > 1.0
+        finally:
+            svc.close()
+
+    def test_no_stats_lost_under_concurrency(self):
+        seeds, rounds = range(6), 3
+        svc = PopService(dispatch=True)
+        sessions = {s: svc.session(f"t{s}", _traffic(seed=s),
+                                   solve=SOLVE, exec=EXEC) for s in seeds}
+        try:
+            futs = []
+            for rnd in range(rounds):
+                futs += [sessions[s].step_async(
+                    _traffic(seed=s, scale=1.0 + 0.02 * rnd)) for s in seeds]
+            allocs = [f.result(timeout=300) for f in futs]
+            st = svc.stats()
+            assert st["steps"] == len(list(seeds)) * rounds == len(allocs)
+            assert (st["plan_hits"] + st["plan_repairs"] + st["plan_misses"]
+                    + st["full_solves"] + st["fallback_steps"]) == st["steps"]
+            per_sess = sum(sessions[s].stats["steps"] for s in seeds)
+            assert per_sess == st["steps"]
+        finally:
+            svc.close()
+
+    def test_checkpoint_mid_traffic_restores_cleanly(self):
+        seeds = range(4)
+        svc = PopService(dispatch=True)
+        sessions = {s: svc.session(f"t{s}", _traffic(seed=s),
+                                   solve=SOLVE, exec=EXEC) for s in seeds}
+        try:
+            for s in seeds:
+                sessions[s].step(_traffic(seed=s))
+            stop = threading.Event()
+            blobs = []
+
+            def snapshotter():
+                while not stop.is_set():
+                    blobs.append(svc.checkpoint())
+
+            t = threading.Thread(target=snapshotter)
+            t.start()
+            try:
+                futs = [sessions[s].step_async(_traffic(seed=s, scale=1.05))
+                        for s in seeds] + \
+                       [sessions[s].step_async(_traffic(seed=s, scale=1.1))
+                        for s in seeds]
+                for f in futs:
+                    assert f.result(timeout=300).status == "ok"
+            finally:
+                stop.set()
+                t.join(timeout=60)
+            assert blobs
+            # every snapshot taken mid-traffic restores without errors
+            restored = PopService()
+            rep = restored.restore(blobs[-1])
+            assert not rep["errors"]
+            assert sorted(rep["restored"]) == [f"t{s}" for s in seeds]
+            a = restored.session("t0", domain="traffic").step(
+                _traffic(seed=0, scale=1.06))
+            assert a.plan_cache == "hit" and a.status == "ok"
+        finally:
+            svc.close()
+
+
+# ---------------------------------------------------------------------------
+# the paging tier
+# ---------------------------------------------------------------------------
+
+class TestPaging:
+    def test_eviction_and_transparent_warm_reentry(self):
+        svc = PopService(max_resident=2)
+        for s in range(5):
+            svc.session(f"t{s}", _traffic(seed=s), solve=SOLVE,
+                        exec=EXEC).step(_traffic(seed=s))
+        st = svc.stats()
+        assert st["resident_sessions"] <= 2
+        assert st["paged_tenants"] == 3 and st["paged_bytes"] > 0
+        assert st["n_sessions"] == 5
+        # re-entry by name restores the evicted tenant's warm state: the
+        # next step is a verbatim plan hit with a fully-warm start
+        a = svc.session("t0", domain="traffic").step(
+            _traffic(seed=0, scale=1.02))
+        assert a.plan_cache == "hit" and a.warm_fraction == 1.0
+        st = svc.stats()
+        assert st["paged_in"] >= 1 and st["session_reentries"] >= 1
+        assert st["page_restore_failures"] == 0
+
+    def test_stale_handle_step_reattaches_warm(self):
+        svc = PopService(max_resident=1)
+        handles = {}
+        for s in range(3):
+            handles[s] = svc.session(f"t{s}", _traffic(seed=s),
+                                     solve=SOLVE, exec=EXEC)
+            handles[s].step(_traffic(seed=s))
+        # t0 and t1 are paged out and their handle objects stripped; a
+        # step on the old handle must reload the blob, not start cold
+        a = handles[0].step(_traffic(seed=0, scale=1.03))
+        assert a.plan_cache == "hit" and a.warm_fraction == 1.0
+        assert svc.stats()["n_sessions"] == 3
+
+    def test_end_session_clears_both_tiers_memory_flat(self):
+        svc = PopService(max_resident=2)
+        # a couple of REAL stepped sessions so blobs exist, then churn
+        for s in range(4):
+            svc.session(f"warm{s}", _traffic(seed=s), solve=SOLVE,
+                        exec=EXEC).step(_traffic(seed=s))
+        refs = []
+        for i in range(1000):
+            sess = svc.session(f"churn{i}", domain="traffic",
+                               solve=SOLVE, exec=EXEC)
+            refs.append(weakref.ref(sess))
+            del sess
+            svc.end_session(f"churn{i}")
+        for s in range(4):
+            svc.end_session(f"warm{s}")
+        gc.collect()
+        assert not svc._sessions and not svc._lru
+        assert len(svc._pager) == 0 and svc._pager.nbytes() == 0
+        assert svc.stats()["n_sessions"] == 0
+        alive = sum(r() is not None for r in refs)
+        assert alive == 0, f"{alive} ended sessions still referenced"
+
+    def test_corrupt_blob_degrades_to_cold_session(self):
+        svc = PopService(max_resident=1)
+        for s in range(2):
+            svc.session(f"t{s}", _traffic(seed=s), solve=SOLVE,
+                        exec=EXEC).step(_traffic(seed=s))
+        assert "t0" in svc._pager
+        blob = svc._pager.peek_packed("t0")
+        svc._pager._blobs["t0"] = blob[:-8] + b"\x00" * 8    # corrupt it
+        sess = svc.session("t0", domain="traffic", solve=SOLVE, exec=EXEC)
+        a = sess.step(_traffic(seed=0, scale=1.01))
+        assert a.status == "ok" and a.plan_cache == "miss"   # cold restart
+        assert svc.stats()["page_restore_failures"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# bounded rate caches
+# ---------------------------------------------------------------------------
+
+class TestBoundedRateCaches:
+    def test_bounded_lru_unit(self):
+        lru = _BoundedLRU(3)
+        for i in range(5):
+            lru[i] = i * 10
+        assert len(lru) == 3 and lru.evictions == 2
+        assert list(lru) == [2, 3, 4]
+        assert lru.get(2) == 20                  # refreshes recency
+        lru[5] = 50
+        assert list(lru) == [4, 2, 5] and lru.evictions == 3
+        assert lru.get(3) is None
+
+    def test_service_rate_caches_bounded_and_reported(self):
+        svc = PopService(rate_cache_size=2)
+        for s in range(4):
+            sess = svc.session(f"t{s}", _traffic(n=20 + s, seed=s),
+                               solve=SOLVE, exec=EXEC)
+            sess.step(_traffic(n=20 + s, seed=s))
+        assert len(svc._rates) <= 2 and len(svc._overheads) <= 2
+        st = svc.stats()
+        assert st["rate_evictions"] >= 4
+        assert st["rate_keys"] <= 4
+
+
+# ---------------------------------------------------------------------------
+# the coalescing substrate (unit level)
+# ---------------------------------------------------------------------------
+
+class TestCoalesceSubstrate:
+    def test_concat_split_roundtrip(self):
+        import jax
+
+        from repro.core import pop as pop_mod
+        # same layout (the coalesce-key precondition), different content
+        probs = [_traffic(n=24, seed=s) for s in range(3)]
+        stacks = [pop_mod.build(p, pop_mod.plan(p, 3, strategy="stratified"))
+                  for p in probs]
+        merged = pdhg.concat_stacks(stacks)
+        assert backends_mod.batch_size(merged) == sum(
+            backends_mod.batch_size(s) for s in stacks)
+        sizes = [backends_mod.batch_size(s) for s in stacks]
+        parts = backends_mod.split_result(merged, sizes)
+        for part, stack in zip(parts, stacks):
+            # the NON-structured payload round-trips bit-for-bit; the
+            # structured half is padded to the group-max ELL widths, so
+            # only its dense realisation is comparable
+            flat_a = jax.tree.leaves(part._replace(structured=None))
+            flat_b = jax.tree.leaves(stack._replace(structured=None))
+            assert all(np.array_equal(x, y)
+                       for x, y in zip(flat_a, flat_b))
+
+    def test_concat_pads_mismatched_ell_widths(self):
+        import jax
+        # seeds 0 and 2: identical bare layouts (the coalesce-key match),
+        # different max-row ELL widths (topology sparsity) — the case
+        # concat_stacks must pad to the group maximum
+        ops = []
+        for seed in (0, 2):
+            p = _traffic(n=24, seed=seed)
+            ops.append(jax.tree.map(lambda a: jnp.asarray(a)[None],
+                                    p.build_full()))
+        a_s, b_s = ops[0].structured, ops[1].structured
+        assert a_s is not None and b_s is not None
+        assert any(x is not None and y is not None and x.shape != y.shape
+                   for x, y in zip(a_s, b_s)), "fixture lost its mismatch"
+        merged = pdhg.concat_stacks(ops)
+        assert backends_mod.batch_size(merged) == 2
+        for v, x, y in zip(merged.structured, a_s, b_s):
+            if v is None:
+                continue
+            for d in range(1, v.ndim):
+                assert v.shape[d] == max(x.shape[d], y.shape[d])
+
+    def test_coalesce_key_none_for_streaming_engine(self):
+        prob = _traffic()
+        import jax
+        op = jax.tree.map(lambda a: jnp.asarray(a)[None], prob.build_full())
+        kw = (("max_iters", 100),)
+        base = backends_mod.coalesce_key(
+            op, prob.K_mv, prob.KT_mv, "vmap",
+            pdhg.matvec_engine(prob.K_mv, prob.KT_mv), dict(kw), {})
+        assert base is not None
+        streaming = pdhg.StepEngine("fused_structured_full",
+                                    pdhg.dense_K_mv, pdhg.dense_KT_mv,
+                                    pdhg.dense_K_mv, pdhg.dense_KT_mv)
+        assert backends_mod.coalesce_key(
+            op, prob.K_mv, prob.KT_mv, "vmap", streaming,
+            dict(kw), {}) is None    # single-lane streaming: never share
+
+    def test_coalesce_key_equal_for_compatible_tenants(self):
+        import jax
+        keys = []
+        for seed in range(2):
+            p = _traffic(seed=seed)
+            op = jax.tree.map(lambda a: jnp.asarray(a)[None], p.build_full())
+            keys.append(backends_mod.coalesce_key(
+                op, p.K_mv, p.KT_mv, "vmap",
+                pdhg.matvec_engine(p.K_mv, p.KT_mv),
+                dict(max_iters=100), {}))
+        assert keys[0] is not None and keys[0] == keys[1]
+
+    def test_pow2_padding(self):
+        assert backends_mod.next_pow2(1) == 1
+        assert backends_mod.next_pow2(3) == 4
+        assert backends_mod.next_pow2(4) == 4
+        assert backends_mod.next_pow2(9) == 16
