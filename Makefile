@@ -27,6 +27,12 @@
 #                        bit-for-bit pins, example smoke runs
 #   make api-snapshot    regenerate docs/api_surface.txt after an
 #                        INTENTIONAL surface change (commit the diff)
+#   make tune-smoke      seconds-scale SLO-tuner profile build (one
+#                        domain, scaled probes) -> /tmp; proves the
+#                        scripts/tune.py pipeline without committing
+#   make test-tuning     ONLY the SLO auto-tuner suite: artifact seal,
+#                        fixture-pinned planner picks, online retune
+#                        under churn, service counters (docs/TUNING.md)
 #   make lint-pop        popcheck static-analysis suite (host-sync,
 #                        retrace, Pallas, deprecated-door, cache-key
 #                        lints — docs/LINTS.md); exit 1 on findings
@@ -37,7 +43,7 @@
 PY = PYTHONPATH=src python
 
 .PHONY: test check-imports test-conformance test-api test-faults \
-        api-snapshot lint-pop lint-pop-baseline \
+        test-tuning tune-smoke api-snapshot lint-pop lint-pop-baseline \
         bench-backends bench-smoke bench-snapshot bench-check bench-churn
 
 check-imports:
@@ -64,6 +70,13 @@ test-conformance:
 
 test-faults:
 	$(PY) -m pytest -q tests/test_faults.py tests/test_session_checkpoint.py
+
+test-tuning:
+	$(PY) -m pytest -q tests/test_tuning.py
+
+tune-smoke:
+	$(PY) scripts/tune.py --fast --domains gavel --no-launch \
+	    --no-backends --emit /tmp/pop_tune_smoke.json
 
 bench-backends:
 	$(PY) -m benchmarks.bench_pop_scaling --backend vmap --backend chunked_vmap --backend shard_map

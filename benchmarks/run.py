@@ -66,7 +66,8 @@ def main() -> None:
                    bench_load_balancing, bench_moe_placement,
                    bench_online_resolve, bench_pop_scaling,
                    bench_replication, bench_serve_scale, bench_session,
-                   bench_skewed_splits, bench_traffic_engineering)
+                   bench_skewed_splits, bench_traffic_engineering,
+                   bench_tuning)
 
     suite = {
         # paper Fig. 3
@@ -101,6 +102,9 @@ def main() -> None:
         # fleet scale: 10k tenants (1k fast) through the micro-batched
         # dispatcher — batching ratio, paged-cache hit rate, p50/p99
         "serve_scale": lambda: bench_serve_scale.run(fast=args.fast),
+        # SLO auto-tuner: measured-curve config picks vs the static
+        # default — steps/sec + realized quality at a fixed 2% SLO
+        "tuning": lambda: bench_tuning.run(fast=args.fast),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""tune: measure quality/latency curves and emit a TuningProfile artifact.
+
+    python scripts/tune.py                      # full sweep, all domains,
+                                                # writes TUNING_profile.json
+    python scripts/tune.py --fast               # scaled-down probes (CI)
+    python scripts/tune.py --domains gavel,traffic
+    python scripts/tune.py --emit /tmp/prof.json --seed 3
+    python scripts/tune.py --no-launch --no-backends   # curves only
+
+The emitted artifact is versioned and digest-sealed; consumers must gate
+every read with ``check_profile`` (the ``profile-staleness`` lint
+enforces this).  ``PopService(profile=...)`` uses it to plan sessions
+against an :class:`~repro.tuning.SLOTarget`, install measured
+``backend="auto"`` thresholds, and size dispatcher defaults.  Format +
+planner rules: docs/TUNING.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.tuning import build_profile, check_profile, save_profile  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--domains", default="gavel,traffic,moe_placement",
+                    help="comma-separated domain names to profile")
+    ap.add_argument("--fast", action="store_true",
+                    help="scaled-down probes (smaller n, fewer iters)")
+    ap.add_argument("--emit", default=str(REPO_ROOT / "TUNING_profile.json"),
+                    help="output path (default: TUNING_profile.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-launch", action="store_true",
+                    help="skip the dispatcher launch-cost measurement")
+    ap.add_argument("--no-backends", action="store_true",
+                    help="skip the vmap-vs-chunked threshold measurement")
+    args = ap.parse_args(argv)
+
+    domains = tuple(d.strip() for d in args.domains.split(",") if d.strip())
+    profile = build_profile(
+        domains=domains, fast=args.fast, seed=args.seed,
+        measure_launch=not args.no_launch,
+        measure_backends=not args.no_backends,
+        log=lambda msg: print(f"[tune] {msg}", flush=True))
+    out = Path(args.emit)
+    save_profile(profile, out)
+    check_profile(profile)   # self-check the seal we just wrote
+    print(f"[tune] wrote {out} ({profile.platform}, "
+          f"{len(profile.domains)} domain(s), {profile.digest[:18]}...)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

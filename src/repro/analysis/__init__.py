@@ -14,6 +14,8 @@ needs.  This package machine-checks them:
   no-scatter rules.
 * :mod:`repro.analysis.contracts` — deprecated-door, dtype-promotion,
   registry-contract and config-hashability rules.
+* :mod:`repro.analysis.profiles` — profile-staleness rule (TuningProfile
+  reads must go through ``check_profile``).
 * :mod:`repro.analysis.surface` — public-API drift vs
   ``docs/api_surface.txt``.
 * :mod:`repro.analysis.runtime` — runtime sanitizers: a retrace-counter
@@ -59,6 +61,7 @@ from . import hotpath as _hotpath      # noqa: F401,E402
 from . import retrace as _retrace      # noqa: F401,E402
 from . import pallas as _pallas        # noqa: F401,E402
 from . import contracts as _contracts  # noqa: F401,E402
+from . import profiles as _profiles    # noqa: F401,E402
 from . import surface as _surface      # noqa: F401,E402
 
 __all__ = [

@@ -83,6 +83,37 @@ AUTO_VMAP_MAX_K = 64
 # ... or above this many floats of stacked problem data (~256 MB fp32)
 AUTO_VMAP_MAX_ELEMS = 64_000_000
 
+# per-platform MEASURED overrides of the auto-selection constants above,
+# installed from a TuningProfile (``PopService(profile=...)`` /
+# install_tuned_thresholds); empty = the hand-set constants decide.
+# Process-wide by design — like the jit caches these thresholds describe
+# the hardware, not one service instance.
+_TUNED_THRESHOLDS: Dict[str, dict] = {}
+
+
+def install_tuned_thresholds(per_platform: Optional[dict]) -> None:
+    """Install measured ``backend="auto"`` thresholds keyed by JAX
+    platform name (``{"cpu": {"vmap_max_k": ..., "vmap_max_elems": ...}}``
+    — the ``backend_thresholds`` table of a validated
+    :class:`repro.tuning.TuningProfile`).  ``None``/empty clears back to
+    the constants."""
+    _TUNED_THRESHOLDS.clear()
+    for platform, t in (per_platform or {}).items():
+        if isinstance(t, dict):
+            _TUNED_THRESHOLDS[str(platform)] = dict(t)
+
+
+def _auto_thresholds() -> Tuple[int, int]:
+    """(vmap_max_k, vmap_max_elems) for the current platform: the
+    installed measured values when a profile provided them, else the
+    constants."""
+    t = _TUNED_THRESHOLDS.get(jax.default_backend())
+    if not t:
+        return AUTO_VMAP_MAX_K, AUTO_VMAP_MAX_ELEMS
+    return (int(t.get("vmap_max_k", AUTO_VMAP_MAX_K)),
+            int(t.get("vmap_max_elems", AUTO_VMAP_MAX_ELEMS)))
+
+
 EngineSpec = Union[str, StepEngine]
 
 
@@ -317,9 +348,10 @@ def solve_shard_map(batch, K_mv, KT_mv, solver_kw,
     n_dev = mesh.shape[axis]
     if chunk is None:
         per_dev = -(-batch_size(batch) // n_dev)
-        heavy = (per_dev > AUTO_VMAP_MAX_K
+        max_k, max_elems = _auto_thresholds()
+        heavy = (per_dev > max_k
                  or per_dev * max(_n_elems_per_sub(batch[0]), 1)
-                 > AUTO_VMAP_MAX_ELEMS)
+                 > max_elems)
         chunk = DEFAULT_CHUNK if heavy else 0
     padded, k = pad_to_multiple(batch, n_dev * chunk if chunk else n_dev)
 
@@ -360,13 +392,17 @@ def select_backend(k: int, n_elems_per_sub: int = 0,
     (each device solves its own lanes, zero communication).  Single device
     -> ``vmap`` until the stacked batch gets big (many lanes or a large
     stacked footprint), then ``chunked_vmap`` to bound peak memory.
+    The crossover thresholds are the hand-set constants unless a
+    :class:`repro.tuning.TuningProfile` installed measured per-platform
+    values (:func:`install_tuned_thresholds`).
     """
     n_dev = compat.device_count() if n_dev is None else n_dev
     if n_dev > 1 and k >= n_dev:
         # memory-safe at any k: solve_shard_map self-chunks each shard when
         # the per-device share exceeds the single-device vmap ceiling
         return "shard_map"
-    if k > AUTO_VMAP_MAX_K or k * max(n_elems_per_sub, 1) > AUTO_VMAP_MAX_ELEMS:
+    max_k, max_elems = _auto_thresholds()
+    if k > max_k or k * max(n_elems_per_sub, 1) > max_elems:
         return "chunked_vmap"
     return "vmap"
 

@@ -28,7 +28,7 @@ import dataclasses
 import threading
 from typing import Any, Optional, Tuple, Union
 
-__all__ = ["SolveConfig", "ExecConfig"]
+__all__ = ["SolveConfig", "ExecConfig", "validate_cache_key"]
 
 
 def _check_cache_key(cfg) -> None:
@@ -63,6 +63,10 @@ def _check_cache_key(cfg) -> None:
 
 
 _CHECKING = threading.local()
+
+# public alias: config-like frozen dataclasses OUTSIDE this module (e.g.
+# repro.tuning.SLOTarget) get the same construction-time hash/eq gate
+validate_cache_key = _check_cache_key
 
 
 def _freeze_items(value: Any, field: str) -> Tuple:

@@ -88,6 +88,10 @@ class DomainSpec:
     entity_ids: Optional[Callable[[Any], Optional[np.ndarray]]] = None
     round: Optional[Callable] = None          # (inst, alloc) -> allocation
     evaluate: Optional[Callable] = None       # (inst, alloc) -> metrics
+    # the domain quality SCALAR (metrics dict -> float, higher = better):
+    # what the SLO auto-tuner (repro.tuning) measures quality loss on.
+    # Defaults to metrics["objective"] when absent
+    quality: Optional[Callable[[dict], float]] = None
     # solver-free fallback allocation, (inst) -> alloc: the last rung of
     # the serving degradation ladder (docs/ROBUSTNESS.md) — what a session
     # returns when the solve diverges/misses its deadline and there is no
@@ -129,6 +133,19 @@ class DomainSpec:
         if problem is not None:
             return problem.evaluate(alloc)
         return {}
+
+    def quality_of(self, metrics: Optional[dict]) -> Optional[float]:
+        """The scalar the tuner tracks, from a step's metrics dict (None
+        when the domain has no usable quality signal)."""
+        if not isinstance(metrics, dict):
+            return None
+        if self.quality is not None:
+            try:
+                return float(self.quality(metrics))
+            except (KeyError, TypeError, ValueError):
+                return None
+        obj = metrics.get("objective")
+        return None if obj is None else float(obj)
 
 
 class SpecProblem(POPProblem):

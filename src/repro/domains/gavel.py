@@ -58,6 +58,9 @@ SPEC = register(DomainSpec(
     problem=_problem,
     entity_ids=lambda inst: inst.job_ids,
     evaluate=_evaluate,
+    # the SLO tuner's quality scalar (repro.tuning): the paper's headline
+    # objective for this domain
+    quality=lambda m: m["mean_norm_throughput"],
     # the scheduler's historical operating point: stratified splits, POP
     # only once the fleet has >= 8 jobs per sub-problem
     default_solve=SolveConfig(k=8, strategy="stratified", min_per_sub=8),

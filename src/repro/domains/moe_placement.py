@@ -255,6 +255,10 @@ SPEC = register(DomainSpec(
     entity_ids=lambda inst: inst.ids,
     round=_round,
     evaluate=_evaluate,
+    # the SLO tuner's quality scalar (repro.tuning): served gate load —
+    # strictly positive, unlike the movement-penalized objective, so
+    # relative quality ratios stay meaningful
+    quality=lambda m: m["served"],
     # degradation-ladder fallback (defined below, resolved at call time)
     greedy=lambda inst: greedy_placement(inst),
     default_solve=SolveConfig(k=4, strategy="stratified", min_per_sub=8),

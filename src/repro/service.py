@@ -82,6 +82,8 @@ from .core.config import ExecConfig, SolveConfig
 from .core.pdhg import SolveResult
 from .core.plan import PopPlan
 from .domains import DomainSpec, StepOutcome, registry as registry_mod
+from .tuning import (OnlineTuner, SLOTarget, TuningProfile,
+                     check_profile, launch_defaults, load_profile)
 
 __all__ = ["Allocation", "DispatchConfig", "MicroBatchDispatcher",
            "PopService", "PopSession"]
@@ -175,6 +177,10 @@ def _zeros() -> dict:
             "degraded_steps": 0, "recovered_steps": 0, "fallback_steps": 0,
             "quarantined_lanes": 0, "faults": 0,
             "checkpoint_restores": 0, "checkpoint_failures": 0,
+            # SLO auto-tuning counters (docs/TUNING.md): steps whose
+            # measured latency/quality breached the session's SLOTarget,
+            # and config moves the online tuner made in response
+            "slo_violations": 0, "retunes": 0,
             # resolved step-engine observability: engine name -> steps
             # that actually ran it ("auto" already resolved)
             "engines": {}}
@@ -484,12 +490,21 @@ class PopSession:
     """
 
     def __init__(self, service: "PopService", tenant: str, spec: DomainSpec,
-                 solve_cfg: SolveConfig, exec_cfg: ExecConfig):
+                 solve_cfg: SolveConfig, exec_cfg: ExecConfig,
+                 slo: Optional[SLOTarget] = None,
+                 tuner: Optional[OnlineTuner] = None):
         self.service = service
         self.tenant = tenant
         self.spec = spec
         self.solve_cfg = solve_cfg
         self.exec_cfg = exec_cfg
+        # the SLO contract + online tuner (None = untuned; the fault-free
+        # untuned path is byte-identical to pre-tuning behavior).  The
+        # tuner retunes by REPLACING solve_cfg between steps; the change
+        # flows through prepare_instance's repair/remap path so warm
+        # state survives (docs/TUNING.md)
+        self.slo = slo
+        self._tuner = tuner
         self.steps = 0
         self.last: Optional[Allocation] = None
         self.stats = _zeros()
@@ -589,6 +604,8 @@ class PopSession:
                 alloc = self._step_generic(instance, deadline_s, t0)
             self.steps += 1
             self._last_wall = time.perf_counter() - t0
+            if self._tuner is not None and alloc.status != "fallback":
+                self._observe_tuned(alloc)
             _tally(self.stats, alloc)
             with self.service._lock:
                 _tally(self.service._stats, alloc)
@@ -652,6 +669,12 @@ class PopSession:
         spec = self.spec
         problem = spec.make_problem(instance)
         eids = spec.ids_of(instance)
+        if self._tuner is not None:
+            # sessions created without an instance plan on first step
+            cfg = self._tuner.ensure_planned(problem.n_entities,
+                                             self.solve_cfg)
+            if cfg is not None:
+                self.solve_cfg = cfg
         k = self.solve_cfg.k_for(problem.n_entities)
         if k > 1:
             return self._step_pop(instance, problem, eids, k, deadline_s, t0)
@@ -863,6 +886,24 @@ class PopSession:
         with self.service._lock:
             self.service._stats["quarantined_lanes"] += n
 
+    # ------------------------------------------------- SLO online refiner --
+    def _observe_tuned(self, alloc: Allocation) -> None:
+        """Feed one fault-free step into the session's OnlineTuner; count
+        SLO violations and apply a retuned SolveConfig for the NEXT step
+        (this step's allocation is already final).  Called under the
+        session lock."""
+        quality = self.spec.quality_of(alloc.metrics)
+        ev = self._tuner.observe(alloc.k, alloc.solve_time_s, quality)
+        if ev.violation is not None:
+            self.stats["slo_violations"] += 1
+            with self.service._lock:
+                self.service._stats["slo_violations"] += 1
+        if ev.new_solve is not None and ev.new_solve != self.solve_cfg:
+            self.solve_cfg = ev.new_solve
+            self.stats["retunes"] += 1
+            with self.service._lock:
+                self.service._stats["retunes"] += 1
+
     def _fallback(self, instance, faults: list, t0: float,
                   problem=None) -> Allocation:
         """The ladder's last rung: repeat the previous allocation, else ask
@@ -1066,13 +1107,26 @@ class PopService:
                  exec: Optional[ExecConfig] = None, *,
                  dispatch: Union[bool, DispatchConfig, None] = None,
                  max_resident: Optional[int] = None,
-                 rate_cache_size: int = RATE_CACHE_SIZE):
+                 rate_cache_size: int = RATE_CACHE_SIZE,
+                 profile: Union[TuningProfile, str, None]
+                 = None):
         # None means "not set" (domain defaults win); an explicit config —
         # even one equal to the library default — overrides them
         self._service_solve = solve
         self._service_exec = exec
         self.solve_cfg = solve or SolveConfig()
         self.exec_cfg = exec or ExecConfig()
+        # the measured TuningProfile (docs/TUNING.md): validated here
+        # (version + digest seal), it feeds session(slo=...) planning,
+        # installs measured backend="auto" thresholds, and sizes
+        # DispatchConfig defaults from the launch-cost line
+        if profile is not None and not isinstance(profile,
+                                                  TuningProfile):
+            profile = load_profile(profile)
+        if profile is not None:
+            check_profile(profile)
+            backends_mod.install_tuned_thresholds(profile.backend_thresholds)
+        self.profile = profile
         self._lock = threading.RLock()
         self._sessions: Dict[str, PopSession] = {}
         # tenant -> None, oldest-stepped first: the page-out victim order
@@ -1091,7 +1145,15 @@ class PopService:
         self.max_resident = (None if max_resident is None
                              else max(int(max_resident), 1))
         if dispatch:
-            cfg = dispatch if isinstance(dispatch, DispatchConfig) else None
+            if isinstance(dispatch, DispatchConfig):
+                cfg = dispatch
+            else:
+                # dispatch=True with a profile: batching window + lane cap
+                # from the measured launch-cost line instead of the
+                # hard-coded defaults
+                tuned = (launch_defaults(profile)
+                         if profile is not None else None)
+                cfg = DispatchConfig(**tuned) if tuned else None
             self.dispatcher: Optional[MicroBatchDispatcher] = \
                 MicroBatchDispatcher(cfg)
         else:
@@ -1140,7 +1202,8 @@ class PopService:
     def session(self, tenant: str, instance: Any = None, *,
                 domain: Optional[str] = None,
                 solve: Optional[SolveConfig] = None,
-                exec: Optional[ExecConfig] = None) -> PopSession:
+                exec: Optional[ExecConfig] = None,
+                slo: Optional[SLOTarget] = None) -> PopSession:
         """The session for ``tenant``, created on first use.
 
         The domain comes from ``domain=`` (a registry name) or is inferred
@@ -1152,10 +1215,20 @@ class PopService:
         creation); asking for the same tenant with a DIFFERENT domain is
         an error — tenants are per-domain state.
 
+        ``slo=`` (an :class:`repro.tuning.SLOTarget`) makes the session
+        **auto-tuned**: the service's measured ``profile=`` plans the
+        initial ``SolveConfig`` for the instance (``solve=`` then only
+        sets the strategy/seed baseline the planner starts from) and an
+        online refiner re-plans on violated or newly-slack SLOs
+        (docs/TUNING.md).  The SLO is pinned like the configs.
+
         A tenant whose session was paged out to host memory (see
         ``max_resident=``) is restored transparently here: same warm
         state, same step counter — callers cannot tell it was ever cold
         (``stats()["paged_in"]`` can)."""
+        if slo is not None and not isinstance(slo, SLOTarget):
+            raise TypeError(f"slo= takes a repro.tuning.SLOTarget, got "
+                            f"{type(slo).__name__}")
         with self._lock:
             sess = self._sessions.get(tenant)
             if sess is None and tenant in self._pager:
@@ -1165,10 +1238,20 @@ class PopService:
             if sess is not None:
                 # configs are pinned at creation: explicitly asking for a
                 # DIFFERENT one must not be silently ignored
-                if solve is not None and solve != sess.solve_cfg:
+                if slo is not None and slo != sess.slo:
+                    raise ValueError(
+                        f"tenant {tenant!r} session is pinned to SLO "
+                        f"{sess.slo}; end_session() it to re-create with "
+                        f"{slo} (the SLO is set at session creation)")
+                # a tuned session's solve_cfg drifts by design: the pin to
+                # compare against is the baseline the planner started from
+                pinned_solve = (sess._tuner.base_solve
+                                if sess._tuner is not None
+                                else sess.solve_cfg)
+                if solve is not None and solve != pinned_solve:
                     raise ValueError(
                         f"tenant {tenant!r} session is pinned to "
-                        f"{sess.solve_cfg}; end_session() it to re-create "
+                        f"{pinned_solve}; end_session() it to re-create "
                         f"with {solve} (configs are set at session creation)")
                 if exec is not None and exec != sess.exec_cfg:
                     raise ValueError(
@@ -1196,10 +1279,19 @@ class PopService:
                         f"session; one tenant cannot switch to {spec.name!r} "
                         "(sessions are per-domain warm state)")
                 return sess
-            sess = PopSession(
-                self, tenant, spec,
-                solve or self._service_solve or spec.default_solve,
-                exec or self._service_exec or spec.default_exec)
+            solve_cfg = solve or self._service_solve or spec.default_solve
+            exec_cfg = exec or self._service_exec or spec.default_exec
+            tuner = None
+            if slo is not None:
+                tuner = OnlineTuner(self.profile, spec.name,
+                                               slo, solve_cfg, exec_cfg)
+                if instance is not None and spec.step_override is None:
+                    n = spec.make_problem(instance).n_entities
+                    solve_cfg = tuner.plan_initial(n)
+                # no instance yet: the first generic step plans
+                # (ensure_planned) once it knows the entity count
+            sess = PopSession(self, tenant, spec, solve_cfg, exec_cfg,
+                              slo=slo, tuner=tuner)
             self._sessions[tenant] = sess
             self._lru[tenant] = None
         self._maybe_evict(keep=tenant)
@@ -1477,7 +1569,9 @@ class PopService:
         aggregate solve time, mean warm fraction, per-engine step counts
         (``engines``: the resolved engine that actually ran each step),
         and the fault-tolerance counters (degraded/recovered/fallback
-        steps, quarantined lanes, checkpoint restore outcomes).
+        steps, quarantined lanes, checkpoint restore outcomes), plus the
+        SLO auto-tuning counters (``slo_violations`` / ``retunes`` —
+        docs/TUNING.md).
 
         Fleet-scale additions: ``resident_sessions`` / ``paged_tenants``
         / ``paged_bytes`` (the paging tier), ``paged_out`` / ``paged_in``

@@ -28,6 +28,7 @@ CASES = [
     ("registry-contract", "registry_bad.py", "registry_good.py", 3),
     ("config-hashability", "confighash_bad.py", "confighash_good.py", 3),
     ("silent-except", "silent_except_bad.py", "silent_except_good.py", 3),
+    ("profile-staleness", "profile_bad.py", "profile_good.py", 3),
 ]
 
 

@@ -1,0 +1,318 @@
+"""The SLO auto-tuner (repro.tuning + the service integration).
+
+Pins the planner against the committed fixture profile (cluster
+scheduling's flat curve picks a LARGE k, traffic's steep curve a SMALL k
+at the same 2% SLO — the paper's point that no static default serves
+both), the artifact seal (version/digest/platform gates), replication
+escalation before quality surrender, the online refiner's retune flow
+(warm state survives a mid-session k change via plan repair), and the
+``slo_violations``/``retunes`` counters in ``service.stats()``."""
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import ExecConfig, SolveConfig
+from repro.domains import GavelInstance
+from repro.problems.cluster_scheduling import make_cluster_workload
+from repro.problems.traffic_engineering import (TrafficProblem,
+                                                k_shortest_paths,
+                                                make_demands, make_topology)
+from repro.service import PopService
+from repro.tuning import (DomainCurves, OnlineTuner, ProfileError, SLOTarget,
+                          check_profile, latency_at, launch_defaults,
+                          load_profile, plan_for_slo, profile_digest,
+                          quality_loss_at, save_profile)
+
+FIXTURE = Path(__file__).resolve().parent / "fixtures" / "tuning" / \
+    "profile_fixture.json"
+
+KW = dict(max_iters=250, tol_primal=1e-4, tol_gap=1e-4)
+
+
+def _traffic(n=24, seed=0, scale=1.0):
+    topo = make_topology(20, 40, seed=seed)
+    pairs, dem = make_demands(topo, n, seed=seed)
+    pe = k_shortest_paths(topo, pairs, n_paths=2, max_len=10, seed=seed)
+    return TrafficProblem(topo, pairs, dem * scale, pe)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return check_profile(load_profile(FIXTURE))
+
+
+# ---------------------------------------------------------------------------
+# the SLO contract
+# ---------------------------------------------------------------------------
+
+class TestSLOTarget:
+    def test_frozen_hashable_validated(self):
+        a = SLOTarget(max_quality_loss=0.02, step_deadline_s=1.5)
+        b = SLOTarget(max_quality_loss=0.02, step_deadline_s=1.5)
+        assert a == b and hash(a) == hash(b)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            a.max_quality_loss = 0.5
+
+    @pytest.mark.parametrize("kw", [
+        dict(max_quality_loss=-0.1),
+        dict(max_quality_loss=1.0),
+        dict(step_deadline_s=0.0),
+        dict(step_deadline_s=-2.0),
+    ])
+    def test_rejects_out_of_range(self, kw):
+        with pytest.raises(ValueError):
+            SLOTarget(**kw)
+
+
+# ---------------------------------------------------------------------------
+# the artifact seal
+# ---------------------------------------------------------------------------
+
+class TestProfileSeal:
+    def test_fixture_is_sealed(self, profile):
+        assert profile.digest == profile_digest(profile)
+        assert {"gavel", "traffic"} <= set(profile.domains)
+
+    def test_digest_rejects_tampering(self, tmp_path):
+        obj = json.loads(FIXTURE.read_text())
+        obj["domains"]["traffic"]["n_exponent"] = 9.9   # hand-edit
+        p = tmp_path / "edited.json"
+        p.write_text(json.dumps(obj))
+        with pytest.raises(ProfileError, match="digest mismatch"):
+            check_profile(load_profile(p))
+
+    def test_version_gate(self, tmp_path, profile):
+        stale = dataclasses.replace(profile, version=0)
+        p = save_profile(stale, tmp_path / "stale.json")  # reseals digest
+        with pytest.raises(ProfileError, match="version"):
+            check_profile(load_profile(p))
+
+    def test_platform_gate(self, profile):
+        with pytest.raises(ProfileError, match="measured on"):
+            check_profile(profile, platform="tpu9000")
+        assert check_profile(profile, platform="cpu") is profile
+
+    def test_load_does_not_validate(self, tmp_path):
+        obj = json.loads(FIXTURE.read_text())
+        obj["digest"] = "sha256:bogus"
+        p = tmp_path / "bogus.json"
+        p.write_text(json.dumps(obj))
+        prof = load_profile(p)               # parse-only door
+        with pytest.raises(ProfileError):
+            check_profile(prof)              # popcheck: disable=profile-staleness
+
+    def test_unreadable_raises_profile_error(self, tmp_path):
+        with pytest.raises(ProfileError):
+            load_profile(tmp_path / "nope.json")   # popcheck: disable=profile-staleness
+
+
+# ---------------------------------------------------------------------------
+# the offline planner: measured curves -> cheapest config meeting the SLO
+# ---------------------------------------------------------------------------
+
+class TestPlanner:
+    def test_gavel_flat_curve_picks_large_k(self, profile):
+        # ISSUE acceptance: cluster scheduling at a 2% SLO -> k >= 16
+        plan = plan_for_slo(profile, "gavel", 512, SLOTarget(0.02))
+        assert plan.solve.k >= 16
+        assert plan.predicted_quality_loss <= 0.02
+        assert plan.source == "curves"
+
+    def test_traffic_steep_curve_picks_small_k(self, profile):
+        # same SLO, opposite answer: traffic loses 20% already at k=16
+        plan = plan_for_slo(profile, "traffic", 400, SLOTarget(0.02))
+        assert plan.solve.k <= 4
+        assert plan.predicted_quality_loss <= 0.02
+
+    def test_deadline_escalates_replication_before_quality(self, profile):
+        # a deadline no small-k config can meet: the planner reaches for
+        # a replication row at large k (granular-POP) instead of just
+        # surrendering quality
+        slo = SLOTarget(max_quality_loss=0.05, step_deadline_s=20.0)
+        plan = plan_for_slo(profile, "traffic", 400, slo)
+        assert plan.source in ("replicated", "deadline-limited")
+        if plan.source == "replicated":
+            assert plan.solve.replicate_threshold is not None
+            assert plan.predicted_quality_loss <= 0.05
+
+    def test_latency_scales_with_n(self, profile):
+        curves = profile.domains["gavel"]
+        t_probe = latency_at(curves, 8, curves.probe_n)
+        t_big = latency_at(curves, 8, curves.probe_n * 4)
+        assert t_big > t_probe * 2       # superlinear exponent (1.4)
+
+    def test_quality_loss_interpolates(self, profile):
+        curves = profile.domains["traffic"]
+        # between measured k=4 (4.9% loss) and k=16 (20% loss)
+        loss8 = quality_loss_at(curves, 8)
+        assert 0.049 < loss8 < 0.20
+
+    def test_base_solve_fields_survive_planning(self, profile):
+        base = SolveConfig(k=8, strategy="stratified", seed=7)
+        plan = plan_for_slo(profile, "gavel", 512, SLOTarget(0.02),
+                            base_solve=base)
+        assert plan.solve.strategy == "stratified"
+        assert plan.solve.seed == 7
+
+    def test_unknown_domain_keeps_base(self, profile):
+        base = SolveConfig(k=8)
+        plan = plan_for_slo(profile, "warehouse", 100, SLOTarget(0.02),
+                            base_solve=base)
+        assert plan.solve == base
+        assert plan.source == "no-curves"
+
+    def test_launch_defaults_from_cost_line(self, profile):
+        d = launch_defaults(profile)
+        assert d is not None
+        assert 0.5 <= d["max_wait_ms"] <= 20.0
+        assert d["max_lanes"] >= 8
+        # pow2 lane cap (jit cache friendliness)
+        assert d["max_lanes"] & (d["max_lanes"] - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# the online refiner
+# ---------------------------------------------------------------------------
+
+class TestOnlineTuner:
+    def _tuner(self, profile, slo, base=None, domain="gavel"):
+        return OnlineTuner(profile, domain, slo,
+                           base or SolveConfig(k=8), ExecConfig())
+
+    def test_latency_violation_doubles_k_after_patience(self, profile):
+        t = self._tuner(None, SLOTarget(0.5, step_deadline_s=0.01))
+        t.plan_initial(256)
+        ev1 = t.observe(8, 0.5, 1.0)
+        assert ev1.violation == "latency" and ev1.new_solve is None
+        ev2 = t.observe(8, 0.5, 1.0)     # patience=2 reached
+        assert ev2.new_solve is not None and ev2.new_solve.k == 16
+
+    def test_cooldown_holds_after_move(self, profile):
+        t = self._tuner(None, SLOTarget(0.5, step_deadline_s=0.01))
+        t.plan_initial(256)
+        t.observe(8, 0.5, 1.0)
+        assert t.observe(8, 0.5, 1.0).new_solve.k == 16
+        # cooldown: violations keep being recorded but no immediate
+        # second move at the new operating point
+        for _ in range(2):
+            assert t.observe(16, 0.5, 1.0).new_solve is None
+        assert t.observe(16, 0.5, 1.0).new_solve is not None
+
+    def test_quality_violation_escalates_replication_first(self, profile):
+        t = self._tuner(profile, SLOTarget(max_quality_loss=0.02),
+                        base=SolveConfig(k=16), domain="gavel")
+        t.plan_initial(512)
+        t.solve_cfg = SolveConfig(k=16)          # pin the operating point
+        t.observe(8, 0.1, 1.00)                  # reference at smaller k
+        t.observe(16, 0.1, 0.90)                 # 10% loss vs k=8
+        ev = t.observe(16, 0.1, 0.90)
+        assert ev.violation == "quality"
+        assert ev.new_solve is not None
+        # profile has replication rows at k=16 meeting 2%: escalate there
+        assert ev.new_solve.k == 16
+        assert ev.new_solve.replicate_threshold is not None
+
+    def test_quality_violation_without_rows_halves_k(self):
+        t = self._tuner(None, SLOTarget(max_quality_loss=0.02))
+        t.plan_initial(256)
+        t.observe(4, 0.1, 1.00)
+        t.observe(8, 0.1, 0.80)
+        ev = t.observe(8, 0.1, 0.80)
+        assert ev.new_solve is not None and ev.new_solve.k == 4
+        assert ev.new_solve.replicate_threshold is None
+
+    def test_min_per_sub_clamped_move_is_skipped(self):
+        # gavel's min_per_sub=8 voids k=8 -> 16 at n=96 (k_for caps both
+        # at 12): the tuner must not churn configs for an unchanged split
+        base = SolveConfig(k=12, min_per_sub=8)
+        t = self._tuner(None, SLOTarget(0.5, step_deadline_s=0.01),
+                        base=base)
+        t.plan_initial(96)
+        t.observe(12, 0.5, 1.0)
+        ev = t.observe(12, 0.5, 1.0)
+        assert ev.violation == "latency" and ev.new_solve is None
+
+
+# ---------------------------------------------------------------------------
+# service integration: session(slo=...), counters, retune-under-churn
+# ---------------------------------------------------------------------------
+
+class TestServiceIntegration:
+    def test_profile_plans_session_and_counts_nothing_when_met(self, profile):
+        svc = PopService(exec=ExecConfig(solver_kw=KW), profile=profile)
+        wl = make_cluster_workload(96, seed=0)
+        sess = svc.session("t", GavelInstance(wl), slo=SLOTarget(0.02))
+        # gavel's flat curve -> large k (clamped by n/min_per_sub)
+        assert sess.solve_cfg.k >= 16
+        a = sess.step(GavelInstance(wl))
+        assert a.status == "ok"
+        st = svc.stats()
+        assert st["slo_violations"] == 0
+        assert st["retunes"] == 0
+
+    def test_str_profile_path_is_loaded_and_checked(self):
+        svc = PopService(exec=ExecConfig(solver_kw=KW), profile=str(FIXTURE))
+        assert svc.profile is not None
+        assert "gavel" in svc.profile.domains
+
+    def test_tampered_profile_rejected_at_service_door(self, tmp_path):
+        obj = json.loads(FIXTURE.read_text())
+        obj["version"] = 99
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps(obj))
+        with pytest.raises(ProfileError):
+            PopService(profile=str(p))
+
+    def test_slo_requires_slotarget_type(self):
+        svc = PopService(exec=ExecConfig(solver_kw=KW))
+        with pytest.raises(TypeError, match="SLOTarget"):
+            svc.session("t", _traffic(), slo=0.02)
+
+    def test_reentry_pins_slo(self, profile):
+        svc = PopService(exec=ExecConfig(solver_kw=KW), profile=profile)
+        prob = _traffic()
+        svc.session("t", prob, slo=SLOTarget(0.02))
+        svc.session("t", prob, slo=SLOTarget(0.02))        # same: fine
+        with pytest.raises(ValueError, match="SLO"):
+            svc.session("t", prob, slo=SLOTarget(0.10))
+
+    def test_retune_under_churn_keeps_warm_state(self):
+        # an impossible deadline forces a latency retune mid-session;
+        # the k change must ride the repair path (warm_fraction > 0),
+        # never a cold start — then survive entity churn on top
+        svc = PopService(exec=ExecConfig(solver_kw=KW))
+        wl = make_cluster_workload(96, seed=0)
+        ids = np.arange(96)
+        slo = SLOTarget(max_quality_loss=0.5, step_deadline_s=1e-4)
+        sess = svc.session("t", domain="gavel", slo=slo)
+        ks = []
+        for _ in range(4):
+            a = sess.step(GavelInstance(wl, job_ids=ids))
+            ks.append(a.k)
+            if a.plan_cache != "miss":
+                assert a.warm_fraction is not None
+                assert a.warm_fraction > 0.0
+        assert ks[-1] > ks[0]            # the deadline forced k upward
+        # churn 10 jobs at the retuned k: repair, not rebuild
+        wl2 = make_cluster_workload(96, seed=1)
+        ids2 = ids.copy()
+        ids2[:10] = np.arange(1000, 1010)
+        a = sess.step(GavelInstance(wl2, job_ids=ids2))
+        assert a.plan_cache in ("repair", "hit")
+        assert a.warm_fraction is not None and a.warm_fraction > 0.0
+        st = svc.stats()
+        assert st["slo_violations"] > 0
+        assert st["retunes"] >= 1
+        assert sess.stats["retunes"] >= 1
+
+    def test_untuned_sessions_never_touch_counters(self):
+        svc = PopService(exec=ExecConfig(solver_kw=KW))
+        sess = svc.session("t", _traffic())
+        sess.step(_traffic())
+        st = svc.stats()
+        assert st["slo_violations"] == 0 and st["retunes"] == 0
+        assert sess.slo is None
